@@ -1,0 +1,221 @@
+"""Benchmarks mirroring the paper's claims (one function per claim).
+
+The paper has no numeric tables — its results are theorems. Each benchmark
+measures the empirical quantity the theorem bounds, on instances where the
+bound is checkable, and reports ``name,us_per_call,derived`` rows (derived =
+the measured ratio/round-count the claim is about).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import (
+    algorithm1,
+    brute_force_opt,
+    build_graph,
+    clique_clustering,
+    clustering_cost,
+    degree_capped_pivot,
+    dependency_depth,
+    greedy_mis_parallel,
+    lemma25_transform,
+    matching_size,
+    max_matching_forest,
+    maximal_matching_parallel,
+    augmenting_matching_parallel,
+    clustering_from_matching,
+    pivot,
+    random_permutation_ranks,
+)
+from repro.core.graph import barbell, gnp, random_arboric, random_forest
+from repro.core.phases import algorithm2_phase
+from repro.core.mis import MISState
+import jax.numpy as jnp
+
+Row = Tuple[str, float, float]
+
+
+def _timed(fn: Callable, reps: int = 1) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn()
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def bench_pivot_3approx() -> List[Row]:
+    """Cor 28: E[cost(PIVOT ∘ degree-cap)] ≤ 3·OPT (brute-forceable n)."""
+    rng = np.random.default_rng(0)
+    rows = []
+    ratios = []
+    us = 0.0
+    for trial in range(4):
+        n = 8
+        g = build_graph(n, gnp(n, 0.45, rng))
+        opt, _ = brute_force_opt(g)
+        costs = []
+        for s in range(50):
+            dt, res = _timed(lambda s=s: pivot(
+                g, jax.random.PRNGKey(trial * 100 + s)))
+            us += dt
+            costs.append(clustering_cost(g, res.labels))
+        ratios.append(np.mean(costs) / max(opt, 1))
+    rows.append(("pivot_mean_cost_over_opt", us / 200, float(np.mean(ratios))))
+    return rows
+
+
+def bench_degree_cap() -> List[Row]:
+    """Thm 26: capped PIVOT stays within max{1+ε,3}·OPT; high-deg fraction."""
+    rng = np.random.default_rng(1)
+    rows = []
+    for lam in (1, 2):
+        n = 9
+        edges, _ = random_arboric(n, lam, rng)
+        g = build_graph(n, edges)
+        opt, _ = brute_force_opt(g)
+        costs, us = [], 0.0
+        for s in range(40):
+            dt, res = _timed(lambda s=s: degree_capped_pivot(
+                g, lam=lam, key=jax.random.PRNGKey(s), eps=2.0))
+            us += dt
+            costs.append(clustering_cost(g, res.labels))
+        rows.append((f"thm26_ratio_lam{lam}", us / 40,
+                     float(np.mean(costs) / max(opt, 1))))
+    return rows
+
+
+def bench_mis_rounds_scaling() -> List[Row]:
+    """Thm 5/24: dependency depth grows ~log n; Algorithm 1 MPC rounds."""
+    rng = np.random.default_rng(2)
+    rows = []
+    for n in (256, 1024, 4096):
+        edges, _ = random_arboric(n, 3, rng)
+        g = build_graph(n, edges)
+        depths, us = [], 0.0
+        for s in range(3):
+            ranks = random_permutation_ranks(n, jax.random.PRNGKey(s))
+            dt, d = _timed(lambda: dependency_depth(g, ranks))
+            us += dt
+            depths.append(d)
+        rows.append((f"greedy_mis_depth_n{n}", us / 3, float(np.mean(depths))))
+    # Algorithm 1 charged rounds, both models
+    edges, _ = random_arboric(2048, 3, rng)
+    g = build_graph(2048, edges)
+    for sub in ("alg2", "alg3"):
+        dt, out = _timed(lambda: algorithm1(
+            g, key=jax.random.PRNGKey(0), subroutine=sub,
+            measure_components=(sub == "alg2")))
+        _, _, ledger = out
+        rows.append((f"algorithm1_{sub}_mpc_rounds", dt, ledger.total_rounds))
+        if sub == "alg2":
+            rows.append((f"algorithm1_{sub}_max_component", dt,
+                         float(ledger.summary()["max_component"])))
+    return rows
+
+
+def bench_lemma22() -> List[Row]:
+    """Lemma 22: max degree after prefix t is ≤ c·n log n / t."""
+    from repro.core import remaining_max_degree_after_prefix
+    rng = np.random.default_rng(3)
+    n = 4096
+    edges, _ = random_arboric(n, 4, rng)
+    g = build_graph(n, edges)
+    ranks = random_permutation_ranks(n, jax.random.PRNGKey(1))
+    rows = []
+    for t in (n // 16, n // 4, n // 2):
+        dt, d = _timed(lambda t=t: remaining_max_degree_after_prefix(
+            g, ranks, t))
+        bound = n * np.log(n) / t
+        rows.append((f"lemma22_t{t}_deg_over_bound", dt, d / bound))
+    return rows
+
+
+def bench_lemma25() -> List[Row]:
+    """Lemma 25: transform reaches ≤4λ−2 clusters at no cost increase."""
+    rng = np.random.default_rng(4)
+    rows = []
+    for lam in (1, 2, 4):
+        n = 60
+        edges, _ = random_arboric(n, lam, rng)
+        g = build_graph(n, edges)
+        labels = rng.integers(0, 5, n).astype(np.int32)
+        before = clustering_cost(g, labels)
+        dt, lab2 = _timed(lambda: lemma25_transform(g, labels, lam))
+        after = clustering_cost(g, lab2)
+        maxc = int(np.bincount(lab2).max())
+        assert maxc <= 4 * lam - 2 and after <= before
+        rows.append((f"lemma25_lam{lam}_cost_delta", dt,
+                     float(after - before)))
+    return rows
+
+
+def bench_forest() -> List[Row]:
+    """Cor 27/31 + Lemma 29: matching-based clustering on forests."""
+    rng = np.random.default_rng(5)
+    n = 1000
+    g = build_graph(n, random_forest(n, rng))
+    m_star = matching_size(max_matching_forest(g))
+    opt_cost = g.m - m_star
+    rows = []
+    dt, out = _timed(lambda: maximal_matching_parallel(
+        g, jax.random.PRNGKey(0)))
+    partner, rounds = out
+    m = matching_size(partner)
+    cost = clustering_cost(g, clustering_from_matching(np.asarray(partner)))
+    rows.append(("forest_maximal_rounds", dt, float(rounds)))
+    rows.append(("forest_maximal_cost_over_opt", dt, cost / max(opt_cost, 1)))
+    dt, out = _timed(lambda: augmenting_matching_parallel(
+        g, jax.random.PRNGKey(0), passes=6))
+    partner2, _ = out
+    cost2 = clustering_cost(g, clustering_from_matching(partner2))
+    rows.append(("forest_augmented_cost_over_opt", dt,
+                 cost2 / max(opt_cost, 1)))
+    return rows
+
+
+def bench_cliques_lambda2() -> List[Row]:
+    """Cor 32 + Rmk 33: λ²-algorithm; barbell attains Θ(λ²)."""
+    rows = []
+    for lam in (4, 8, 16):
+        n, e = barbell(lam)
+        g = build_graph(n, e)
+        dt, labels = _timed(lambda: np.asarray(clique_clustering(g)))
+        cost = clustering_cost(g, labels)
+        rows.append((f"cor32_barbell_lam{lam}_cost_over_opt", dt,
+                     float(cost)))  # OPT = 1
+    return rows
+
+
+def bench_shattering_lemma18() -> List[Row]:
+    """Lemma 18: chunk-graph components stay O(log n) in Algorithm 2."""
+    rng = np.random.default_rng(6)
+    n = 4096
+    edges, _ = random_arboric(n, 3, rng)
+    g = build_graph(n, edges)
+    ranks = random_permutation_ranks(n, jax.random.PRNGKey(2))
+    state = MISState(status=jnp.zeros((n,), jnp.int32), rounds=jnp.int32(0))
+    dt, out = _timed(lambda: algorithm2_phase(
+        g, ranks, state, 0, n, max(1, g.max_degree()),
+        measure_components=True))
+    _, _, _, max_comp, chunks = out
+    rows = [("lemma18_max_component_over_logn", dt,
+             max_comp / np.log(n)),
+            ("lemma18_chunks", dt, float(chunks))]
+    return rows
+
+
+ALL = [
+    bench_pivot_3approx,
+    bench_degree_cap,
+    bench_mis_rounds_scaling,
+    bench_lemma22,
+    bench_lemma25,
+    bench_forest,
+    bench_cliques_lambda2,
+    bench_shattering_lemma18,
+]

@@ -1,0 +1,137 @@
+"""System-level benchmarks: kernels, dedup pipeline, distributed engine."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, float]
+
+
+def _timeit(fn, reps=3, warmup=1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_neighbor_min_kernel() -> List[Row]:
+    """Pallas neighbor-min (interpret) vs XLA segment-min oracle.
+
+    On CPU the interpret-mode kernel is NOT the perf target (TPU is); the
+    derived column reports agreement (0.0 = bit-identical), the us column
+    the oracle's wall time (the production CPU path).
+    """
+    from repro.core import build_graph, random_permutation_ranks
+    from repro.core.graph import random_arboric
+    from repro.core.mis import neighbor_min_ranks
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in (1000, 10000):
+        edges, _ = random_arboric(n, 4, rng)
+        g = build_graph(n, edges)
+        ranks = random_permutation_ranks(n, jax.random.PRNGKey(0))
+        active = jnp.ones((n,), bool)
+        us = _timeit(lambda: neighbor_min_ranks(g, ranks, active))
+        kern = ops.neighbor_min(g, ranks, active)
+        oracle = neighbor_min_ranks(g, ranks, active)
+        diff = float(jnp.sum(jnp.abs(kern - oracle)))
+        rows.append((f"neighbor_min_oracle_n{n}", us, diff))
+    return rows
+
+
+def bench_attention_impls() -> List[Row]:
+    """Chunked-XLA flash vs naive attention (CPU wall time, small shape)."""
+    from repro.models.attention import _chunked_attention, _naive_attention
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, kh, g, hd = 1, 1024, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, s, kh, g, hd))
+    k = jax.random.normal(ks[1], (b, s, kh, hd))
+    v = jax.random.normal(ks[2], (b, s, kh, hd))
+    f_naive = jax.jit(lambda a, b, c: _naive_attention(a, b, c, True))
+    f_chunk = jax.jit(lambda a, b, c: _chunked_attention(
+        a, b, c, True, q_chunk=256, kv_chunk=256))
+    us_n = _timeit(lambda: f_naive(q, k, v))
+    us_c = _timeit(lambda: f_chunk(q, k, v))
+    err = float(jnp.max(jnp.abs(f_naive(q, k, v) - f_chunk(q, k, v))))
+    return [("attention_naive_1k", us_n, err),
+            ("attention_chunked_1k", us_c, us_n / max(us_c, 1e-9))]
+
+
+def bench_dedup_pipeline() -> List[Row]:
+    """End-to-end dedup: MinHash → similarity graph → Alg 4 clustering."""
+    from repro.data.dedup import dedup_corpus, dedup_quality
+    from repro.data.synthetic import synthetic_corpus
+
+    corpus = synthetic_corpus(n_docs=150, dup_fraction=0.4, mutate_p=0.05,
+                              seed=0)
+    t0 = time.perf_counter()
+    res = dedup_corpus(corpus, threshold=0.45)
+    us = (time.perf_counter() - t0) * 1e6
+    q = dedup_quality(res, corpus)
+    return [
+        ("dedup_pairs_recall", us, q["pairs_recall"]),
+        ("dedup_pairs_precision", us, q["pairs_precision"]),
+        ("dedup_kept_fraction", us, q["kept_fraction"]),
+    ]
+
+
+def bench_distributed_engine() -> List[Row]:
+    """Edge-sharded PIVOT: rounds + wall time on the available devices."""
+    from repro.core import (build_graph, distributed_pivot,
+                            random_permutation_ranks)
+    from repro.core.graph import random_arboric
+
+    rng = np.random.default_rng(1)
+    edges, _ = random_arboric(5000, 4, rng)
+    g = build_graph(5000, edges)
+    ranks = random_permutation_ranks(5000, jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    labels, in_mis, rounds = distributed_pivot(g, ranks)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("distributed_pivot_rounds_n5000", us, float(rounds))]
+
+
+def bench_train_step_smoke() -> List[Row]:
+    """One optimizer step wall time on the reduced qwen3 config (CPU)."""
+    from repro.configs import get_smoke
+    from repro.models import RunConfig, build_model
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_step import StepConfig, init_train_state, make_train_step
+
+    cfg = get_smoke("qwen3-8b")
+    m = build_model(cfg, rc=RunConfig(attn_impl="naive", loss_chunk=16),
+                    param_dtype=jnp.float32)
+    oc = OptConfig()
+    state = init_train_state(m, jax.random.PRNGKey(0), oc, StepConfig())
+    step = jax.jit(make_train_step(m, oc, StepConfig()))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0,
+                                     cfg.vocab_size),
+    }
+    state, metrics = step(state, batch)  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        state, metrics = step(state, batch)
+    jax.block_until_ready(metrics["loss"])
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    return [("train_step_smoke_qwen3", us, float(metrics["loss"]))]
+
+
+ALL = [
+    bench_neighbor_min_kernel,
+    bench_attention_impls,
+    bench_dedup_pipeline,
+    bench_distributed_engine,
+    bench_train_step_smoke,
+]

@@ -1,0 +1,72 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke(name)``.
+
+The ten assigned architectures (+ the 4-shape grid) live here; every id is
+selectable via ``--arch`` in the launch drivers.
+"""
+
+from __future__ import annotations
+
+from . import (
+    granite_3_2b,
+    grok_1_314b,
+    llama32_vision_90b,
+    olmoe_1b_7b,
+    qwen3_8b,
+    rwkv6_1_6b,
+    smollm_135m,
+    stablelm_12b,
+    whisper_base,
+    zamba2_2_7b,
+)
+from .base import SHAPES, ModelConfig, ShapeConfig, supports_shape
+
+_MODULES = {
+    "whisper-base": whisper_base,
+    "qwen3-8b": qwen3_8b,
+    "granite-3-2b": granite_3_2b,
+    "stablelm-12b": stablelm_12b,
+    "smollm-135m": smollm_135m,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "grok-1-314b": grok_1_314b,
+    "zamba2-2.7b": zamba2_2_7b,
+    "rwkv6-1.6b": rwkv6_1_6b,
+    "llama-3.2-vision-90b": llama32_vision_90b,
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_NAMES}")
+    return _MODULES[name].config()
+
+
+def get_smoke(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_NAMES}")
+    return _MODULES[name].smoke()
+
+
+def all_cells():
+    """Every (arch, shape) cell in the assignment grid (incl. skipped, with
+    reason)."""
+    cells = []
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        for shape in SHAPES.values():
+            ok, why = supports_shape(cfg, shape)
+            cells.append((name, shape.name, ok, why))
+    return cells
+
+
+__all__ = [
+    "ARCH_NAMES",
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "get_config",
+    "get_smoke",
+    "supports_shape",
+    "all_cells",
+]

@@ -1,0 +1,151 @@
+"""Architecture & shape configuration system.
+
+Every assigned architecture is a :class:`ModelConfig` in its own module
+(``repro/configs/<id>.py``) registered under its public id; ``--arch``
+selects it by name. ``smoke()`` on each module returns a reduced config of
+the same family for CPU tests. Shapes are global (:data:`SHAPES`) with
+per-arch applicability (see :func:`supports_shape`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    # MoE
+    num_experts: int = 0
+    experts_per_tok: int = 0
+    moe_d_ff: int = 0                 # per-expert hidden dim (olmoe: 1024)
+
+    # SSM / hybrid (zamba2-style)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    attn_every: int = 0               # shared attn block applied every k layers
+
+    # RWKV6
+    rwkv: bool = False
+    rwkv_head_dim: int = 64
+    rwkv_decay_lora: int = 64
+
+    # Encoder–decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0              # stub frontend output length (frames)
+
+    # VLM (llama-3.2-vision)
+    cross_attn_every: int = 0         # every k-th layer is gated cross-attn
+    num_image_tokens: int = 0         # stub patch-embedding length
+
+    # Numerics / scale policy
+    vocab_round: int = 256            # pad vocab so TP divides it
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, self.vocab_round)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.rwkv
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch run 500k-token decode? (SSM/hybrid/linear-attn)."""
+        return self.rwkv or self.ssm_state > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, f, v = self.d_model, self.d_ff, self.padded_vocab
+        hd = self.head_dim
+        n_q = self.num_heads * hd
+        n_kv = self.num_kv_heads * hd
+        total = v * d                       # embedding
+        if not self.tie_embeddings:
+            total += v * d                  # lm head
+
+        def attn_params():
+            return d * n_q + 2 * d * n_kv + n_q * d + (
+                2 * hd if self.qk_norm else 0)
+
+        def dense_mlp(ff):
+            return 3 * d * ff               # SwiGLU: wi, wg, wo
+
+        blocks = 0
+        if self.family == "encdec":
+            enc = self.encoder_layers * (attn_params() + dense_mlp(f) + 2 * d)
+            dec = self.num_layers * (2 * attn_params() + dense_mlp(f) + 3 * d)
+            blocks = enc + dec
+        elif self.family == "moe":
+            ff = self.moe_d_ff or f
+            per = attn_params() + d * self.num_experts + (
+                self.num_experts * 3 * d * ff) + 2 * d
+            blocks = self.num_layers * per
+        elif self.family == "ssm":            # rwkv6
+            per_tm = d * d * 4 + d * self.rwkv_decay_lora * 2 + 4 * d
+            per_cm = 2 * d * f + d * f * 0 + d * d  # k,v(r) proj
+            blocks = self.num_layers * (per_tm + per_cm + 2 * d)
+        elif self.family == "hybrid":         # zamba2
+            d_in = self.ssm_expand * d
+            heads = d_in // self.ssm_head_dim
+            per_mamba = d * (2 * d_in + 2 * self.ssm_state + heads) + (
+                d_in * d) + heads + d_in * 4 + 2 * d
+            shared_attn = attn_params() + dense_mlp(f) + 2 * d
+            n_attn = self.num_layers // max(1, self.attn_every)
+            blocks = self.num_layers * per_mamba + shared_attn  # weights shared
+            blocks += n_attn * 0
+        else:                                  # dense / vlm
+            per = attn_params() + dense_mlp(f) + 2 * d
+            blocks = self.num_layers * per
+            if self.cross_attn_every:
+                n_cross = self.num_layers // self.cross_attn_every
+                blocks += n_cross * (attn_params() + 2 * d + 1)
+        return total + blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic sequence mixing (see DESIGN.md §6)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch — 512k dense decode is "
+                       "quadratic; skipped per assignment")
+    return True, ""

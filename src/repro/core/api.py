@@ -1,0 +1,151 @@
+"""Public correlation-clustering API — the paper's algorithms, composed.
+
+``correlation_cluster`` is the single entry point used by the data-pipeline
+dedup stage and the standalone examples. Methods:
+
+* ``pivot``         — Corollary 28: degree-cap (Thm 26, ε) + PIVOT (3-approx
+                      in expectation). The paper's headline algorithm.
+* ``pivot_phased``  — same, inner engine = Algorithm 1 (phase/chunk
+                      scheduling with MPC round ledger).
+* ``pivot_raw``     — PIVOT without the degree cap (baseline comparator;
+                      this is what Chierichetti et al. simulate).
+* ``forest_exact``  — Corollary 27/31(1): maximum matching (λ=1 inputs).
+* ``forest_approx`` — Lemma 29/Cor 31(2,3): maximal matching + length-3
+                      augmentation passes.
+* ``cliques``       — Corollary 32: deterministic O(λ²), O(1) rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import forest as forest_mod
+from .arboricity import arboricity_bounds
+from .cliques import clique_clustering
+from .cost import clustering_cost
+from .degree_cap import degree_capped_pivot, degree_threshold
+from .dist import distributed_pivot, edge_shard_mesh
+from .graph import Graph, build_graph
+from .mis import random_permutation_ranks
+from .pivot import pivot
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    labels: np.ndarray
+    cost: int
+    method: str
+    info: dict
+
+
+def correlation_cluster(
+    g: Graph | np.ndarray,
+    n: Optional[int] = None,
+    method: str = "pivot",
+    eps: float = 2.0,
+    lam: Optional[int] = None,
+    key: Optional[jax.Array] = None,
+    distributed: bool = False,
+    mesh=None,
+    use_kernel: bool = False,
+) -> ClusterResult:
+    """Cluster a complete signed graph given its positive edges.
+
+    Args:
+      g: a :class:`Graph` or an (m, 2) positive edge array (then pass ``n``).
+      lam: arboricity of E⁺; estimated via degeneracy if omitted.
+      eps: Theorem 26 ε (ε=2 reproduces the paper's 3-approx threshold 12λ).
+      distributed: run the edge-sharded shard_map engine across the mesh.
+    """
+    if not isinstance(g, Graph):
+        if n is None:
+            raise ValueError("pass n with a raw edge array")
+        g = build_graph(n, g)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    info: dict = {}
+
+    if lam is None and method in ("pivot", "pivot_phased", "cliques"):
+        lo, hi = arboricity_bounds(g, exact=g.n <= 200_000)
+        lam = hi  # degeneracy upper bound; only moves the O(λ/ε) constant
+        info["lambda_estimate"] = (lo, hi)
+
+    if method in ("pivot", "pivot_phased"):
+        engine = "phased" if method == "pivot_phased" else "rounds"
+        if distributed:
+            thresh = degree_threshold(lam, eps)
+            high = np.asarray(g.deg) > thresh
+            ranks = random_permutation_ranks(g.n, key)
+            # Degree cap in the distributed engine: ineligible vertices get
+            # rank ∞ by exclusion — implemented by masking them as REMOVED
+            # up-front via a rank shift (they never win nor get captured).
+            labels, in_mis, rounds = _distributed_capped(
+                g, ranks, high, mesh=mesh)
+            info.update(depth=rounds, threshold=thresh,
+                        high_degree=int(high.sum()))
+        else:
+            res = degree_capped_pivot(g, lam=lam, key=key, eps=eps,
+                                      engine=engine, use_kernel=use_kernel)
+            labels = res.labels
+            info.update(
+                threshold=res.threshold,
+                high_degree=int(res.high_mask.sum()),
+                depth=res.inner.depth if res.inner else -1,
+            )
+            if res.inner and res.inner.ledger:
+                info["mpc_rounds"] = res.inner.ledger.total_rounds
+                info["ledger"] = res.inner.ledger.summary()
+    elif method == "pivot_raw":
+        if distributed:
+            ranks = random_permutation_ranks(g.n, key)
+            labels, _, rounds = distributed_pivot(g, ranks, mesh=mesh)
+            info["depth"] = rounds
+        else:
+            res = pivot(g, key, engine="rounds", use_kernel=use_kernel)
+            labels, info["depth"] = res.labels, res.depth
+    elif method == "forest_exact":
+        partner = forest_mod.max_matching_forest(g)
+        labels = forest_mod.clustering_from_matching(partner)
+        info["matching_size"] = forest_mod.matching_size(partner)
+    elif method == "forest_approx":
+        partner, rounds = forest_mod.augmenting_matching_parallel(g, key)
+        labels = forest_mod.clustering_from_matching(partner)
+        info.update(matching_size=forest_mod.matching_size(partner),
+                    rounds=rounds)
+    elif method == "cliques":
+        labels = np.asarray(clique_clustering(g))
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    return ClusterResult(
+        labels=np.asarray(labels),
+        cost=clustering_cost(g, labels),
+        method=method,
+        info=info,
+    )
+
+
+def _distributed_capped(g: Graph, ranks, high: np.ndarray, mesh=None):
+    """Degree-capped PIVOT on the distributed engine: drop edges incident to
+    high-degree vertices device-side, then run; high vertices singleton."""
+    n = g.n
+    highj = jnp.asarray(high)
+    src_ok = (g.src < n)
+    src_i = jnp.minimum(g.src, n - 1)
+    dst_i = jnp.minimum(g.dst, n - 1)
+    keep = src_ok & ~highj[src_i] & ~highj[dst_i]
+    src = jnp.where(keep, g.src, n)
+    dst = jnp.where(keep, g.dst, n)
+    g2 = Graph(n=n, m=g.m, src=src, dst=dst, row_offsets=g.row_offsets,
+               deg=g.deg, eid=g.eid)
+    labels, in_mis, rounds = distributed_pivot(g2, ranks, mesh=mesh)
+    own = np.arange(n, dtype=np.int32)
+    labels = np.where(high, own, labels)
+    return labels, in_mis, rounds
+
+
+__all__ = ["ClusterResult", "correlation_cluster"]

@@ -1,0 +1,88 @@
+"""Corollary 32: deterministic O(λ²)-approximation in O(1) MPC rounds.
+
+Algorithm: every connected component (w.r.t. E⁺) that is a *clique* forms one
+cluster; every other vertex is a singleton.
+
+O(1)-round MPC realization (broadcast/convergecast trees, §2.1.5): each
+vertex v computes ``h[v] = min id over N[v]`` in one convergecast. A label
+group ``S = {v : h[v] = h, deg(v) = |S| − 1}`` is exactly a clique connected
+component: ``deg(v) = |S|−1`` forbids edges leaving S, and a disjoint union
+of ≥2 cliques inside one group would violate the degree equation. Groups
+passing the check become clusters; everything else is singleton.
+
+Also hosts the generic masked connected-components routine (min-label
+propagation + pointer jumping) used by the Algorithm 2 shattering analysis
+(Lemma 18 component-size measurements).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph
+from .mis import INF_RANK, _masked_segment_min
+
+
+@jax.jit
+def clique_clustering(g: Graph) -> jnp.ndarray:
+    """Corollary 32 clustering labels (deterministic, O(1) MPC rounds)."""
+    n = g.n
+    own = jnp.arange(n, dtype=jnp.int32)
+    # Convergecast 1: min id over N[v] (closed neighbourhood).
+    nbr_min = _masked_segment_min(g, own, jnp.ones((n,), bool))
+    h = jnp.minimum(own, jnp.where(nbr_min < INF_RANK, nbr_min, own))
+
+    # Group size per candidate label (scatter-add convergecast).
+    group_size = jnp.zeros((n,), jnp.int32).at[h].add(1)
+    k = group_size[h]
+    deg_ok = g.deg == (k - 1)
+    # All group members must pass deg_ok — min-reduce a boolean per label.
+    ok_per_group = jnp.ones((n,), jnp.int32).at[h].min(deg_ok.astype(jnp.int32))
+    accept = (ok_per_group[h] == 1) & (k >= 1)
+    return jnp.where(accept, h, own)
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def connected_components(g: Graph, mask: jnp.ndarray,
+                         max_iters: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Connected components of the subgraph induced by ``mask``.
+
+    Min-label propagation with pointer jumping ⇒ converges in O(log n)
+    iterations. Returns (labels, iters); unmasked vertices label themselves.
+    """
+    n = g.n
+    own = jnp.arange(n, dtype=jnp.int32)
+    labels0 = own
+
+    def body(state):
+        labels, i, _ = state
+        # Propagate: min over masked neighbours' labels (masked vertices only).
+        nmin = _masked_segment_min(g, labels, mask)
+        new = jnp.where(mask & (nmin < INF_RANK), jnp.minimum(labels, nmin), labels)
+        # Pointer jump twice: label <- label[label].
+        new = jnp.minimum(new, new[new])
+        new = jnp.minimum(new, new[new])
+        changed = jnp.any(new != labels)
+        return new, i + 1, changed
+
+    def cond(state):
+        _, i, changed = state
+        return changed & (i < max_iters)
+
+    labels, iters, _ = jax.lax.while_loop(
+        cond, body, (labels0, jnp.int32(0), jnp.bool_(True))
+    )
+    return labels, iters
+
+
+def component_sizes(labels: jnp.ndarray, mask: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Size of each vertex's component (0 for unmasked vertices)."""
+    sizes = jnp.zeros((n,), jnp.int32).at[labels].add(mask.astype(jnp.int32))
+    return jnp.where(mask, sizes[labels], 0)
+
+
+__all__ = ["clique_clustering", "connected_components", "component_sizes"]

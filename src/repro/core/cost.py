@@ -1,0 +1,154 @@
+"""Disagreement cost, brute-force optimum, and the Lemma 25 transform.
+
+Cost convention (paper §1.3.2): for a clustering C of the complete signed
+graph whose positive edges are ``E⁺``,
+
+  cost(C) = |{(u,v) ∈ E⁺ : C(u) != C(v)}|                (positive disagr.)
+          + Σ_cluster [ (|C| choose 2) − intra_positive(C) ]  (negative disagr.)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _cost_impl(src, dst, labels, n: int):
+    valid = src < n  # mask COO padding
+    same = (labels[jnp.minimum(src, n - 1)] == labels[jnp.minimum(dst, n - 1)]) & valid
+    # COO holds both directions: each undirected edge counted twice.
+    # int32 accumulators: simulation-scale instances (n < 2^15 pair counts
+    # stay well inside int32; jax x64 is disabled in this deployment).
+    intra_pos = jnp.sum(same.astype(jnp.int32)) // 2
+    pos_total = jnp.sum(valid.astype(jnp.int32)) // 2
+    pos_disagree = pos_total - intra_pos
+
+    sizes = jnp.zeros((n,), jnp.int32).at[labels].add(1)
+    intra_pairs = jnp.sum(sizes * (sizes - 1) // 2)
+    neg_disagree = intra_pairs - intra_pos
+    return pos_disagree + neg_disagree, pos_disagree, neg_disagree
+
+
+def clustering_cost(g: Graph, labels) -> int:
+    """Total disagreements of ``labels`` (any integer cluster ids in [0, n))."""
+    total, _, _ = _cost_impl(g.src, g.dst, jnp.asarray(labels, jnp.int32), g.n)
+    return int(total)
+
+
+def clustering_cost_split(g: Graph, labels) -> Tuple[int, int]:
+    _, pos, neg = _cost_impl(g.src, g.dst, jnp.asarray(labels, jnp.int32), g.n)
+    return int(pos), int(neg)
+
+
+def canonicalize(labels: np.ndarray) -> np.ndarray:
+    """Relabel clusters as first-occurrence indices (for comparisons)."""
+    labels = np.asarray(labels)
+    _, inv = np.unique(labels, return_inverse=True)
+    return inv.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Brute-force optimum (tiny n): enumerate set partitions via restricted
+# growth strings (recursive).
+# ---------------------------------------------------------------------------
+
+
+def brute_force_opt(g: Graph, max_n: int = 10) -> Tuple[int, np.ndarray]:
+    """Exact minimum-disagreement clustering by exhaustive enumeration."""
+    n = g.n
+    if n > max_n:
+        raise ValueError(f"brute force limited to n <= {max_n}, got {n}")
+    und = g.undirected_edges()
+    adj = np.zeros((n, n), dtype=bool)
+    for u, v in und:
+        adj[u, v] = adj[v, u] = True
+
+    best_cost, best = None, None
+    # restricted growth strings via simple recursion
+    a = np.zeros(n, dtype=np.int32)
+
+    def rec(i: int, kmax: int):
+        nonlocal best_cost, best
+        if i == n:
+            cost = 0
+            for u in range(n):
+                for v in range(u + 1, n):
+                    same = a[u] == a[v]
+                    if adj[u, v] and not same:
+                        cost += 1
+                    elif (not adj[u, v]) and same:
+                        cost += 1
+            if best_cost is None or cost < best_cost:
+                best_cost, best = cost, a.copy()
+            return
+        for c in range(kmax + 1):
+            a[i] = c
+            rec(i + 1, max(kmax, c + 1))
+
+    rec(0, 0)
+    return int(best_cost), best
+
+
+# ---------------------------------------------------------------------------
+# Lemma 25: local-update transform. Repeatedly eject a vertex v* with
+# d_C⁺(v*) ≤ 2λ−1 from any cluster of size ≥ 4λ−1; cost never increases.
+# ---------------------------------------------------------------------------
+
+
+def lemma25_transform(g: Graph, labels: np.ndarray, lam: int) -> np.ndarray:
+    """Apply the Lemma 25 local updates until all clusters have ≤ 4λ−2 vertices.
+
+    Returns new labels. Asserts the invariant the lemma proves: each ejection
+    does not increase the number of disagreements.
+    """
+    n = g.n
+    labels = canonicalize(np.asarray(labels).copy())
+    und = g.undirected_edges()
+    adj: list[set[int]] = [set() for _ in range(n)]
+    for u, v in und:
+        adj[u].add(v)
+        adj[v].add(u)
+
+    next_label = int(labels.max()) + 1 if n else 0
+    changed = True
+    while changed:
+        changed = False
+        # cluster membership map
+        members: dict[int, list[int]] = {}
+        for v in range(n):
+            members.setdefault(int(labels[v]), []).append(v)
+        for c, vs in members.items():
+            if len(vs) <= 4 * lam - 2:
+                continue
+            cset = set(vs)
+            # find v* with positive degree inside the cluster ≤ 2λ−1
+            vstar = None
+            for v in vs:
+                if len(adj[v] & cset) <= 2 * lam - 1:
+                    vstar = v
+                    break
+            assert vstar is not None, (
+                "Lemma 25 guarantees a low-internal-degree vertex in any "
+                f"cluster of size {len(vs)} > 4λ−2 (λ={lam})"
+            )
+            labels[vstar] = next_label
+            next_label += 1
+            changed = True
+            break
+    return canonicalize(labels)
+
+
+__all__ = [
+    "clustering_cost",
+    "clustering_cost_split",
+    "canonicalize",
+    "brute_force_opt",
+    "lemma25_transform",
+]

@@ -1,0 +1,91 @@
+"""PIVOT correlation clustering (Ailon–Charikar–Newman) via greedy MIS.
+
+PIVOT = greedy MIS w.r.t. a uniform-at-random permutation, where each MIS
+vertex (pivot) captures its surviving positive neighbours. 3-approximation
+in expectation (bad-triangle charging). Three execution engines:
+
+* ``engine='rounds'``   — plain round-parallel MIS (O(log n) depth w.h.p.)
+* ``engine='phased'``   — Algorithm 1 scheduling (the paper's contribution);
+                          identical output, better MPC round accounting.
+* ``engine='sequential'`` — host oracle (tests / tiny inputs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+from .mis import (
+    IN_MIS,
+    assign_to_min_rank_mis_neighbor,
+    greedy_mis_parallel,
+    pivot_sequential,
+    random_permutation_ranks,
+)
+from .phases import RoundLedger, algorithm1
+
+
+@dataclasses.dataclass
+class PivotResult:
+    labels: np.ndarray           # (n,) cluster ids (pivot vertex ids)
+    in_mis: np.ndarray           # (n,) bool pivot mask
+    depth: int                   # realized parallel dependency depth
+    ledger: Optional[RoundLedger]  # MPC round accounting (phased engine)
+
+
+def pivot(g: Graph, key: jax.Array, engine: str = "rounds",
+          eligible: Optional[jnp.ndarray] = None,
+          subroutine: str = "alg3", use_kernel: bool = False) -> PivotResult:
+    """Run PIVOT on the positive graph ``g``.
+
+    ``eligible`` restricts to an induced subgraph (Theorem 26 degree cap);
+    ineligible vertices come back as singletons labelled by their own id.
+    """
+    n = g.n
+    ranks = random_permutation_ranks(n, key)
+
+    if engine == "sequential":
+        if eligible is not None:
+            raise ValueError("sequential engine does not support eligible mask")
+        labels = pivot_sequential(g, np.asarray(ranks))
+        in_mis = labels == np.arange(n)
+        return PivotResult(labels=labels, in_mis=in_mis, depth=-1, ledger=None)
+
+    if engine == "phased":
+        if eligible is not None:
+            raise ValueError("phased engine composes with the degree cap at "
+                             "the api layer (it re-ranks the subgraph)")
+        state, ranks, ledger = algorithm1(g, ranks=ranks, subroutine=subroutine)
+        in_mis = state.status == IN_MIS
+        labels = assign_to_min_rank_mis_neighbor(g, ranks, in_mis)
+        ledger.extra_rounds += 1.0  # capture convergecast
+        return PivotResult(
+            labels=np.asarray(labels),
+            in_mis=np.asarray(in_mis),
+            depth=int(state.rounds),
+            ledger=ledger,
+        )
+
+    if engine != "rounds":
+        raise ValueError(f"unknown engine {engine!r}")
+
+    state = greedy_mis_parallel(g, ranks, eligible=eligible, use_kernel=use_kernel)
+    in_mis = state.status == IN_MIS
+    labels = assign_to_min_rank_mis_neighbor(g, ranks, in_mis)
+    if eligible is not None:
+        own = jnp.arange(n, dtype=jnp.int32)
+        labels = jnp.where(eligible, labels, own)
+    return PivotResult(
+        labels=np.asarray(labels),
+        in_mis=np.asarray(in_mis),
+        depth=int(state.rounds),
+        ledger=None,
+    )
+
+
+__all__ = ["PivotResult", "pivot"]

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: blocked (flash) attention forward with GQA + causal.
+
+Canonical TPU tiling: grid ``(batch, q_heads, nQ, nKV)`` with the innermost
+KV dimension marked "arbitrary" (sequential) and the softmax running stats
+``(m, l)`` and the output accumulator carried in VMEM scratch across KV
+steps. Block shapes are MXU-aligned (q/k blocks multiples of 128 rows,
+head_dim padded to a multiple of 128 by the wrapper). KV blocks strictly
+above the causal diagonal are skipped with ``pl.when`` (they are still
+fetched by the pipeline — the index map is static — but contribute no
+FLOPs; the wrapper instead *clips* the KV grid per Q block when the whole
+tail is masked).
+
+GQA: KV head index = q_head // (H // KH), expressed in the k/v BlockSpec
+index maps, so KV tiles are fetched once per group from HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, block_q: int, block_k: int,
+               num_kv_blocks: int, row_offset: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal: the whole KV block is masked iff its first column exceeds the
+    # last (offset) row of the Q block. row_offset = Sk - Sq aligns a short
+    # query suffix against a longer KV prefix (decode/chunked-prefill).
+    run = True
+    if causal:
+        run = (ik * block_k) <= (iq * block_q + block_q - 1 + row_offset)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # (bq, bk)
+        if causal:
+            rows = row_offset + iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                            # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)        # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)                  # fully-masked rows
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret",
+                     "row_offset"),
+)
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True, row_offset: int = 0
+                    ) -> jnp.ndarray:
+    """Blocked attention forward.
+
+    Shapes: q (B, H, Sq, D), k/v (B, KH, Sk, D) with H % KH == 0.
+    Sq/Sk must divide by the block sizes (wrapper in ops.py pads).
+    ``row_offset`` aligns a short causal query block against a longer KV
+    prefix (row_offset = Sk_real − Sq_real).
+    """
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    nq = pl.cdiv(sq, block_q)
+    nk = pl.cdiv(sk, block_k)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        row_offset=row_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),     # output accumulator
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 128), jnp.float32),   # running denom l
+        ],
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+    )(q, k, v)
+
+
+__all__ = ["flash_attention"]

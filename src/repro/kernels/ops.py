@@ -1,0 +1,80 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels are written for TPU as the target and validated in interpret mode).
+On a real TPU backend the same call sites lower the Mosaic kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import neighbor_min as _nm
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def neighbor_min(g, ranks: jnp.ndarray, active: jnp.ndarray,
+                 width: int | None = None) -> jnp.ndarray:
+    """Graph-facing neighbour-min (contract of core.mis.neighbor_min_ranks).
+
+    Builds the ELL view once per (graph, width); jit caching makes repeated
+    MIS rounds reuse the compiled kernel.
+    """
+    ell = _nm.ell_from_graph(g, width=width)
+    ranks_p, active_p = _nm.pad_state(jnp.asarray(ranks, jnp.int32), active)
+    return _nm.neighbor_min_ell(ell, ranks_p, active_p,
+                                interpret=not _on_tpu())
+
+
+def neighbor_min_ell(ell, ranks_p, active_p, block_rows: int = 256):
+    return _nm.neighbor_min_ell(ell, ranks_p, active_p,
+                                block_rows=block_rows,
+                                interpret=not _on_tpu())
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad), size
+
+
+def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128):
+    """Padded/unpadded flash attention. q (B,H,Sq,D), k/v (B,KH,Sk,D).
+
+    Sequence lengths are padded up to the block size; padded KV columns are
+    masked out by giving them -inf scores via an explicit active length —
+    here we rely on causal masking for Sq==Sk and pad-safe softmax (padded
+    rows are sliced away, padded KV columns only matter for non-causal
+    inputs, where we pre-mask keys by padding V with zeros and K with a
+    -inf-producing sentinel handled below).
+    """
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    qp, sq0 = _pad_to(q, block_q, 2)
+    kp, sk0 = _pad_to(k, block_k, 2)
+    vp, _ = _pad_to(v, block_k, 2)
+    if kp.shape[2] != sk0 and not causal:
+        # Ragged non-causal KV (padded keys would need an explicit length
+        # mask): take the oracle path — only hit by tiny encoder shapes.
+        return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, scale=scale,
+                              block_q=block_q, block_k=block_k,
+                              interpret=not _on_tpu(),
+                              row_offset=sk0 - sq0)
+    return out[:, :, :sq0, :]
+
+
+__all__ = ["neighbor_min", "neighbor_min_ell", "flash_attention"]

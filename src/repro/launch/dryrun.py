@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh and extract memory/cost/collective analyses.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 host placeholder
+devices. Run as::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k [--multi-pod] [--out artifacts/...json]
+
+Exit code 0 = compile succeeded (memory_analysis + cost_analysis recorded).
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, supports_shape
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import RunConfig, build_model, mesh_axis_sizes, resolve_plan
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import StepConfig, abstract_train_state, make_train_step
+
+
+# Per-arch scale policy: grad-accum steps for train_4k, optimizer-state
+# dtype, and remat. Derived from the v5e HBM budget (see DESIGN.md §5).
+POLICY = {
+    "whisper-base":         dict(accum=1,  state_dtype="float32"),
+    "qwen3-8b":             dict(accum=8,  state_dtype="float32"),
+    "granite-3-2b":         dict(accum=4,  state_dtype="float32"),
+    "stablelm-12b":         dict(accum=8,  state_dtype="float32"),
+    "smollm-135m":          dict(accum=1,  state_dtype="float32"),
+    "olmoe-1b-7b":          dict(accum=2,  state_dtype="float32"),
+    "grok-1-314b":          dict(accum=16, state_dtype="bfloat16",
+                                 accum_dtype="bfloat16"),
+    "zamba2-2.7b":          dict(accum=8,  state_dtype="float32"),
+    "rwkv6-1.6b":           dict(accum=4,  state_dtype="float32"),
+    "llama-3.2-vision-90b": dict(accum=16, state_dtype="bfloat16",
+                                  accum_dtype="bfloat16"),
+}
+
+
+def _tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             attn_impl: str = "chunked", moe_impl: str = "sort",
+             accum: int | None = None, remat: bool = True,
+             compress: bool = False, save_hlo: str | None = None,
+             expert_mode: str = "auto", moe_token_chunk: int = 8192,
+             reduce_dtype: str = "f32") -> dict:
+    from repro.models.common import set_matmul_reduce_dtype
+    set_matmul_reduce_dtype(reduce_dtype)
+    t0 = time.time()
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_axis_sizes(mesh)
+    chips = mesh.devices.size
+    plan = resolve_plan(cfg, shape, axes, expert_mode=expert_mode)
+    pol = POLICY[arch]
+    accum = accum if accum is not None else (
+        pol["accum"] if shape.kind == "train" else 1)
+    # Clamp: each microbatch must still divide the batch-sharding span.
+    batch_ax = plan.axes.get("batch")
+    span = 1
+    if batch_ax is not None:
+        for a in ((batch_ax,) if isinstance(batch_ax, str) else batch_ax):
+            span *= axes[a]
+    while accum > 1 and (shape.global_batch // accum) % span != 0:
+        accum //= 2
+
+    rc = RunConfig(attn_impl=attn_impl, moe_impl=moe_impl,
+                   moe_token_chunk=moe_token_chunk,
+                   remat=(remat and shape.kind == "train"),
+                   mesh=mesh if moe_impl == "ep_local" else None)
+    model = build_model(cfg, plan=plan, rc=rc, param_dtype=jnp.bfloat16)
+    params_sds, param_specs = model.abstract_params()
+    in_specs = model.input_specs(shape)
+    in_shard = model.input_shardings(shape)
+
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "chips": chips, "kind": shape.kind,
+        "plan": {k: str(v) for k, v in plan.axes.items()},
+        "accum": accum, "attn_impl": attn_impl, "moe_impl": moe_impl,
+        "expert_mode": expert_mode, "moe_token_chunk": moe_token_chunk,
+        "reduce_dtype": reduce_dtype,
+        "param_count": int(cfg.param_count()),
+        "param_bytes": _tree_bytes(params_sds),
+    }
+
+    opt_bytes = 0
+    cache_bytes = 0
+    if shape.kind == "train":
+        oc = OptConfig(state_dtype=pol["state_dtype"])
+        sc = StepConfig(accum_steps=accum, compress_cross_pod=compress,
+                        accum_dtype=pol.get("accum_dtype", "float32"))
+        state_sds, state_specs = abstract_train_state(model, oc, sc)
+        opt_bytes = _tree_bytes(state_sds.opt.mu) * 2
+        step = make_train_step(model, oc, sc)
+        batch_sds = {k: in_specs[k] for k in in_specs}
+        metric_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+        fn = jax.jit(
+            step,
+            in_shardings=(_shardings(mesh, state_specs),
+                          _shardings(mesh, in_shard)),
+            out_shardings=(_shardings(mesh, state_specs),
+                           _shardings(mesh, metric_specs)),
+            donate_argnums=(0,),
+        )
+        args = (state_sds, batch_sds)
+    elif shape.kind == "prefill":
+        caches_sds, cache_specs = model.abstract_caches(
+            shape.global_batch, shape.seq_len)
+        cache_bytes = _tree_bytes(caches_sds)
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, cache_len=shape.seq_len)
+
+        logit_spec = plan.P("batch", "vocab")
+        fn = jax.jit(
+            prefill_fn,
+            in_shardings=(_shardings(mesh, param_specs),
+                          _shardings(mesh, in_shard)),
+            out_shardings=(NamedSharding(mesh, logit_spec),
+                           _shardings(mesh, cache_specs)),
+        )
+        args = (params_sds, in_specs)
+    else:  # decode
+        caches_sds, cache_specs = model.abstract_caches(
+            shape.global_batch, shape.seq_len)
+        cache_bytes = _tree_bytes(caches_sds)
+
+        def decode_fn(params, token, caches, pos):
+            return model.decode_step(params, token, caches, pos)
+
+        logit_spec = plan.P("batch", "vocab")
+        fn = jax.jit(
+            decode_fn,
+            in_shardings=(_shardings(mesh, param_specs),
+                          NamedSharding(mesh, plan.P("batch")),
+                          _shardings(mesh, cache_specs),
+                          NamedSharding(mesh, P())),
+            out_shardings=(NamedSharding(mesh, logit_spec),
+                           _shardings(mesh, cache_specs)),
+            donate_argnums=(2,),
+        )
+        args = (params_sds, in_specs["token"], caches_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    result["opt_bytes"] = opt_bytes
+    result["cache_bytes"] = cache_bytes
+
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = rl.collective_stats(hlo, default_participants=chips)
+    if save_hlo:
+        Path(save_hlo).write_text(hlo)
+
+    flops = rl.step_flops(cfg, shape, moe_impl=moe_impl)
+    if shape.kind == "train" and rc.remat:
+        # remat recomputes the forward in the backward: ~4/3 of fwd+bwd.
+        flops = flops + rl.forward_flops(cfg, shape.global_batch,
+                                         shape.seq_len, moe_impl=moe_impl)
+    bytes_hbm = rl.hbm_bytes(cfg, shape, result["param_bytes"], cache_bytes,
+                             opt_bytes)
+    roof = rl.Roofline(
+        chips=chips,
+        flops=flops,
+        bytes_hbm=bytes_hbm,
+        coll_bytes=coll.total_bytes,
+        hlo_flops_raw=float(cost.get("flops", 0.0)),
+        hlo_bytes_raw=float(cost.get("bytes accessed", 0.0)),
+        model_flops_=rl.model_flops(cfg, shape),
+    )
+
+    result.update(
+        status="ok",
+        lower_s=round(t_lower - t0, 1),
+        compile_s=round(t_compile - t_lower, 1),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            per_device_total=(mem.argument_size_in_bytes
+                              + mem.temp_size_in_bytes
+                              + mem.output_size_in_bytes
+                              - mem.alias_size_in_bytes),
+        ),
+        collectives=dict(bytes=coll.bytes_by_kind, counts=coll.count_by_kind),
+        roofline=roof.as_dict(),
+    )
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attn-impl", default="chunked")
+    ap.add_argument("--moe-impl", default="sort")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--expert-mode", default="auto", choices=["auto","ep","tp"])
+    ap.add_argument("--reduce-dtype", default="f32", choices=["f32","bf16"])
+    ap.add_argument("--moe-token-chunk", type=int, default=8192)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args(argv)
+
+    try:
+        res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                       attn_impl=args.attn_impl, moe_impl=args.moe_impl,
+                       accum=args.accum, remat=not args.no_remat,
+                       compress=args.compress, save_hlo=args.save_hlo,
+                       expert_mode=args.expert_mode,
+                       moe_token_chunk=args.moe_token_chunk,
+                       reduce_dtype=args.reduce_dtype)
+    except Exception as e:  # record the failure mode — it is a bug signal
+        import traceback
+        res = {"arch": args.arch, "shape": args.shape,
+               "multi_pod": args.multi_pod, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        Path(args.out).write_text(json.dumps(res, indent=2))
+    dump = {k: v for k, v in res.items() if k != "traceback"}
+    print(json.dumps(dump, indent=2))
+    if res["status"] == "ok":
+        m = res["memory"]
+        print(f"\n== {args.arch} × {args.shape} "
+              f"{'(2 pods, 512 chips)' if args.multi_pod else '(1 pod, 256 chips)'} ==")
+        print(f"per-device bytes: args={m['argument_bytes']/2**30:.2f}GiB "
+              f"temp={m['temp_bytes']/2**30:.2f}GiB "
+              f"total={m['per_device_total']/2**30:.2f}GiB")
+        r = res["roofline"]
+        print(f"roofline: compute={r['t_compute_s']:.4f}s "
+              f"memory={r['t_memory_s']:.4f}s "
+              f"collective={r['t_collective_s']:.4f}s "
+              f"→ {r['bottleneck']}-bound; useful={r['useful_ratio']:.2f} "
+              f"frac={r['roofline_fraction']:.2f}")
+    return 0 if res["status"] in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run driver
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any
+jax import, and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """Whatever devices exist, as a 1-D 'data' mesh (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]

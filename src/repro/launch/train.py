@@ -1,0 +1,125 @@
+"""Training driver: end-to-end loop with checkpoint/restart + dedup stage.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+        --steps 50 --ckpt-dir /tmp/run1 [--resume] [--fail-at 30]
+
+At laptop scale this runs the reduced (smoke) configs on whatever devices
+exist; on a pod the same driver takes ``--production-mesh`` and the full
+config. ``--fail-at`` raises a simulated host failure mid-run to exercise
+the restart path (the integration test does exactly this and asserts the
+loss trajectory is bitwise-identical to an uninterrupted run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, get_smoke
+from repro.data.dedup import dedup_corpus
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data.synthetic import synthetic_corpus, token_stream
+from repro.models import RunConfig, build_model, mesh_axis_sizes, resolve_plan
+from repro.models.sharding import ShardingPlan
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.fault import SimulatedFailure, StepWatchdog
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import (StepConfig, init_train_state,
+                                    make_train_step)
+
+
+def build_pipeline(cfg, seq_len: int, global_batch: int, dedup: bool = True,
+                   seed: int = 0) -> TokenPipeline:
+    corpus = synthetic_corpus(n_docs=300, vocab=cfg.vocab_size,
+                              dup_fraction=0.4, seed=seed)
+    keep = None
+    if dedup:
+        res = dedup_corpus(corpus, threshold=0.5)
+        keep = res.keep
+    stream = token_stream(corpus, keep=keep)
+    # repeat stream to cover the requested steps
+    reps = max(1, (global_batch * (seq_len + 1) * 4) // max(1, len(stream)))
+    stream = np.tile(stream, reps + 1)
+    return TokenPipeline(stream, PipelineConfig(seq_len=seq_len,
+                                                global_batch=global_batch,
+                                                seed=seed))
+
+
+def run(arch: str, smoke: bool, steps: int, ckpt_dir: str | None,
+        resume: bool, fail_at: int | None, seq_len: int, global_batch: int,
+        ckpt_every: int = 10, dedup: bool = True, seed: int = 0,
+        log_every: int = 5) -> dict:
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    rc = RunConfig(attn_impl="naive" if smoke else "chunked",
+                   loss_chunk=min(256, seq_len), ssd_chunk=16,
+                   rwkv_impl="scan" if smoke else "chunked")
+    model = build_model(cfg, plan=ShardingPlan.null(), rc=rc,
+                        param_dtype=jnp.float32)
+    oc = OptConfig(lr=1e-3, warmup_steps=5, total_steps=max(steps, 10))
+    sc = StepConfig(accum_steps=1)
+
+    pipe = build_pipeline(cfg, seq_len, global_batch, dedup=dedup, seed=seed)
+    state = init_train_state(model, jax.random.PRNGKey(seed), oc, sc)
+    start_step = 0
+    if resume and ckpt_dir and latest_step(ckpt_dir) is not None:
+        state, manifest = restore_checkpoint(ckpt_dir, state)
+        start_step = manifest["step"]
+        print(f"resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(model, oc, sc))
+    watchdog = StepWatchdog()
+    losses = []
+    for step in range(start_step, steps):
+        batch = pipe.batch_at(step)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        if cfg.family == "encdec":
+            batch["audio_embeds"] = jnp.zeros(
+                (global_batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (global_batch, cfg.num_image_tokens, cfg.d_model),
+                jnp.float32)
+        watchdog.start()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        straggler = watchdog.stop()
+        losses.append(loss)
+        if step % log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e}"
+                  + (" [straggler]" if straggler else ""), flush=True)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, state,
+                            extra={"arch": arch, "loss": loss})
+        if fail_at is not None and step + 1 == fail_at:
+            raise SimulatedFailure(f"simulated host failure at step {step+1}")
+    return {"losses": losses, "final_step": steps}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--no-dedup", action="store_true")
+    args = ap.parse_args(argv)
+    run(args.arch, smoke=args.smoke, steps=args.steps,
+        ckpt_dir=args.ckpt_dir, resume=args.resume, fail_at=args.fail_at,
+        seq_len=args.seq_len, global_batch=args.global_batch,
+        ckpt_every=args.ckpt_every, dedup=not args.no_dedup)
+
+
+if __name__ == "__main__":
+    main()

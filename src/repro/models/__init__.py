@@ -1,0 +1,19 @@
+"""Composable model stack covering the ten assigned architectures.
+
+  common.py      — Pm (param+spec) leaves, norms, RoPE, linears
+  sharding.py    — logical-axis sharding plans per (arch × shape × mesh)
+  attention.py   — GQA attention (chunked / pallas / naive) + decode
+  mlp.py         — SwiGLU + MoE (sort- and einsum-dispatch)
+  ssm.py         — Mamba2 SSD (chunked + step)
+  rwkv.py        — RWKV6 (scan + chunked)
+  transformer.py — family assembly, scanned stacks, chunked CE loss
+  decoding.py    — prefill / decode with per-family caches
+  model.py       — facade + dry-run input specs
+"""
+
+from .model import Model, build_model
+from .sharding import ShardingPlan, mesh_axis_sizes, resolve_plan
+from .transformer import RunConfig
+
+__all__ = ["Model", "build_model", "ShardingPlan", "resolve_plan",
+           "mesh_axis_sizes", "RunConfig"]

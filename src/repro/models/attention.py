@@ -1,0 +1,234 @@
+"""GQA attention: train/prefill (blocked-softmax), decode (KV cache), cross.
+
+Three implementations with one contract:
+* ``impl='pallas'``  — the Pallas flash-attention kernel (TPU target).
+* ``impl='chunked'`` — pure-XLA blocked softmax (lax.scan over KV blocks with
+  running max/denominator): O(S·block) memory, used for the dry-run lowering
+  and long prefills on CPU. Same math as the kernel.
+* ``impl='naive'``   — quadratic reference (tiny smoke shapes only).
+
+GQA is computed in grouped layout ``(B, KH, G, S, hd)`` — KV is never
+repeated to H heads (that materialization is what blows decode memory).
+Decode attends a 1-token query against a padded cache with a position mask,
+and relies on the sharding plan to shard the cache sequence dim across
+'model' (flash-decoding style; softmax reductions over the sharded axis
+lower to the psum/LSE-combine collectives visible in the dry-run HLO).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from .common import Pm, apply_rope, dense_init, head_rms_norm, linear
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ModelConfig, kg, dtype, plan, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    p = {
+        "wq": Pm(dense_init(kg(), (d, nq), dtype), plan.P("embed", "heads")),
+        "wk": Pm(dense_init(kg(), (d, nkv), dtype), plan.P("embed", "kv")),
+        "wv": Pm(dense_init(kg(), (d, nkv), dtype), plan.P("embed", "kv")),
+        "wo": Pm(dense_init(kg(), (nq, d), dtype), plan.P("heads", "embed")),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = Pm(jnp.ones((hd,), dtype), plan.P(None))
+        p["k_norm"] = Pm(jnp.ones((hd,), dtype), plan.P(None))
+    if cross:
+        p["gate"] = Pm(jnp.zeros((1,), dtype), plan.P(None))
+    return p
+
+
+def _grouped(q, k):
+    """Reshape q (B,S,H,hd) to (B,S,KH,G,hd) to match k's KH."""
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    return q.reshape(b, s, kh, h // kh, hd)
+
+
+def _naive_attention(q, k, v, causal: bool, row_offset: int = 0):
+    """q (B,Sq,KH,G,hd), k/v (B,Sk,KH,hd)."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        rows = jnp.arange(sq)[:, None] + row_offset
+        cols = jnp.arange(sk)[None, :]
+        s = jnp.where(rows >= cols, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, causal: bool, row_offset: int = 0,
+                       q_chunk: int = 512, kv_chunk: int = 1024):
+    """Blocked-softmax attention in pure XLA (same math as the kernel).
+
+    q (B,Sq,KH,G,hd), k/v (B,Sk,KH,hd). Memory O(q_chunk × kv_chunk).
+    """
+    b, sq, kh, g, hd = q.shape
+    sk = k.shape[1]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    # Pad to multiples.
+    pq = (-sq) % q_chunk
+    pk = (-sk) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+    scale = 1.0 / (hd ** 0.5)
+
+    kb = kp.reshape(b, nk, kv_chunk, kh, hd)
+    vb = vp.reshape(b, nk, kv_chunk, kh, hd)
+    qb = qp.reshape(b, nq, q_chunk, kh, g, hd)
+
+    @jax.checkpoint
+    def q_block(iq):
+        qi = qb[:, iq].astype(jnp.float32) * scale     # (B,qc,KH,G,hd)
+
+        @jax.checkpoint
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            ki = kb[:, ik].astype(jnp.float32)          # (B,kc,KH,hd)
+            vi = vb[:, ik].astype(jnp.float32)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki)  # (B,KH,G,qc,kc)
+            rows = (iq * q_chunk + jnp.arange(q_chunk))[:, None] + row_offset
+            cols = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = cols < sk                             # kv padding
+            if causal:
+                mask = mask & (rows >= cols)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            pexp = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(pexp, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", pexp, vi)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk))
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = acc / l[..., None]                         # (B,KH,G,qc,hd)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))       # (B,qc,KH,G,hd)
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))          # (nq,B,qc,KH,G,hd)
+    out = jnp.transpose(outs, (1, 0, 2, 3, 4, 5)).reshape(
+        b, nq * q_chunk, kh, g, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def _pallas_attention(q, k, v, causal: bool, row_offset: int = 0):
+    from repro.kernels import ops as kops
+    b, sq, kh, g, hd = q.shape
+    qh = jnp.transpose(q.reshape(b, sq, kh * g, hd), (0, 2, 1, 3))
+    kh_ = jnp.transpose(k, (0, 2, 1, 3))
+    vh_ = jnp.transpose(v, (0, 2, 1, 3))
+    out = kops.flash_attention(qh, kh_, vh_, causal=causal)
+    out = jnp.transpose(out, (0, 2, 1, 3)).reshape(b, sq, kh, g, hd)
+    return out
+
+
+class AttnOutput(NamedTuple):
+    out: jnp.ndarray
+    k: Optional[jnp.ndarray]  # projected K (B,S,KH,hd) for cache building
+    v: Optional[jnp.ndarray]
+
+
+def attention(params, cfg: ModelConfig, plan, x, positions, *,
+              kv_x=None, causal=True, impl="chunked",
+              return_kv=False) -> AttnOutput:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    b, s, d = x.shape
+    hd, h, kh = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    cross = kv_x is not None
+    src = kv_x if cross else x
+    q = linear(x, params["wq"]).reshape(b, s, h, hd)
+    k = linear(src, params["wk"]).reshape(b, src.shape[1], kh, hd)
+    v = linear(src, params["wv"]).reshape(b, src.shape[1], kh, hd)
+    if cfg.qk_norm and "q_norm" in params:
+        q = head_rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if not cross and not cfg.attention_free:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    qg = _grouped(q, k)
+    row_offset = src.shape[1] - s if causal else 0
+    if impl == "naive":
+        o = _naive_attention(qg, k, v, causal, row_offset)
+    elif impl == "pallas":
+        o = _pallas_attention(qg, k, v, causal, row_offset)
+    else:
+        o = _chunked_attention(qg, k, v, causal, row_offset)
+    o = o.reshape(b, s, h * hd)
+    out = linear(o, params["wo"])
+    if "gate" in params:  # gated cross-attention (vlm)
+        out = out * jnp.tanh(params["gate"].astype(out.dtype))
+    return AttnOutput(out=out, k=k if return_kv else None,
+                      v=v if return_kv else None)
+
+
+def decode_attention(params, cfg: ModelConfig, plan, x, pos, cache_k, cache_v,
+                     *, update_cache=True, rope_on_q=True,
+                     mask_to_pos=True) -> AttnOutput:
+    """One-token decode. x (B,1,D); cache_k/v (B,S,KH,hd); pos scalar.
+
+    The position mask admits keys at indices <= pos. With the plan's
+    ``seq_kv`` sharding the cache stays sharded across 'model' (and 'data'
+    for B=1 long-context); the softmax reduction over the sharded axis is
+    the flash-decoding LSE combine in the lowered HLO.
+    """
+    b, _, d = x.shape
+    hd, h, kh = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    sk = cache_k.shape[1]
+    q = linear(x, params["wq"]).reshape(b, 1, h, hd)
+    k_new = linear(x, params["wk"]).reshape(b, 1, kh, hd)
+    v_new = linear(x, params["wv"]).reshape(b, 1, kh, hd)
+    if cfg.qk_norm and "q_norm" in params:
+        q = head_rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k_new = head_rms_norm(k_new, params["k_norm"], cfg.norm_eps)
+    if rope_on_q and not cfg.attention_free:
+        posv = jnp.full((b, 1), pos, jnp.int32)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k_new = apply_rope(k_new, posv, cfg.rope_theta)
+
+    if update_cache:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, pos, 0, 0))
+
+    qg = _grouped(q, cache_k)                       # (B,1,KH,G,hd)
+    scale = 1.0 / (hd ** 0.5)
+    # Keep the cache in its storage dtype: einsum with a f32 accumulator
+    # reads bf16 operands directly — upcasting first would materialize an
+    # f32 copy of the whole (B,S,KH,hd) cache (2× cache HBM, fatal at 32k).
+    s = jnp.einsum("bqkgd,bskd->bkgqs", (qg * scale).astype(cache_k.dtype),
+                   cache_k, preferred_element_type=jnp.float32)
+    if mask_to_pos:
+        mask = jnp.arange(sk)[None, None, None, None, :] <= pos
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(cache_v.dtype), cache_v,
+                   preferred_element_type=jnp.float32)
+    o = o.astype(x.dtype).reshape(b, 1, h * hd)
+    out = linear(o, params["wo"])
+    if "gate" in params:
+        out = out * jnp.tanh(params["gate"].astype(out.dtype))
+    return AttnOutput(out=out, k=cache_k, v=cache_v)
+
+
+__all__ = ["init_attention", "attention", "decode_attention", "AttnOutput"]

@@ -1,0 +1,136 @@
+"""Shared model building blocks: params-with-specs, norms, RoPE, linears.
+
+Parameters are plain nested dicts whose leaves are :class:`Pm` — an array
+paired with its ``PartitionSpec``. ``split_params`` separates the two trees;
+the spec tree is what ``launch.dryrun`` feeds to ``jax.jit``'s
+``in_shardings``. Single-sourcing array+spec at init time keeps the sharding
+annotations from drifting out of sync with the structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Pm:
+    """A parameter leaf: array + partition spec."""
+    value: Any
+    spec: P
+
+
+def is_pm(x) -> bool:
+    return isinstance(x, Pm)
+
+
+def split_params(tree):
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=is_pm)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=is_pm)
+    return params, specs
+
+
+class KeyGen:
+    """Stateful PRNG splitter for init code."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def dense_init(key, shape, dtype, in_axis_size=None, scale=1.0):
+    """Truncated-normal fan-in init."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = scale / np.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(x, scale, eps: float = 1e-5):
+    """RMSNorm over the head dim (qwen3 qk-norm). x (..., hd)."""
+    return rms_norm(x, scale, eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (B, S, H, hd); positions (B, S) or (S,)."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    freqs = jnp.asarray(rope_frequencies(hd, theta), jnp.float32)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# Cross-shard matmul reduction precision. 'f32': partial dots accumulate and
+# all-reduce in f32 (default, safest). 'bf16': dot outputs are bf16, so the
+# tensor-parallel all-reduce moves half the bytes — the H2 hillclimb lever
+# (Megatron-style bf16 reduce; MXU still accumulates f32 internally within a
+# shard). Set via set_matmul_reduce_dtype() before lowering.
+_MATMUL_REDUCE_DTYPE = "f32"
+
+
+def set_matmul_reduce_dtype(mode: str):
+    global _MATMUL_REDUCE_DTYPE
+    assert mode in ("f32", "bf16"), mode
+    _MATMUL_REDUCE_DTYPE = mode
+
+
+def linear(x, w):
+    """Matmul with f32 accumulation (bf16-safe) or bf16 cross-shard reduce."""
+    pref = (jnp.bfloat16 if _MATMUL_REDUCE_DTYPE == "bf16"
+            and x.dtype == jnp.bfloat16 else jnp.float32)
+    return jax.lax.dot_general(
+        x, w,
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=pref,
+    ).astype(x.dtype)
+
+
+def constrain(x, plan, *logical):
+    """Activation sharding constraint if a mesh is active (no-op otherwise)."""
+    if plan is None or not plan.active:
+        return x
+    return jax.lax.with_sharding_constraint(x, plan.P(*logical))
+
+
+__all__ = [
+    "Pm", "is_pm", "split_params", "KeyGen", "dense_init",
+    "rms_norm", "head_rms_norm", "rope_frequencies", "apply_rope",
+    "linear", "constrain",
+]

@@ -1,0 +1,429 @@
+"""Prefill and single-token decode for every architecture family.
+
+Caches are Pm trees (array + PartitionSpec) mirroring the scanned parameter
+stacks that consume them:
+
+  dense/moe — k/v (L, B, S, KH, hd)
+  vlm       — self k/v (G, k−1, B, S, KH, hd) + cross k/v (G, B, Timg, KH, hd)
+  hybrid    — Mamba conv/ssm states (G, k, …) + shared-attn k/v (G, B, S, …)
+  ssm       — RWKV token-shift carries + wkv state (L, …)
+  encdec    — decoder self k/v (L, B, S, …) + cross k/v (L, B, Tenc, …)
+
+KV caches carry the plan's ``seq_kv`` sharding — on the decode shapes that
+is the 'model' axis (plus the freed 'data' axes for long_500k), which is
+what makes a 1.7 TB 32k×128 cache of the 90B model fit (≈6.6 GB/chip) and
+turns the softmax reduction into the flash-decoding LSE-combine collective
+in the lowered HLO.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .attention import attention, decode_attention
+from .common import Pm, constrain, rms_norm
+from .mlp import mlp, moe
+from .sharding import ShardingPlan
+from .transformer import RunConfig, encode, lm_head
+
+
+def _kv(plan, shape, dtype=jnp.bfloat16):
+    """KV cache leaf with conflict-free (batch, seq, kv-head) sharding.
+
+    A NamedSharding may use each mesh axis once; when both ``kv`` heads and
+    the ``seq_kv`` dim want 'model' (e.g. olmoe's 16 kv heads), the head dim
+    wins and the overlapping axis is dropped from the sequence shard.
+    """
+    def _axes(v):
+        return () if v is None else ((v,) if isinstance(v, str) else tuple(v))
+
+    batch_ax = plan.axes.get("batch")
+    kv_ax = plan.axes.get("kv")
+    used = set(_axes(batch_ax)) | set(_axes(kv_ax))
+    seq = tuple(a for a in _axes(plan.axes.get("seq_kv")) if a not in used)
+    seq_ax = seq if len(seq) > 1 else (seq[0] if seq else None)
+    from jax.sharding import PartitionSpec as P
+    spec = P(*([None] * (len(shape) - 4)), batch_ax, seq_ax, kv_ax, None)
+    return Pm(jnp.zeros(shape, dtype), spec)
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int,
+                plan: ShardingPlan | None = None, dtype=jnp.bfloat16):
+    """Pm tree of empty caches sized for ``seq_len`` decode."""
+    plan = plan or ShardingPlan.null()
+    kh, hd = cfg.num_kv_heads, cfg.head_dim
+    c: Dict[str, Any] = {}
+    if cfg.family in ("dense", "moe"):
+        shp = (cfg.num_layers, batch, seq_len, kh, hd)
+        c["k"], c["v"] = _kv(plan, shp, dtype), _kv(plan, shp, dtype)
+    elif cfg.family == "vlm":
+        g = cfg.num_layers // cfg.cross_attn_every
+        shp = (g, cfg.cross_attn_every - 1, batch, seq_len, kh, hd)
+        c["k"], c["v"] = _kv(plan, shp, dtype), _kv(plan, shp, dtype)
+        xshp = (g, batch, cfg.num_image_tokens, kh, hd)
+        c["xk"] = Pm(jnp.zeros(xshp, dtype),
+                     plan.P(None, "batch", None, "kv", None))
+        c["xv"] = Pm(jnp.zeros(xshp, dtype),
+                     plan.P(None, "batch", None, "kv", None))
+    elif cfg.family == "hybrid":
+        g = cfg.num_layers // cfg.attn_every
+        k = cfg.attn_every
+        d_in, h, n = ssm_mod.ssm_dims(cfg)
+        c["conv"] = Pm(
+            jnp.zeros((g, k, batch, ssm_mod.CONV_K - 1, d_in), dtype),
+            plan.P(None, None, "batch", None, "ff"))
+        c["ssm"] = Pm(
+            jnp.zeros((g, k, batch, h, n, cfg.ssm_head_dim), jnp.float32),
+            plan.P(None, None, "batch", None, None, None))
+        shp = (g, batch, seq_len, kh, hd)
+        c["ak"], c["av"] = _kv(plan, shp, dtype), _kv(plan, shp, dtype)
+    elif cfg.family == "ssm":
+        h, n = rwkv_mod.rwkv_dims(cfg)
+        lyr = cfg.num_layers
+        c["tm_prev"] = Pm(jnp.zeros((lyr, batch, 1, cfg.d_model), dtype),
+                          plan.P(None, "batch", None, None))
+        c["cm_prev"] = Pm(jnp.zeros((lyr, batch, 1, cfg.d_model), dtype),
+                          plan.P(None, "batch", None, None))
+        c["state"] = Pm(jnp.zeros((lyr, batch, h, n, n), jnp.float32),
+                        plan.P(None, "batch", None, None, None))
+    elif cfg.family == "encdec":
+        shp = (cfg.num_layers, batch, seq_len, kh, hd)
+        c["k"], c["v"] = _kv(plan, shp, dtype), _kv(plan, shp, dtype)
+        xshp = (cfg.num_layers, batch, cfg.encoder_seq, kh, hd)
+        c["xk"] = Pm(jnp.zeros(xshp, dtype),
+                     plan.P(None, "batch", None, "kv", None))
+        c["xv"] = Pm(jnp.zeros(xshp, dtype),
+                     plan.P(None, "batch", None, "kv", None))
+    else:
+        raise ValueError(cfg.family)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full forward that also emits caches (padded to cache_len).
+# ---------------------------------------------------------------------------
+
+
+def _pad_seq(kv, cache_len):
+    b, s, kh, hd = kv.shape
+    if s == cache_len:
+        return kv
+    return jnp.pad(kv, ((0, 0), (0, cache_len - s), (0, 0), (0, 0)))
+
+
+def prefill(params, cfg: ModelConfig, plan, rc: RunConfig, batch,
+            cache_len: int | None = None, cache_dtype=jnp.bfloat16):
+    """Run the prompt; return (last-token logits (B, Vpad), caches)."""
+    plan = plan or ShardingPlan.null()
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, plan, "batch", None, None)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    caches: Dict[str, Any] = {}
+
+    def attn_with_kv(p, x_, causal=True):
+        z = rms_norm(x_, p["ln1"], cfg.norm_eps)
+        out = attention(p["attn"], cfg, plan, z, positions, causal=causal,
+                        impl=rc.attn_impl, return_kv=True)
+        return out
+
+    if cfg.family in ("dense", "moe"):
+        def body(x_, p):
+            out = attn_with_kv(p, x_)
+            x_ = x_ + out.out
+            z = rms_norm(x_, p["ln2"], cfg.norm_eps)
+            if cfg.num_experts:
+                x_ = x_ + moe(p["moe"], z, cfg, impl=rc.moe_impl,
+                              capacity_factor=rc.moe_capacity,
+                              token_chunk=rc.moe_token_chunk, plan=plan,
+                              mesh=rc.mesh)
+            else:
+                x_ = x_ + mlp(p["mlp"], z)
+            x_ = constrain(x_, plan, "batch", None, None)
+            kv = (_pad_seq(out.k.astype(cache_dtype), cache_len),
+                  _pad_seq(out.v.astype(cache_dtype), cache_len))
+            return x_, kv
+
+        def f(carry, p):
+            return body(carry, p)
+        x, (ks, vs) = jax.lax.scan(f, x, params["blocks"])
+        caches["k"], caches["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        h, n = rwkv_mod.rwkv_dims(cfg)
+        zero_prev = jnp.zeros((b, 1, cfg.d_model), x.dtype)
+        zero_state = jnp.zeros((b, h, n, n), jnp.float32)
+
+        def f(carry, p):
+            z = rms_norm(carry, p["ln1"], cfg.norm_eps)
+            o, tm_c, st = rwkv_mod.rwkv_time_mix(p["tm"], cfg, z, zero_prev,
+                                                 zero_state, impl=rc.rwkv_impl)
+            carry = carry + o
+            z = rms_norm(carry, p["ln2"], cfg.norm_eps)
+            o, cm_c = rwkv_mod.rwkv_channel_mix(p["cm"], cfg, z, zero_prev)
+            carry = carry + o
+            carry = constrain(carry, plan, "batch", None, None)
+            return carry, (tm_c.astype(cache_dtype),
+                           cm_c.astype(cache_dtype), st)
+
+        x, (tms, cms, sts) = jax.lax.scan(f, x, params["blocks"])
+        caches.update(tm_prev=tms, cm_prev=cms, state=sts)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x_, p):
+            def mamba_body(x2, p2):
+                z = rms_norm(x2, p2["ln"], cfg.norm_eps)
+                o, mc = ssm_mod.mamba_block(p2["mamba"], cfg, z,
+                                            chunk=rc.ssd_chunk)
+                return x2 + o, (mc.conv.astype(cache_dtype), mc.ssm)
+            x_, (convs, ssms) = jax.lax.scan(mamba_body, x_, p)
+            out = attn_with_kv(shared, x_)
+            x_ = x_ + out.out
+            x_ = x_ + mlp(shared["mlp"], rms_norm(x_, shared["ln2"],
+                                                  cfg.norm_eps))
+            x_ = constrain(x_, plan, "batch", None, None)
+            return x_, (convs, ssms,
+                        _pad_seq(out.k.astype(cache_dtype), cache_len),
+                        _pad_seq(out.v.astype(cache_dtype), cache_len))
+
+        x, (convs, ssms, aks, avs) = jax.lax.scan(group, x,
+                                                  params["mamba_groups"])
+        caches.update(conv=convs, ssm=ssms, ak=aks, av=avs)
+
+    elif cfg.family == "vlm":
+        img = batch["image_embeds"].astype(x.dtype)
+
+        def group(x_, p):
+            def self_body(x2, p2):
+                out = attn_with_kv(p2, x2)
+                x2 = x2 + out.out
+                x2 = x2 + mlp(p2["mlp"], rms_norm(x2, p2["ln2"], cfg.norm_eps))
+                x2 = constrain(x2, plan, "batch", None, None)
+                return x2, (_pad_seq(out.k.astype(cache_dtype), cache_len),
+                            _pad_seq(out.v.astype(cache_dtype), cache_len))
+            x_, (ks, vs) = jax.lax.scan(self_body, x_, p["self"])
+            pc = p["cross"]
+            z = rms_norm(x_, pc["ln1"], cfg.norm_eps)
+            out = attention(pc["xattn"], cfg, plan, z, None, kv_x=img,
+                            causal=False, impl=rc.attn_impl, return_kv=True)
+            x_ = x_ + out.out
+            x_ = x_ + mlp(pc["mlp"], rms_norm(x_, pc["ln2"], cfg.norm_eps))
+            x_ = constrain(x_, plan, "batch", None, None)
+            return x_, (ks, vs, out.k.astype(cache_dtype),
+                        out.v.astype(cache_dtype))
+
+        stacked = {"self": params["self_groups"], "cross": params["cross_layers"]}
+        x, (ks, vs, xks, xvs) = jax.lax.scan(group, x, stacked)
+        caches.update(k=ks, v=vs, xk=xks, xv=xvs)
+
+    elif cfg.family == "encdec":
+        enc = encode(params, cfg, plan, rc, batch)
+
+        def f(carry, p):
+            out = attn_with_kv(p, carry)
+            carry = carry + out.out
+            z = rms_norm(carry, p["ln_x"], cfg.norm_eps)
+            xout = attention(p["xattn"], cfg, plan, z, None, kv_x=enc,
+                             causal=False, impl=rc.attn_impl, return_kv=True)
+            carry = carry + xout.out
+            carry = carry + mlp(p["mlp"], rms_norm(carry, p["ln2"],
+                                                   cfg.norm_eps))
+            carry = constrain(carry, plan, "batch", None, None)
+            return carry, (_pad_seq(out.k.astype(cache_dtype), cache_len),
+                           _pad_seq(out.v.astype(cache_dtype), cache_len),
+                           xout.k.astype(cache_dtype),
+                           xout.v.astype(cache_dtype))
+
+        x, (ks, vs, xks, xvs) = jax.lax.scan(f, x, params["blocks"])
+        caches.update(k=ks, v=vs, xk=xks, xv=xvs)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    last = x[:, -1:]
+    logits = jax.lax.dot_general(
+        last.astype(jnp.float32), lm_head(params, cfg).astype(jnp.float32),
+        (((2,), (0,)), ((), ())))[:, 0]
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token through all layers, updating caches.
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ModelConfig, plan, rc: RunConfig, token, caches,
+                pos):
+    """token (B,) int32; pos scalar int32. Returns (logits (B, Vpad), caches).
+
+    KV-cache stacks are threaded through the layer scan as *carry* and
+    updated with ``dynamic_update_slice`` at the layer index — XLA aliases
+    while-loop carries in place, so the (multi-GB) caches are not double-
+    buffered the way a scan ys-output would be (observed 2× cache temp on
+    the 90B 32k cell before this layout).
+    """
+    plan = plan or ShardingPlan.null()
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)  # (B,1,D)
+    new: Dict[str, Any] = {}
+
+    def self_decode(p, x_, ck, cv):
+        z = rms_norm(x_, p["ln1"], cfg.norm_eps)
+        out = decode_attention(p["attn"], cfg, plan, z, pos, ck, cv)
+        return x_ + out.out, out.k, out.v
+
+    def idx(stack, l):
+        return jax.lax.dynamic_index_in_dim(stack, l, 0, keepdims=False)
+
+    def upd(stack, sl, l):
+        return jax.lax.dynamic_update_index_in_dim(
+            stack, sl.astype(stack.dtype), l, 0)
+
+    if cfg.family in ("dense", "moe"):
+        nl = cfg.num_layers
+
+        def f(carry, inp):
+            x_, ck_all, cv_all = carry
+            p, l = inp
+            x_, nk, nv = self_decode(p, x_, idx(ck_all, l), idx(cv_all, l))
+            z = rms_norm(x_, p["ln2"], cfg.norm_eps)
+            if cfg.num_experts:
+                x_ = x_ + moe(p["moe"], z, cfg, impl=rc.moe_impl,
+                              capacity_factor=rc.moe_capacity,
+                              token_chunk=rc.moe_token_chunk, plan=plan,
+                              mesh=rc.mesh)
+            else:
+                x_ = x_ + mlp(p["mlp"], z)
+            return (x_, upd(ck_all, nk, l), upd(cv_all, nv, l)), None
+
+        (x, ks, vs), _ = jax.lax.scan(
+            f, (x, caches["k"], caches["v"]),
+            (params["blocks"], jnp.arange(nl)))
+        new.update(k=ks, v=vs)
+
+    elif cfg.family == "ssm":
+        def f(carry, inp):
+            p, tm_prev, cm_prev, state = inp
+            z = rms_norm(carry, p["ln1"], cfg.norm_eps)
+            o, tm_c, st = rwkv_mod.rwkv_time_mix(
+                p["tm"], cfg, z, tm_prev.astype(z.dtype), state, impl="scan")
+            carry = carry + o
+            z = rms_norm(carry, p["ln2"], cfg.norm_eps)
+            o, cm_c = rwkv_mod.rwkv_channel_mix(p["cm"], cfg, z,
+                                                cm_prev.astype(z.dtype))
+            carry = carry + o
+            return carry, (tm_c.astype(tm_prev.dtype),
+                           cm_c.astype(cm_prev.dtype), st)
+
+        x, (tms, cms, sts) = jax.lax.scan(
+            f, x, (params["blocks"], caches["tm_prev"], caches["cm_prev"],
+                   caches["state"]))
+        new.update(tm_prev=tms, cm_prev=cms, state=sts)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        ng = cfg.num_layers // cfg.attn_every
+
+        def group(carry, inp):
+            x_, ak_all, av_all = carry
+            p, conv, ssm, g = inp
+
+            def mamba_body(x2, inp2):
+                p2, cv_, ss_ = inp2
+                z = rms_norm(x2, p2["ln"], cfg.norm_eps)
+                o, mc = ssm_mod.mamba_step(
+                    p2["mamba"], cfg, z,
+                    ssm_mod.MambaCache(conv=cv_.astype(z.dtype), ssm=ss_))
+                return x2 + o, (mc.conv.astype(cv_.dtype), mc.ssm)
+
+            x_, (convs, ssms) = jax.lax.scan(mamba_body, x_, (p, conv, ssm))
+            z = rms_norm(x_, shared["ln1"], cfg.norm_eps)
+            out = decode_attention(shared["attn"], cfg, plan, z, pos,
+                                   idx(ak_all, g), idx(av_all, g))
+            x_ = x_ + out.out
+            x_ = x_ + mlp(shared["mlp"],
+                          rms_norm(x_, shared["ln2"], cfg.norm_eps))
+            return (x_, upd(ak_all, out.k, g), upd(av_all, out.v, g)), (
+                convs, ssms)
+
+        (x, aks, avs), (convs, ssms) = jax.lax.scan(
+            group, (x, caches["ak"], caches["av"]),
+            (params["mamba_groups"], caches["conv"], caches["ssm"],
+             jnp.arange(ng)))
+        new.update(conv=convs, ssm=ssms, ak=aks, av=avs)
+
+    elif cfg.family == "vlm":
+        ng = cfg.num_layers // cfg.cross_attn_every
+        n_self = cfg.cross_attn_every - 1
+
+        def group(carry, inp):
+            x_, ck_all, cv_all = carry
+            p, xk, xv, g = inp
+
+            def self_body(carry2, inp2):
+                x2, ckg, cvg = carry2      # ckg (n_self, B, S, KH, hd)
+                p2, j = inp2
+                x2, nk, nv = self_decode(p2, x2, idx(ckg, j), idx(cvg, j))
+                x2 = x2 + mlp(p2["mlp"], rms_norm(x2, p2["ln2"],
+                                                  cfg.norm_eps))
+                return (x2, upd(ckg, nk, j), upd(cvg, nv, j)), None
+
+            (x_, ckg, cvg), _ = jax.lax.scan(
+                self_body, (x_, idx(ck_all, g), idx(cv_all, g)),
+                (p["self"], jnp.arange(n_self)))
+            pc = p["cross"]
+            z = rms_norm(x_, pc["ln1"], cfg.norm_eps)
+            out = decode_attention(pc["xattn"], cfg, plan, z, pos, xk, xv,
+                                   update_cache=False, rope_on_q=False,
+                                   mask_to_pos=False)
+            x_ = x_ + out.out
+            x_ = x_ + mlp(pc["mlp"], rms_norm(x_, pc["ln2"], cfg.norm_eps))
+            return (x_, upd(ck_all, ckg, g), upd(cv_all, cvg, g)), None
+
+        stacked = {"self": params["self_groups"],
+                   "cross": params["cross_layers"]}
+        (x, ks, vs), _ = jax.lax.scan(
+            group, (x, caches["k"], caches["v"]),
+            (stacked, caches["xk"], caches["xv"], jnp.arange(ng)))
+        new.update(k=ks, v=vs, xk=caches["xk"], xv=caches["xv"])
+
+    elif cfg.family == "encdec":
+        nl = cfg.num_layers
+
+        def f(carry, inp):
+            x_, ck_all, cv_all = carry
+            p, xk, xv, l = inp
+            x_, nk, nv = self_decode(p, x_, idx(ck_all, l), idx(cv_all, l))
+            z = rms_norm(x_, p["ln_x"], cfg.norm_eps)
+            out = decode_attention(p["xattn"], cfg, plan, z, pos, xk, xv,
+                                   update_cache=False, rope_on_q=False,
+                                   mask_to_pos=False)
+            x_ = x_ + out.out
+            x_ = x_ + mlp(p["mlp"], rms_norm(x_, p["ln2"], cfg.norm_eps))
+            return (x_, upd(ck_all, nk, l), upd(cv_all, nv, l)), None
+
+        (x, ks, vs), _ = jax.lax.scan(
+            f, (x, caches["k"], caches["v"]),
+            (params["blocks"], caches["xk"], caches["xv"], jnp.arange(nl)))
+        new.update(k=ks, v=vs, xk=caches["xk"], xv=caches["xv"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jax.lax.dot_general(
+        x.astype(jnp.float32), lm_head(params, cfg).astype(jnp.float32),
+        (((2,), (0,)), ((), ())))[:, 0]
+    return logits, new
+
+
+__all__ = ["init_caches", "prefill", "decode_step"]

@@ -1,0 +1,141 @@
+"""Model facade: one object tying config + plan + the three entry points
+(train loss, prefill, decode) and producing dry-run ``input_specs``.
+
+``abstract_params`` / ``abstract_caches`` use ``jax.eval_shape`` so the
+dry-run never allocates the (up to 314B-parameter) trees — only
+ShapeDtypeStructs flow into ``jit(...).lower()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import decoding, transformer
+from .common import is_pm, split_params
+from .sharding import ShardingPlan
+from .transformer import RunConfig
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    plan: ShardingPlan
+    rc: RunConfig
+    param_dtype: Any = jnp.bfloat16
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key: jax.Array):
+        """Concrete params (smoke/testing scale only)."""
+        tree = transformer.init_model(self.cfg, key, self.plan,
+                                      self.param_dtype)
+        return split_params(tree)
+
+    def abstract_params(self):
+        """(ShapeDtypeStruct tree, spec tree) without allocation.
+
+        The init runs under ``eval_shape`` (never allocating the up-to-314B
+        tree); the spec tree — plain Python objects — is captured by side
+        effect during the single abstract trace.
+        """
+        store = {}
+
+        def f(k):
+            tree = transformer.init_model(self.cfg, k, self.plan,
+                                          self.param_dtype)
+            vals, specs = split_params(tree)
+            store["specs"] = specs
+            return vals
+
+        vals = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return vals, store["specs"]
+
+    def abstract_caches(self, batch: int, seq_len: int,
+                        cache_dtype=jnp.bfloat16):
+        store = {}
+
+        def f():
+            tree = decoding.init_caches(self.cfg, batch, seq_len, self.plan,
+                                        cache_dtype)
+            vals, specs = split_params(tree)
+            store["specs"] = specs
+            return vals
+
+        vals = jax.eval_shape(f)
+        return vals, store["specs"]
+
+    def init_caches(self, batch: int, seq_len: int, cache_dtype=jnp.bfloat16):
+        return split_params(
+            decoding.init_caches(self.cfg, batch, seq_len, self.plan,
+                                 cache_dtype))
+
+    # -- entry points ---------------------------------------------------------
+    def loss(self, params, batch):
+        return transformer.loss_fn(params, self.cfg, self.plan, self.rc, batch)
+
+    def forward(self, params, batch):
+        return transformer.forward(params, self.cfg, self.plan, self.rc, batch)
+
+    def prefill(self, params, batch, cache_len: Optional[int] = None,
+                cache_dtype=jnp.bfloat16):
+        return decoding.prefill(params, self.cfg, self.plan, self.rc, batch,
+                                cache_len=cache_len, cache_dtype=cache_dtype)
+
+    def decode_step(self, params, token, caches, pos):
+        return decoding.decode_step(params, self.cfg, self.plan, self.rc,
+                                    token, caches, pos)
+
+    # -- dry-run inputs -------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig, act_dtype=jnp.bfloat16
+                    ) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            specs = {
+                "tokens": sds((b, s), jnp.int32),
+                "labels": sds((b, s), jnp.int32),
+            }
+        elif shape.kind == "prefill":
+            specs = {"tokens": sds((b, s), jnp.int32)}
+        else:  # decode: one new token against a seq_len cache
+            specs = {"token": sds((b,), jnp.int32)}
+        if cfg.family == "encdec" and shape.kind != "decode":
+            specs["audio_embeds"] = sds((b, cfg.encoder_seq, cfg.d_model),
+                                        act_dtype)
+        if cfg.family == "vlm" and shape.kind != "decode":
+            specs["image_embeds"] = sds((b, cfg.num_image_tokens, cfg.d_model),
+                                        act_dtype)
+        return specs
+
+    def input_shardings(self, shape: ShapeConfig):
+        p_batch = self.plan.P("batch")
+        p_batch_seq = self.plan.P("batch", None)
+        p_embed3 = self.plan.P("batch", None, None)
+        if shape.kind == "decode":
+            out = {"token": p_batch}
+        elif shape.kind == "prefill":
+            out = {"tokens": p_batch_seq}
+        else:
+            out = {"tokens": p_batch_seq, "labels": p_batch_seq}
+        if self.cfg.family == "encdec" and shape.kind != "decode":
+            out["audio_embeds"] = p_embed3
+        if self.cfg.family == "vlm" and shape.kind != "decode":
+            out["image_embeds"] = p_embed3
+        return out
+
+
+def build_model(cfg: ModelConfig, plan: Optional[ShardingPlan] = None,
+                rc: Optional[RunConfig] = None,
+                param_dtype=jnp.bfloat16) -> Model:
+    return Model(cfg=cfg, plan=plan or ShardingPlan.null(),
+                 rc=rc or RunConfig(), param_dtype=param_dtype)
+
+
+__all__ = ["Model", "build_model"]

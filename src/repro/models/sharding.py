@@ -1,0 +1,146 @@
+"""Sharding plans: logical axes → mesh axes, resolved per (arch × shape).
+
+Production mesh: ``(data=16, model=16)`` single pod, ``(pod=2, data=16,
+model=16)`` multi-pod. The plan maps *logical* tensor axes to mesh axes with
+per-architecture divisibility checks (e.g. smollm's 9 heads cannot shard
+16-way — attention weights replicate over 'model' while the MLP still
+tensor-parallelizes; grok's 8 experts go tensor-parallel *inside* experts
+since 8 % 16 != 0, olmoe's 64 experts use expert parallelism).
+
+Logical axes used by the model code:
+  batch     — activation batch dim                (pod, data)
+  embed     — d_model rows of weight matrices     (FSDP/ZeRO shard: data)
+  ff        — MLP hidden                          (model)
+  heads     — q-head dim of attention weights     (model if divisible)
+  kv        — kv-head dim                         (model if divisible)
+  vocab     — vocabulary dim                      (model)
+  experts   — expert dim of stacked MoE weights   (model if divisible)
+  expert_ff — per-expert hidden                   (model if experts aren't)
+  seq_kv    — sequence dim of decode KV caches    (model [+ data if B small])
+  stack     — scan-stacked layer dim              (never sharded)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    axes: Dict[str, object]          # logical name -> mesh axis (str/tuple/None)
+    active: bool = True              # False = single-device smoke mode
+
+    def P(self, *logical) -> P:
+        return P(*[self.axes.get(name) for name in logical])
+
+    @staticmethod
+    def null() -> "ShardingPlan":
+        return ShardingPlan(axes={}, active=False)
+
+
+def _divides(a: int, b: int) -> bool:
+    return b > 0 and a % b == 0
+
+
+def resolve_plan(cfg: ModelConfig, shape: Optional[ShapeConfig],
+                 mesh_axes: Dict[str, int],
+                 expert_mode: str = "auto") -> ShardingPlan:
+    """Build the plan for a config on a mesh given as {axis_name: size}.
+
+    ``expert_mode``: 'auto' (EP when E divides the model axis, else TP
+    inside experts), or force 'ep'/'tp' — the H1 hillclimb lever (see
+    EXPERIMENTS.md §Perf: EP's dispatch scatter traffic vs TP's activation
+    all-reduces).
+    """
+    tp = "model" if "model" in mesh_axes else None
+    tp_size = mesh_axes.get("model", 1)
+    data_axes: Tuple[str, ...] = tuple(
+        a for a in ("pod", "data") if a in mesh_axes)
+    data_size = 1
+    for a in data_axes:
+        data_size *= mesh_axes[a]
+
+    axes: Dict[str, object] = {}
+    axes["stack"] = None
+    axes["batch"] = data_axes if len(data_axes) > 1 else (
+        data_axes[0] if data_axes else None)
+
+    # FSDP/ZeRO axes for the d_model rows of weights (and optimizer states).
+    # Spans the pod axis too: capacity beats cross-pod gather bandwidth for
+    # the ≥300B models (grok-1 only fits the 2-pod mesh; the roofline's
+    # collective term prices the cross-pod gathers).
+    span = 1
+    for a in data_axes:
+        span *= mesh_axes[a]
+    if data_axes and _divides(cfg.d_model, span):
+        axes["embed"] = data_axes if len(data_axes) > 1 else data_axes[0]
+    elif "data" in mesh_axes and _divides(cfg.d_model, mesh_axes["data"]):
+        axes["embed"] = "data"
+    else:
+        axes["embed"] = None
+
+    axes["ff"] = tp if _divides(cfg.d_ff, tp_size) else None
+    axes["vocab"] = tp if _divides(cfg.padded_vocab, tp_size) else None
+    axes["heads"] = tp if _divides(cfg.num_heads, tp_size) else None
+    axes["kv"] = tp if _divides(cfg.num_kv_heads, tp_size) else None
+
+    if cfg.num_experts:
+        use_ep = _divides(cfg.num_experts, tp_size)
+        if expert_mode == "tp":
+            use_ep = False
+        elif expert_mode == "ep" and not use_ep:
+            raise ValueError(f"E={cfg.num_experts} not divisible by tp")
+        if use_ep:
+            axes["experts"] = tp
+            axes["expert_ff"] = None
+            # EP expert weights are E/|model| small — skip FSDP on d so the
+            # ep_local shard_map doesn't re-gather them (measured regression).
+            axes["expert_embed"] = None
+        else:
+            axes["experts"] = None
+            ff = cfg.moe_d_ff or cfg.d_ff
+            axes["expert_ff"] = tp if _divides(ff, tp_size) else None
+            axes["expert_embed"] = axes["embed"]
+    else:
+        axes["experts"] = None
+        axes["expert_ff"] = None
+        axes["expert_embed"] = axes["embed"]
+
+    # Capacity dim of MoE expert batches: None (constraint measured worse —
+    # §Perf H2 iter 3); kept as an opt-in lever.
+    axes["moe_c"] = None
+
+    # Decode KV-cache sequence sharding: primary over model; if the batch is
+    # too small to occupy the data axes (long_500k B=1), fold them into the
+    # sequence shard too.
+    seq_axes = []
+    if tp:
+        seq_axes.append(tp)
+    if shape is not None and shape.kind == "decode":
+        batch_axes = axes["batch"]
+        if batch_axes is not None:
+            b_axes = (batch_axes,) if isinstance(batch_axes, str) else batch_axes
+            span = 1
+            for a in b_axes:
+                span *= mesh_axes[a]
+            if shape.global_batch < span:
+                # Free the data axes for sequence sharding.
+                axes["batch"] = None
+                seq_axes = [a for a in ("data", "model", "pod")
+                            if a in mesh_axes]
+    axes["seq_kv"] = tuple(seq_axes) if len(seq_axes) > 1 else (
+        seq_axes[0] if seq_axes else None)
+
+    return ShardingPlan(axes=axes, active=bool(mesh_axes))
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+__all__ = ["ShardingPlan", "resolve_plan", "mesh_axis_sizes"]

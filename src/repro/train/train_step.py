@@ -1,0 +1,121 @@
+"""Train step: microbatched grad accumulation + AdamW, one jit program.
+
+``accum_steps > 1`` reshapes the global batch (B, S) → (A, B/A, S) and scans
+microbatches, accumulating fp32 grads. The per-microbatch reduction keeps
+the reduce-scatter of gradients inside the scan body, which XLA overlaps
+with the next microbatch's compute (async collectives — the dry-run HLO
+shows `all-reduce-start`/`-done` pairs spanning compute).
+
+Optional int8 error-feedback gradient compression (`compress_cross_pod`)
+quantizes gradient leaves before the cross-pod reduction and carries the
+quantization error to the next step — the standard 4× ICI-traffic trick for
+multi-pod DP (see train/compression.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from .compression import compress_decompress
+from .optimizer import OptConfig, OptState, opt_init, opt_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    err: Any | None        # error-feedback residuals (compression) or None
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    accum_steps: int = 1
+    compress_cross_pod: bool = False
+    accum_dtype: str = "float32"     # grad accumulator (bf16 for >=90B)
+
+
+def init_train_state(model: Model, key, oc: OptConfig,
+                     sc: StepConfig | None = None) -> TrainState:
+    params, _ = model.init(key)
+    sc = sc or StepConfig()
+    err = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+           if sc.compress_cross_pod else None)
+    return TrainState(params=params, opt=opt_init(params, oc), err=err)
+
+
+def abstract_train_state(model: Model, oc: OptConfig,
+                         sc: StepConfig | None = None):
+    """(ShapeDtypeStruct TrainState, spec TrainState) for the dry-run."""
+    from jax.sharding import PartitionSpec as P
+    from .optimizer import opt_state_specs
+
+    params, specs = model.abstract_params()
+    sc = sc or StepConfig()
+    sdt = jnp.dtype(oc.state_dtype)
+    sds = lambda p, dt: jax.ShapeDtypeStruct(p.shape, dt)
+    opt = OptState(
+        mu=jax.tree.map(lambda p: sds(p, sdt), params),
+        nu=jax.tree.map(lambda p: sds(p, sdt), params),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    err = (jax.tree.map(lambda p: sds(p, jnp.float32), params)
+           if sc.compress_cross_pod else None)
+    state = TrainState(params=params, opt=opt, err=err)
+    state_specs = TrainState(params=specs, opt=opt_state_specs(specs),
+                             err=specs if sc.compress_cross_pod else None)
+    return state, state_specs
+
+
+def make_train_step(model: Model, oc: OptConfig,
+                    sc: StepConfig | None = None):
+    """Returns train_step(state, batch) → (state, metrics)."""
+    sc = sc or StepConfig()
+    accum = sc.accum_steps
+
+    def loss_of(params, mb):
+        return model.loss(params, mb)
+
+    def train_step(state: TrainState, batch):
+        params = state.params
+
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+            mbs = jax.tree.map(reshape, batch)
+
+            adt = jnp.dtype(sc.accum_dtype)
+
+            def micro(acc, mb):
+                loss_i, g = jax.value_and_grad(loss_of)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(adt), acc[0], g
+                ), acc[1] + loss_i
+                return acc, None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)),
+                                           mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+
+        err = state.err
+        if sc.compress_cross_pod:
+            grads, err = compress_decompress(grads, err)
+
+        params2, opt2, metrics = opt_update(grads, state.opt, params, oc)
+        metrics["loss"] = loss
+        return TrainState(params=params2, opt=opt2, err=err), metrics
+
+    return train_step
+
+
+__all__ = ["TrainState", "StepConfig", "init_train_state",
+           "abstract_train_state", "make_train_step"]

@@ -1,0 +1,100 @@
+"""Forest specialization (λ=1): Cor 27 / Lemma 29 / Cor 31."""
+
+import jax
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    augmenting_matching_parallel,
+    build_graph,
+    brute_force_opt,
+    clustering_cost,
+    clustering_from_matching,
+    correlation_cluster,
+    matching_size,
+    max_matching_forest,
+    maximal_matching_parallel,
+)
+from repro.core.graph import path, random_forest
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 60), seed=st.integers(0, 99))
+def test_maximal_matching_valid(n, seed):
+    """Property: symmetric partner array; no free edge remains (maximal)."""
+    rng = np.random.default_rng(seed)
+    g = build_graph(n, random_forest(n, rng))
+    partner, rounds = maximal_matching_parallel(g, jax.random.PRNGKey(seed))
+    p = np.asarray(partner)
+    for v in range(n):
+        if p[v] >= 0:
+            assert p[p[v]] == v
+    und = g.undirected_edges()
+    free = p < 0
+    if len(und):
+        assert not np.any(free[und[:, 0]] & free[und[:, 1]])
+    assert int(rounds) <= n + 1
+
+
+def test_exact_matching_is_optimum_clustering(rng):
+    """Cor 27: cost(matching clustering) == brute-force OPT on tiny forests."""
+    for n in (5, 7, 9):
+        g = build_graph(n, random_forest(n, rng))
+        opt, _ = brute_force_opt(g)
+        partner = max_matching_forest(g)
+        labels = clustering_from_matching(partner)
+        assert clustering_cost(g, labels) == opt
+
+
+def test_cost_formula(rng):
+    """cost = m − |M| on forests."""
+    g = build_graph(80, random_forest(80, rng))
+    partner = max_matching_forest(g)
+    labels = clustering_from_matching(partner)
+    assert clustering_cost(g, labels) == g.m - matching_size(partner)
+
+
+def test_lemma29_ratio(rng):
+    """α-matching ⇒ α-approx clustering; maximal (α≤2) must satisfy it."""
+    for seed in range(4):
+        g = build_graph(120, random_forest(120, rng))
+        m_star = matching_size(max_matching_forest(g))
+        partner, _ = maximal_matching_parallel(g, jax.random.PRNGKey(seed))
+        m = matching_size(partner)
+        alpha = m_star / max(1, m)
+        assert alpha <= 2.0 + 1e-9
+        cost = clustering_cost(g, clustering_from_matching(np.asarray(partner)))
+        opt = g.m - m_star
+        assert cost <= alpha * max(opt, 1) + 1e-9 or cost <= opt + (m_star - m)
+
+
+def test_augmentation_improves_toward_maximum(rng):
+    g = build_graph(300, random_forest(300, rng))
+    m_star = matching_size(max_matching_forest(g))
+    p0, _ = maximal_matching_parallel(g, jax.random.PRNGKey(5))
+    m0 = matching_size(p0)
+    p1, _ = augmenting_matching_parallel(g, jax.random.PRNGKey(5), passes=6)
+    m1 = matching_size(p1)
+    assert m1 >= m0
+    assert m1 >= 0.92 * m_star  # (1+ε)-regime after a few passes
+    # flips preserved validity
+    p = np.asarray(p1)
+    for v in range(300):
+        if p[v] >= 0:
+            assert p[p[v]] == v
+
+
+def test_path_worst_case():
+    """Remark 30: P4 maximal matching can be half of maximum."""
+    g = build_graph(4, path(4))
+    m_star = matching_size(max_matching_forest(g))
+    assert m_star == 2
+
+
+def test_api_forest_methods(rng):
+    g = build_graph(60, random_forest(60, rng))
+    exact = correlation_cluster(g, method="forest_exact")
+    approx = correlation_cluster(g, method="forest_approx",
+                                 key=jax.random.PRNGKey(0))
+    assert exact.cost <= approx.cost <= 2 * exact.cost + 1

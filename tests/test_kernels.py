@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (deliverable (c))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import build_graph, random_permutation_ranks
+from repro.core.graph import random_arboric, star
+from repro.core.mis import neighbor_min_ranks
+from repro.kernels import ops, ref
+from repro.kernels.neighbor_min import ell_from_graph, neighbor_min_ell, pad_state
+
+
+# --- neighbor_min ----------------------------------------------------------
+
+@pytest.mark.parametrize("n,lam", [(17, 1), (64, 2), (257, 3), (1000, 5)])
+def test_neighbor_min_matches_oracle(n, lam, rng):
+    edges, _ = random_arboric(n, lam, rng)
+    g = build_graph(n, edges)
+    key = jax.random.PRNGKey(n)
+    ranks = random_permutation_ranks(n, key)
+    active = jax.random.bernoulli(key, 0.6, (n,))
+    oracle = neighbor_min_ranks(g, ranks, active)
+    kern = ops.neighbor_min(g, ranks, active)
+    assert (np.asarray(oracle) == np.asarray(kern)).all()
+
+
+@pytest.mark.parametrize("block_rows", [32, 128, 512])
+def test_neighbor_min_block_sweep(block_rows, rng):
+    edges, _ = random_arboric(300, 4, rng)
+    g = build_graph(300, edges)
+    ranks = random_permutation_ranks(300, jax.random.PRNGKey(0))
+    active = jnp.ones((300,), bool)
+    ell = ell_from_graph(g)
+    rp, ap = pad_state(ranks, active)
+    out = neighbor_min_ell(ell, rp, ap, block_rows=block_rows)
+    expect = ref.neighbor_min_ref(ell, rp, ap)
+    assert (np.asarray(out) == np.asarray(expect)).all()
+
+
+def test_neighbor_min_star_highdeg(rng):
+    """Width = n−1 row (hub) exercises the wide-ELL path."""
+    g = build_graph(64, star(64))
+    ranks = random_permutation_ranks(64, jax.random.PRNGKey(1))
+    active = jnp.ones((64,), bool)
+    oracle = neighbor_min_ranks(g, ranks, active)
+    kern = ops.neighbor_min(g, ranks, active)
+    assert (np.asarray(oracle) == np.asarray(kern)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 60), seed=st.integers(0, 50),
+       frac=st.floats(0.0, 1.0))
+def test_neighbor_min_property(n, seed, frac):
+    rng = np.random.default_rng(seed)
+    edges, _ = random_arboric(n, 2, rng)
+    g = build_graph(n, edges)
+    key = jax.random.PRNGKey(seed)
+    ranks = random_permutation_ranks(n, key)
+    active = jax.random.bernoulli(key, frac, (n,))
+    oracle = neighbor_min_ranks(g, ranks, active)
+    kern = ops.neighbor_min(g, ranks, active)
+    assert (np.asarray(oracle) == np.asarray(kern)).all()
+
+
+# --- flash attention --------------------------------------------------------
+
+SHAPES = [
+    (1, 4, 4, 128, 128, 64, True, jnp.float32),
+    (2, 4, 2, 128, 128, 64, True, jnp.float32),     # GQA
+    (1, 8, 1, 256, 256, 64, True, jnp.bfloat16),    # MQA bf16
+    (2, 4, 4, 128, 384, 64, True, jnp.float32),     # kv longer (decode-ish)
+    (1, 2, 2, 192, 192, 32, False, jnp.float32),    # non-causal, ragged
+    (1, 9, 3, 130, 130, 64, True, jnp.float32),     # odd sizes (padding)
+    (1, 4, 4, 64, 64, 128, True, jnp.bfloat16),     # big head dim
+]
+
+
+@pytest.mark.parametrize("b,h,kh,sq,sk,d,causal,dtype", SHAPES)
+def test_flash_attention_matches_ref(b, h, kh, sq, sk, d, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, h, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kh, sk, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kh, sk, d), jnp.float32).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=causal)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - expect.astype(jnp.float32))))
+    assert err < tol, (err, tol)
+
+
+def test_flash_attention_block_sweep():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64))
+    k = jax.random.normal(ks[1], (1, 4, 256, 64))
+    v = jax.random.normal(ks[2], (1, 4, 256, 64))
+    expect = ref.attention_ref(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 256), (256, 128)]:
+        out = ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk)
+        assert float(jnp.max(jnp.abs(out - expect))) < 2e-5
+
+
+def test_chunked_xla_attention_matches_ref():
+    """The pure-XLA blocked softmax (production CPU/dry-run path) — same
+    contract as the kernel."""
+    from repro.models.attention import _chunked_attention, _naive_attention
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    b, sq, kh, g, hd, sk = 2, 200, 2, 2, 32, 200
+    q = jax.random.normal(ks[0], (b, sq, kh, g, hd))
+    k = jax.random.normal(ks[1], (b, sk, kh, hd))
+    v = jax.random.normal(ks[2], (b, sk, kh, hd))
+    for causal in (True, False):
+        a = _chunked_attention(q, k, v, causal, q_chunk=64, kv_chunk=96)
+        e = _naive_attention(q, k, v, causal)
+        assert float(jnp.max(jnp.abs(a - e))) < 2e-5

@@ -1,0 +1,121 @@
+"""Greedy MIS: round-parallel ≡ sequential oracle, Algorithm 1 phases,
+Fischer–Noever depth, Pallas-kernel path — the paper's R1."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    algorithm1,
+    build_graph,
+    greedy_mis_parallel,
+    greedy_mis_sequential,
+    random_permutation_ranks,
+    remaining_max_degree_after_prefix,
+)
+from repro.core.graph import gnp, random_arboric, star
+
+
+def _mis_mask(state):
+    return np.asarray(state.status) == 1
+
+
+@pytest.mark.parametrize("n,lam,seed", [(50, 1, 0), (200, 3, 1), (400, 5, 2)])
+def test_parallel_equals_sequential(n, lam, seed, rng):
+    edges, _ = random_arboric(n, lam, rng)
+    g = build_graph(n, edges)
+    ranks = random_permutation_ranks(n, jax.random.PRNGKey(seed))
+    seq = greedy_mis_sequential(g, np.asarray(ranks))
+    par = _mis_mask(greedy_mis_parallel(g, ranks))
+    assert (seq == par).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 40), p=st.floats(0.05, 0.5), seed=st.integers(0, 99))
+def test_parallel_equals_sequential_property(n, p, seed):
+    rng = np.random.default_rng(seed)
+    g = build_graph(n, gnp(n, p, rng))
+    ranks = random_permutation_ranks(n, jax.random.PRNGKey(seed))
+    seq = greedy_mis_sequential(g, np.asarray(ranks))
+    par = _mis_mask(greedy_mis_parallel(g, ranks))
+    assert (seq == par).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 30), p=st.floats(0.05, 0.5), seed=st.integers(0, 99))
+def test_mis_is_maximal_independent(n, p, seed):
+    """Property: output is independent AND maximal (paper's MIS defn)."""
+    rng = np.random.default_rng(seed)
+    edges = gnp(n, p, rng)
+    g = build_graph(n, edges)
+    ranks = random_permutation_ranks(n, jax.random.PRNGKey(seed))
+    mis = _mis_mask(greedy_mis_parallel(g, ranks))
+    und = g.undirected_edges()
+    for u, v in und:
+        assert not (mis[u] and mis[v]), "not independent"
+    # maximality: every non-MIS vertex has an MIS neighbour
+    adj = [set() for _ in range(n)]
+    for u, v in und:
+        adj[u].add(v)
+        adj[v].add(u)
+    for v in range(n):
+        if not mis[v]:
+            assert any(mis[u] for u in adj[v]), "not maximal"
+
+
+def test_algorithm1_matches_global(rng):
+    edges, _ = random_arboric(300, 4, rng)
+    g = build_graph(300, edges)
+    ranks = random_permutation_ranks(300, jax.random.PRNGKey(7))
+    seq = greedy_mis_sequential(g, np.asarray(ranks))
+    for sub in ("alg2", "alg3"):
+        state, _, ledger = algorithm1(g, ranks=ranks, subroutine=sub)
+        assert (_mis_mask(state) == seq).all(), sub
+        assert ledger.total_rounds > 0
+        assert len(ledger.phases) >= 1
+
+
+def test_fischer_noever_depth_logarithmic(rng):
+    """Depth grows like O(log n), not n — scaling sanity over 8× n range."""
+    depths = {}
+    for n in (250, 2000):
+        edges, _ = random_arboric(n, 3, rng)
+        g = build_graph(n, edges)
+        ds = []
+        for s in range(3):
+            ranks = random_permutation_ranks(n, jax.random.PRNGKey(s))
+            ds.append(int(greedy_mis_parallel(g, ranks).rounds))
+        depths[n] = np.mean(ds)
+    # 8x vertices should cost far less than 8x rounds.
+    assert depths[2000] <= depths[250] * 3.0, depths
+
+
+def test_lemma22_degree_drop(rng):
+    """After greedy-processing a prefix of size t, max degree ≤ O(n log n/t)."""
+    n = 2000
+    edges, _ = random_arboric(n, 3, rng)
+    g = build_graph(n, edges)
+    ranks = random_permutation_ranks(n, jax.random.PRNGKey(3))
+    for t in (100, 500, 1500):
+        d = remaining_max_degree_after_prefix(g, ranks, t)
+        assert d <= 10 * n * np.log(n) / t
+
+
+def test_star_graph_depth_constant(rng):
+    """Star: the hub either wins round 1 or is removed round 1 — depth ≤ 2."""
+    g = build_graph(100, star(100))
+    for s in range(5):
+        ranks = random_permutation_ranks(100, jax.random.PRNGKey(s))
+        assert int(greedy_mis_parallel(g, ranks).rounds) <= 2
+
+
+def test_kernel_path_equivalence(rng):
+    edges, _ = random_arboric(300, 4, rng)
+    g = build_graph(300, edges)
+    ranks = random_permutation_ranks(300, jax.random.PRNGKey(11))
+    a = greedy_mis_parallel(g, ranks)
+    b = greedy_mis_parallel(g, ranks, use_kernel=True)
+    assert (np.asarray(a.status) == np.asarray(b.status)).all()

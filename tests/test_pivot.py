@@ -1,0 +1,122 @@
+"""PIVOT + Theorem 26 degree cap: label equivalence, 3-approx behaviour."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    brute_force_opt,
+    build_graph,
+    clustering_cost,
+    correlation_cluster,
+    degree_capped_pivot,
+    degree_threshold,
+    pivot,
+    pivot_sequential,
+    random_permutation_ranks,
+)
+from repro.core.mis import assign_to_min_rank_mis_neighbor, greedy_mis_parallel
+from repro.core.graph import gnp, random_arboric, star
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 40), p=st.floats(0.05, 0.5), seed=st.integers(0, 99))
+def test_pivot_parallel_equals_sequential(n, p, seed):
+    rng = np.random.default_rng(seed)
+    g = build_graph(n, gnp(n, p, rng))
+    ranks = random_permutation_ranks(n, jax.random.PRNGKey(seed))
+    state = greedy_mis_parallel(g, ranks)
+    labels = np.asarray(assign_to_min_rank_mis_neighbor(
+        g, ranks, state.status == 1))
+    assert (labels == pivot_sequential(g, np.asarray(ranks))).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 30), p=st.floats(0.1, 0.5), seed=st.integers(0, 50))
+def test_pivot_clusters_are_pivot_neighbourhoods(n, p, seed):
+    """Property: every cluster = a pivot + a subset of its neighbours."""
+    rng = np.random.default_rng(seed)
+    g = build_graph(n, gnp(n, p, rng))
+    res = pivot(g, jax.random.PRNGKey(seed))
+    und = g.undirected_edges()
+    adj = [set() for _ in range(n)]
+    for u, v in und:
+        adj[u].add(v)
+        adj[v].add(u)
+    for v in range(n):
+        c = res.labels[v]
+        assert res.in_mis[c], "cluster label must be a pivot"
+        if v != c:
+            assert c in adj[v], "member must neighbour its pivot"
+
+
+def test_pivot_expected_3_approx_small(rng):
+    """E[cost] over many permutations ≤ 3·OPT on brute-forceable graphs."""
+    for trial in range(3):
+        n = 8
+        g = build_graph(n, gnp(n, 0.45, rng))
+        opt, _ = brute_force_opt(g)
+        costs = []
+        for s in range(60):
+            res = pivot(g, jax.random.PRNGKey(trial * 100 + s))
+            costs.append(clustering_cost(g, res.labels))
+        mean = float(np.mean(costs))
+        assert mean <= 3.0 * max(opt, 1) + 0.75, (mean, opt)
+
+
+def test_degree_cap_singletons_high_degree(rng):
+    n = 200
+    g = build_graph(n, star(n))
+    lam = 1
+    res = degree_capped_pivot(g, lam=lam, key=jax.random.PRNGKey(0), eps=2.0)
+    assert res.high_mask[0], "hub exceeds 12λ and must be singleton"
+    assert res.labels[0] == 0
+    # all leaves are also singletons (their only neighbour was removed)
+    assert (res.labels == np.arange(n)).all()
+    # Theorem 26: cost ≤ max{1+ε, 3}·OPT. For a star OPT = matching: n-2 cost.
+    cost = clustering_cost(g, res.labels)
+    opt = g.m - 1  # best: one matched pair
+    assert cost <= 3 * opt + 1
+
+
+def test_degree_cap_cost_bound_vs_bruteforce(rng):
+    """max{1+ε, α}-approx in expectation against exact OPT (tiny graphs)."""
+    for trial in range(3):
+        n = 9
+        edges, lam = random_arboric(n, 2, rng)
+        g = build_graph(n, edges)
+        opt, _ = brute_force_opt(g)
+        costs = []
+        for s in range(40):
+            res = degree_capped_pivot(g, lam=lam,
+                                      key=jax.random.PRNGKey(trial * 99 + s),
+                                      eps=2.0)
+            costs.append(clustering_cost(g, res.labels))
+        assert float(np.mean(costs)) <= 3.0 * max(opt, 1) + 0.75
+
+
+def test_phased_degree_cap(rng):
+    edges, lam = random_arboric(150, 3, rng)
+    g = build_graph(150, edges)
+    res = degree_capped_pivot(g, lam=lam, key=jax.random.PRNGKey(1),
+                              eps=2.0, engine="phased")
+    assert res.inner is not None and res.inner.ledger is not None
+    assert res.inner.ledger.total_rounds > 0
+    # valid clustering: labels within range, cost computable
+    assert clustering_cost(g, res.labels) >= 0
+
+
+def test_api_methods_run(rng):
+    edges, lam = random_arboric(120, 2, rng)
+    g = build_graph(120, edges)
+    for method in ("pivot", "pivot_phased", "pivot_raw", "cliques"):
+        res = correlation_cluster(g, method=method, key=jax.random.PRNGKey(2))
+        assert res.cost >= 0
+        assert len(res.labels) == 120
+
+
+def test_threshold_formula():
+    assert degree_threshold(5, 2.0) == pytest.approx(8 * 1.5 * 5)
+    assert degree_threshold(1, 2.0) == pytest.approx(12.0)

@@ -1,0 +1,94 @@
+"""Roofline tooling: HLO collective walker (trip counts, async starts,
+participants) + analytic FLOPs sanity."""
+
+import textwrap
+
+from repro.configs import SHAPES, get_config
+from repro.launch.roofline import (
+    Roofline,
+    active_param_count,
+    collective_stats,
+    forward_flops,
+    model_flops,
+    step_flops,
+)
+
+HLO = textwrap.dedent("""\
+    HloModule test
+
+    %body (p: (s32[], f32[16,16])) -> (s32[], f32[16,16]) {
+      %p = (s32[], f32[16,16]) parameter(0)
+      %ar = f32[16,16]{1,0} all-reduce(%gte), channel_id=1, replica_groups=[4,8]<=[32], to_apply=%add
+      ROOT %t = (s32[], f32[16,16]) tuple(%iv, %ar)
+    }
+
+    %cond (p2: (s32[], f32[16,16])) -> pred[] {
+      %p2 = (s32[], f32[16,16]) parameter(0)
+      ROOT %lt = pred[] compare(%iv2, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[16,16]) -> f32[16,16] {
+      %a = f32[16,16]{1,0} parameter(0)
+      %ag = f32[64,16]{1,0} all-gather(%a), channel_id=2, replica_groups=[8,4]<=[32], dimensions={0}
+      %w = (s32[], f32[16,16]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+      %cps = (f32[16,16], f32[16,16]) collective-permute-start(%a), channel_id=3, source_target_pairs={{0,1},{1,0}}
+      %cpd = f32[16,16]{1,0} collective-permute-done(%cps)
+      ROOT %out = f32[16,16]{1,0} add(%cpd, %a)
+    }
+""")
+
+
+def test_collective_walker_trip_counts_and_async():
+    cs = collective_stats(HLO, default_participants=32)
+    # all-gather: 64*16*4 bytes × 4 participants = 16384
+    assert cs.bytes_by_kind["all-gather"] == 64 * 16 * 4 * 4
+    # all-reduce inside while ×10 trips, 8 participants
+    assert cs.bytes_by_kind["all-reduce"] == 16 * 16 * 4 * 8 * 10
+    assert cs.count_by_kind["all-reduce"] == 10
+    # collective-permute-start counted once (max tuple element), done
+    # skipped; participants = number of source_target_pairs (2 here)
+    assert cs.bytes_by_kind["collective-permute"] == 16 * 16 * 4 * 2
+    assert cs.count_by_kind["collective-permute"] == 1
+
+
+def test_analytic_flops_scale_with_tokens():
+    cfg = get_config("qwen3-8b")
+    f1 = forward_flops(cfg, 1, 1024)
+    f2 = forward_flops(cfg, 2, 1024)
+    assert 1.9 < f2 / f1 < 2.1
+    # ~2·N·D at short seq (attention negligible)
+    n = cfg.param_count()
+    assert 0.8 < f1 / (2 * n * 1024) < 1.3
+
+
+def test_moe_active_params():
+    cfg = get_config("olmoe-1b-7b")
+    total = cfg.param_count()
+    active = active_param_count(cfg)
+    assert active < 0.35 * total  # 8/64 experts active (+dense parts)
+
+
+def test_train_flops_is_3x_forward():
+    cfg = get_config("granite-3-2b")
+    shape = SHAPES["train_4k"]
+    assert abs(step_flops(cfg, shape)
+               / (3 * forward_flops(cfg, shape.global_batch,
+                                    shape.seq_len)) - 1) < 1e-6
+
+
+def test_decode_flops_excludes_encoder():
+    cfg = get_config("whisper-base")
+    dec = SHAPES["decode_32k"]
+    pre = SHAPES["prefill_32k"]
+    f_dec = step_flops(cfg, dec)
+    f_pre = step_flops(cfg, pre)
+    assert f_dec < 0.05 * f_pre  # one token vs 32k prompt + encoder
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(chips=256, flops=1e18, bytes_hbm=1e12, coll_bytes=1e12,
+                 hlo_flops_raw=1e16, hlo_bytes_raw=1e12, model_flops_=8e17)
+    assert r.t_compute > r.t_memory
+    assert r.bottleneck == "compute"
+    assert 0.79 < r.useful_ratio < 0.81
+    assert abs(r.roofline_fraction - 0.8) < 1e-6
