@@ -1,0 +1,17 @@
+"""Version compatibility shims for the pinned container toolchain.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace around jax 0.6; the container pins an older jax, so every
+call site imports it from here instead of guessing the location.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on jax version
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map"]

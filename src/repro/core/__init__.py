@@ -11,11 +11,13 @@ Layout:
   arboricity.py  — degeneracy peeling bounds on λ
   cost.py        — disagreement cost, brute-force OPT, Lemma 25 transform
   dist.py        — shard_map edge-parallel engine (MPC ⇒ mesh mapping)
+  batch.py       — shape-bucketed multi-graph PIVOT engine (batched ELL)
   api.py         — `correlation_cluster` public entry point
 """
 
-from .api import ClusterResult, correlation_cluster
+from .api import ClusterResult, correlation_cluster, correlation_cluster_batch
 from .arboricity import arboricity_bounds, degeneracy_parallel, degeneracy_sequential
+from .batch import GraphPlan, plan_graph
 from .cliques import clique_clustering, connected_components
 from .cost import (
     brute_force_opt,
@@ -46,6 +48,9 @@ from .pivot import PivotResult, pivot
 __all__ = [
     "ClusterResult",
     "correlation_cluster",
+    "correlation_cluster_batch",
+    "GraphPlan",
+    "plan_graph",
     "Graph",
     "build_graph",
     "arboricity_bounds",

@@ -43,6 +43,17 @@ class ClusterResult:
     info: dict
 
 
+def sample_keys(key: jax.Array, num_samples: int) -> list:
+    """Best-of-k key schedule shared by the single and batch engines.
+
+    ``num_samples <= 1`` uses the caller's key untouched (bit-compat with
+    pre-sampling behaviour); otherwise each sample folds its index in.
+    """
+    if num_samples <= 1:
+        return [key]
+    return [jax.random.fold_in(key, i) for i in range(num_samples)]
+
+
 def correlation_cluster(
     g: Graph | np.ndarray,
     n: Optional[int] = None,
@@ -53,6 +64,7 @@ def correlation_cluster(
     distributed: bool = False,
     mesh=None,
     use_kernel: bool = False,
+    num_samples: int = 1,
 ) -> ClusterResult:
     """Cluster a complete signed graph given its positive edges.
 
@@ -61,6 +73,10 @@ def correlation_cluster(
       lam: arboricity of E⁺; estimated via degeneracy if omitted.
       eps: Theorem 26 ε (ε=2 reproduces the paper's 3-approx threshold 12λ).
       distributed: run the edge-sharded shard_map engine across the mesh.
+      num_samples: best-of-k for the randomized PIVOT methods — run ``k``
+        independent permutations (keys ``fold_in(key, i)``) and keep the
+        lowest-cost clustering. PIVOT is a 3-approx *in expectation*; taking
+        the min over a few draws tightens the realized cost cheaply.
     """
     if not isinstance(g, Graph):
         if n is None:
@@ -74,40 +90,60 @@ def correlation_cluster(
         lam = hi  # degeneracy upper bound; only moves the O(λ/ε) constant
         info["lambda_estimate"] = (lo, hi)
 
-    if method in ("pivot", "pivot_phased"):
+    if method in ("pivot", "pivot_phased", "pivot_raw"):
         engine = "phased" if method == "pivot_phased" else "rounds"
-        if distributed:
-            thresh = degree_threshold(lam, eps)
-            high = np.asarray(g.deg) > thresh
-            ranks = random_permutation_ranks(g.n, key)
-            # Degree cap in the distributed engine: ineligible vertices get
-            # rank ∞ by exclusion — implemented by masking them as REMOVED
-            # up-front via a rank shift (they never win nor get captured).
-            labels, in_mis, rounds = _distributed_capped(
-                g, ranks, high, mesh=mesh)
-            info.update(depth=rounds, threshold=thresh,
-                        high_degree=int(high.sum()))
-        else:
-            res = degree_capped_pivot(g, lam=lam, key=key, eps=eps,
-                                      engine=engine, use_kernel=use_kernel)
-            labels = res.labels
-            info.update(
-                threshold=res.threshold,
-                high_degree=int(res.high_mask.sum()),
-                depth=res.inner.depth if res.inner else -1,
-            )
-            if res.inner and res.inner.ledger:
-                info["mpc_rounds"] = res.inner.ledger.total_rounds
-                info["ledger"] = res.inner.ledger.summary()
-    elif method == "pivot_raw":
-        if distributed:
-            ranks = random_permutation_ranks(g.n, key)
-            labels, _, rounds = distributed_pivot(g, ranks, mesh=mesh)
-            info["depth"] = rounds
-        else:
-            res = pivot(g, key, engine="rounds", use_kernel=use_kernel)
-            labels, info["depth"] = res.labels, res.depth
-    elif method == "forest_exact":
+
+        def run_once(k):
+            run_info: dict = {}
+            if method == "pivot_raw":
+                if distributed:
+                    ranks = random_permutation_ranks(g.n, k)
+                    labels, _, rounds = distributed_pivot(g, ranks, mesh=mesh)
+                    run_info["depth"] = rounds
+                else:
+                    res = pivot(g, k, engine="rounds", use_kernel=use_kernel)
+                    labels, run_info["depth"] = res.labels, res.depth
+            elif distributed:
+                thresh = degree_threshold(lam, eps)
+                high = np.asarray(g.deg) > thresh
+                ranks = random_permutation_ranks(g.n, k)
+                # Degree cap in the distributed engine: ineligible vertices
+                # get rank ∞ by exclusion — implemented by masking them as
+                # REMOVED up-front via a rank shift (they never win nor get
+                # captured).
+                labels, in_mis, rounds = _distributed_capped(
+                    g, ranks, high, mesh=mesh)
+                run_info.update(depth=rounds, threshold=thresh,
+                                high_degree=int(high.sum()))
+            else:
+                res = degree_capped_pivot(g, lam=lam, key=k, eps=eps,
+                                          engine=engine,
+                                          use_kernel=use_kernel)
+                labels = res.labels
+                run_info.update(
+                    threshold=res.threshold,
+                    high_degree=int(res.high_mask.sum()),
+                    depth=res.inner.depth if res.inner else -1,
+                )
+                if res.inner and res.inner.ledger:
+                    run_info["mpc_rounds"] = res.inner.ledger.total_rounds
+                    run_info["ledger"] = res.inner.ledger.summary()
+            return labels, run_info
+
+        best = None
+        for i, k in enumerate(sample_keys(key, num_samples)):
+            labels_i, info_i = run_once(k)
+            cost_i = clustering_cost(g, labels_i)
+            if best is None or cost_i < best[0]:
+                best = (cost_i, labels_i, info_i, i)
+        cost, labels, run_info, picked = best
+        info.update(run_info)
+        if num_samples > 1:
+            info.update(num_samples=num_samples, picked_sample=picked)
+        return ClusterResult(labels=np.asarray(labels), cost=cost,
+                             method=method, info=info)
+
+    if method == "forest_exact":
         partner = forest_mod.max_matching_forest(g)
         labels = forest_mod.clustering_from_matching(partner)
         info["matching_size"] = forest_mod.matching_size(partner)
@@ -148,4 +184,9 @@ def _distributed_capped(g: Graph, ranks, high: np.ndarray, mesh=None):
     return labels, in_mis, rounds
 
 
-__all__ = ["ClusterResult", "correlation_cluster"]
+# Batched multi-graph engine (shape-bucketed ELL; see core/batch.py).
+# Imported at the bottom: batch.py pulls ClusterResult from this module.
+from .batch import correlation_cluster_batch  # noqa: E402
+
+__all__ = ["ClusterResult", "correlation_cluster",
+           "correlation_cluster_batch", "sample_keys"]

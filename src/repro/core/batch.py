@@ -1,0 +1,388 @@
+"""Batched multi-graph PIVOT engine — shape-bucketed ELL clustering.
+
+The per-graph engine (``correlation_cluster``) retraces and recompiles for
+every new ``(n, m)`` shape, which is hopeless for serving millions of small
+clustering queries (near-dup buckets, LSH bands, per-shard similarity
+graphs). This module packs many small graphs into **shape buckets** and runs
+the whole bucket through one fused device program:
+
+Bucketing scheme
+  Each graph is assigned a bucket key ``(R, W)`` where ``R`` is the vertex
+  count rounded up to a power of two (min 8) and ``W`` is the max degree of
+  the *eligible-induced* subgraph rounded up to a power of two (min 4). The
+  Theorem 26 degree cap is what makes ``W`` small: clustered vertices have
+  degree ≤ 12λ at ε=2, so ELL padding waste is bounded by the cap, exactly
+  the property the paper's TPU adaptation exploits for single graphs. A
+  bucket of ``B`` graphs is packed into
+
+    ell      (B, R, W) int32  — per-graph ELL adjacency, pad entries = R
+    ranks    (B, R+1)  int32  — per-graph permutation ranks, slot R = INF
+    eligible (B, R+1)  bool   — degree-cap mask, slot R inactive
+
+  and the batch axis is itself padded to a power of two with empty graphs,
+  so the jit cache key is the bucket shape: **compile count is O(#buckets),
+  not O(#graphs)**.
+
+Round loop
+  One ``lax.while_loop`` drives the *entire bucket*: every round does a
+  batched neighbour-min (pure-jnp gather or the Pallas ``(batch, row_block)``
+  grid kernel ``repro.kernels.neighbor_min.neighbor_min_ell_batch``), local
+  minima join the MIS, their neighbours drop out, and per-graph ``done``
+  masks (no undecided vertices left) freeze finished graphs while the rest
+  keep iterating. The PIVOT capture pass (min-rank MIS neighbour) runs on
+  device as one more batched gather before anything returns to the host.
+
+Bit-exactness contract
+  For the same per-graph PRNG key, ``correlation_cluster_batch`` returns
+  labels and costs **bit-identical** to per-graph ``correlation_cluster``:
+  ranks come from the same ``random_permutation_ranks(n_i, key_i)``, the
+  round dynamics are the same deterministic integer min-propagation (gather
+  over a complete eligible-induced neighbour list ≡ segment-min over the COO
+  edge set), and the capture pass resolves the same min-rank pivots. The
+  property suite in ``tests/test_batch.py`` enforces this across bucket
+  boundaries (n = R−1, R, R+1) and both kernel paths.
+
+Benchmark
+  ``PYTHONPATH=src python benchmarks/batch_bench.py`` measures graphs/sec of
+  the batch engine vs a per-graph loop and reports compile counts for both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .arboricity import arboricity_bounds
+from .degree_cap import degree_threshold
+from .graph import Graph
+from .mis import INF_RANK, random_permutation_ranks
+
+UNDECIDED = 0
+IN_MIS = 1
+REMOVED = 2
+
+MIN_ROWS = 8     # smallest R bucket
+MIN_WIDTH = 4    # smallest W bucket
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# Host-side packing.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GraphPlan:
+    """Per-graph packing plan: bucket key + degree-cap metadata."""
+
+    g: Graph
+    n: int
+    lam: Optional[int]          # resolved arboricity bound (None for raw)
+    threshold: Optional[float]  # degree-cap threshold (None for raw)
+    eligible: np.ndarray        # (n,) bool — vertices the inner PIVOT sees
+    wreq: int                   # max eligible-induced degree
+    R: int                      # row bucket (pow2)
+    W: int                      # width bucket (pow2)
+
+    @property
+    def bucket(self) -> Tuple[int, int]:
+        return (self.R, self.W)
+
+
+def plan_graph(g: Graph, method: str = "pivot", eps: float = 2.0,
+               lam: Optional[int] = None) -> GraphPlan:
+    """Resolve the degree cap and the (R, W) shape bucket for one graph.
+
+    Mirrors the per-graph api exactly: ``lam`` defaults to the degeneracy
+    upper bound, eligibility is ``deg <= 8(1+ε)/ε·λ`` (Theorem 26), and for
+    ``method='pivot_raw'`` every vertex is eligible.
+    """
+    n = g.n
+    if method == "pivot":
+        if lam is None:
+            _, lam = arboricity_bounds(g, exact=n <= 200_000)
+        threshold = degree_threshold(lam, eps)
+        eligible = ~(np.asarray(g.deg) > threshold)
+    elif method == "pivot_raw":
+        lam, threshold = None, None
+        eligible = np.ones(n, dtype=bool)
+    else:
+        raise ValueError(f"batch engine supports 'pivot'/'pivot_raw', "
+                         f"got {method!r}")
+
+    und = g.undirected_edges()
+    if len(und):
+        keep = eligible[und[:, 0]] & eligible[und[:, 1]]
+        kept = und[keep]
+        deg_ind = np.bincount(kept.ravel(), minlength=n) if len(kept) else \
+            np.zeros(n, np.int64)
+        wreq = int(deg_ind.max()) if len(kept) else 0
+    else:
+        wreq = 0
+
+    return GraphPlan(
+        g=g, n=n, lam=lam, threshold=threshold, eligible=eligible,
+        wreq=wreq,
+        R=max(MIN_ROWS, _next_pow2(max(1, n))),
+        W=max(MIN_WIDTH, _next_pow2(max(1, wreq))),
+    )
+
+
+def _pack_bucket(plans: Sequence[GraphPlan], keys: Sequence[jax.Array]
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack one bucket's graphs into (B_pad, R, W) ELL + state tensors."""
+    R, W = plans[0].bucket
+    b_pad = _next_pow2(len(plans))
+    ell = np.full((b_pad, R, W), R, dtype=np.int32)
+    ranks = np.full((b_pad, R + 1), np.iinfo(np.int32).max, dtype=np.int32)
+    elig = np.zeros((b_pad, R + 1), dtype=bool)
+
+    for i, (plan, key) in enumerate(zip(plans, keys)):
+        n = plan.n
+        und = plan.g.undirected_edges()
+        if len(und):
+            keep = plan.eligible[und[:, 0]] & plan.eligible[und[:, 1]]
+            e = und[keep]
+        else:
+            e = np.zeros((0, 2), dtype=np.int64)
+        if len(e):
+            src = np.concatenate([e[:, 0], e[:, 1]])
+            dst = np.concatenate([e[:, 1], e[:, 0]])
+            order = np.argsort(src, kind="stable")
+            src, dst = src[order], dst[order]
+            deg = np.bincount(src, minlength=n)
+            starts = np.zeros(n + 1, dtype=np.int64)
+            np.cumsum(deg, out=starts[1:])
+            slot = np.arange(len(src)) - starts[src]
+            ell[i, src, slot] = dst
+        # Same per-graph permutation as the single-graph engine: ranks are a
+        # function of (n, key) only, so bit-exactness holds per graph.
+        ranks[i, :n] = np.asarray(random_permutation_ranks(n, key))
+        elig[i, :n] = plan.eligible
+    return ell, ranks, elig
+
+
+# ---------------------------------------------------------------------------
+# Device program: fused MIS round loop + PIVOT capture for a whole bucket.
+# ---------------------------------------------------------------------------
+
+
+def _gather_rows(table: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
+    """(B, R+1) per-graph state gathered through (B, R, W) neighbour ids."""
+    return jax.vmap(lambda t, e: t[e])(table, ell)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _batch_pivot_program(ell, ranks_p, elig_p, use_kernel: bool = False):
+    """Cluster every graph of one shape bucket in a single fused program.
+
+    Args:
+      ell: (B, R, W) int32 ELL adjacency, pad entries = R.
+      ranks_p: (B, R+1) int32 ranks, slot R = INF.
+      elig_p: (B, R+1) bool degree-cap eligibility, slot R False.
+    Returns (labels (B, R), in_mis (B, R), rounds (B,)).
+    """
+    B, R, W = ell.shape
+    ranks = ranks_p[:, :R]
+    elig = elig_p[:, :R]
+    # Rank gather is loop-invariant on the jnp path — hoisted out of the
+    # while body; only the activity gather changes per round.
+    nbr_ranks = None if use_kernel else _gather_rows(ranks_p, ell)
+
+    def nbr_min(active: jnp.ndarray) -> jnp.ndarray:
+        active_p = jnp.concatenate(
+            [active, jnp.zeros((B, 1), active.dtype)], axis=1)
+        if use_kernel:
+            from repro.kernels import ops as _kops  # kernels stay optional
+
+            return _kops.neighbor_min_ell_batch(ell, ranks_p, active_p)
+        act = _gather_rows(active_p, ell)
+        return jnp.min(jnp.where(act, nbr_ranks, INF_RANK), axis=2)
+
+    def cond(carry):
+        status, _ = carry
+        return jnp.any(status == UNDECIDED)
+
+    def body(carry):
+        status, rounds = carry
+        und = status == UNDECIDED            # UNDECIDED ⊆ eligible
+        nmin = nbr_min(und)
+        winners = und & (ranks < nmin)
+        wmin = nbr_min(winners)
+        hit = und & (~winners) & (wmin < INF_RANK)
+        status = jnp.where(winners, IN_MIS, status)
+        status = jnp.where(hit, REMOVED, status)
+        # Per-graph done mask: finished graphs stop accumulating rounds.
+        rounds = rounds + jnp.any(und, axis=1).astype(jnp.int32)
+        return status, rounds
+
+    status0 = jnp.where(elig, UNDECIDED, REMOVED).astype(jnp.int32)
+    status, rounds = jax.lax.while_loop(
+        cond, body, (status0, jnp.zeros((B,), jnp.int32)))
+
+    # PIVOT capture pass: min-rank MIS neighbour, one batched convergecast.
+    in_mis = status == IN_MIS
+    wmin = nbr_min(in_mis)
+    arange_r = jnp.arange(R, dtype=jnp.int32)
+    rank_to_v = jax.vmap(
+        lambda rk: jnp.zeros((R + 1,), jnp.int32).at[
+            jnp.clip(rk, 0, R)].set(arange_r)
+    )(ranks)
+    piv = jnp.take_along_axis(rank_to_v, jnp.minimum(wmin, R), axis=1)
+    own = jnp.broadcast_to(arange_r[None, :], (B, R))
+    labels = jnp.where(in_mis, own,
+                       jnp.where(wmin < INF_RANK, piv, own))
+    labels = jnp.where(elig, labels, own)
+    return labels, in_mis, rounds
+
+
+def program_cache_size() -> int:
+    """Number of compiled bucket programs (benchmark: O(#buckets))."""
+    return int(_batch_pivot_program._cache_size())
+
+
+# ---------------------------------------------------------------------------
+# Host-side cost (numpy) — integer-exact, no per-shape recompiles.
+# ---------------------------------------------------------------------------
+
+
+def _cost_host(g: Graph, labels: np.ndarray) -> int:
+    """Disagreement cost, same convention as ``core.cost.clustering_cost``.
+
+    Pure numpy so a batch of 10k graphs doesn't pay 10k cost-kernel
+    compiles; integer arithmetic keeps it bit-identical to the jit path.
+    """
+    und = g.undirected_edges()
+    intra_pos = int((labels[und[:, 0]] == labels[und[:, 1]]).sum()) \
+        if len(und) else 0
+    pos_disagree = g.m - intra_pos
+    sizes = np.bincount(labels, minlength=g.n)
+    intra_pairs = int((sizes.astype(np.int64) * (sizes - 1) // 2).sum())
+    return pos_disagree + (intra_pairs - intra_pos)
+
+
+# ---------------------------------------------------------------------------
+# Public entry point.
+# ---------------------------------------------------------------------------
+
+
+def correlation_cluster_batch(
+    graphs: Sequence[Graph],
+    keys: Optional[Sequence[jax.Array] | jax.Array] = None,
+    method: str = "pivot",
+    eps: float = 2.0,
+    lams: Optional[Sequence[Optional[int]]] = None,
+    num_samples: int = 1,
+    use_kernel: bool = False,
+) -> List["ClusterResult"]:
+    """Cluster many graphs through the shape-bucketed batch engine.
+
+    Args:
+      graphs: the positive-edge graphs (``Graph`` instances).
+      keys: per-graph PRNG keys (one key broadcast to all if a single key is
+        given; defaults to ``PRNGKey(0)`` like the per-graph api).
+      method: ``'pivot'`` (Theorem 26 degree cap + PIVOT, Corollary 28) or
+        ``'pivot_raw'`` (no cap).
+      lams: optional per-graph arboricity bounds (estimated when omitted).
+      num_samples: best-of-k PIVOT — each graph is clustered under ``k``
+        folded keys *within the same bucket* and the lowest-cost clustering
+        wins, matching ``correlation_cluster(num_samples=k)`` bit-exactly.
+      use_kernel: route neighbour-min through the batched Pallas kernel.
+
+    Returns one :class:`repro.core.api.ClusterResult` per input graph with
+    labels/costs bit-identical to per-graph ``correlation_cluster`` calls
+    under the same keys.
+    """
+    from .api import ClusterResult, sample_keys  # deferred: api imports us
+
+    graphs = list(graphs)
+    n_graphs = len(graphs)
+    if n_graphs == 0:
+        return []
+    if keys is None:
+        keys = [jax.random.PRNGKey(0)] * n_graphs
+    elif isinstance(keys, jax.Array) and keys.ndim <= 1:
+        # One key (legacy uint32 (2,) or typed 0-d) broadcast to all graphs.
+        keys = [keys] * n_graphs
+    else:
+        keys = list(keys)
+    if len(keys) != n_graphs:
+        raise ValueError(f"{len(keys)} keys for {n_graphs} graphs")
+    if lams is None:
+        lams = [None] * n_graphs
+
+    plans = [plan_graph(g, method=method, eps=eps, lam=lam)
+             for g, lam in zip(graphs, lams)]
+
+    # Expand best-of-k samples as extra bucket entries (same shape bucket ⇒
+    # same compiled program; the whole sweep rides the batch axis).
+    entries: List[Tuple[int, int, GraphPlan, jax.Array]] = []
+    for gi, (plan, key) in enumerate(zip(plans, keys)):
+        for si, k in enumerate(sample_keys(key, num_samples)):
+            entries.append((gi, si, plan, k))
+
+    buckets: Dict[Tuple[int, int], List[int]] = {}
+    for ei, (_, _, plan, _) in enumerate(entries):
+        buckets.setdefault(plan.bucket, []).append(ei)
+
+    labels_by_entry: Dict[int, np.ndarray] = {}
+    rounds_by_entry: Dict[int, int] = {}
+    for bucket_key, members in buckets.items():
+        bplans = [entries[ei][2] for ei in members]
+        bkeys = [entries[ei][3] for ei in members]
+        ell, ranks, elig = _pack_bucket(bplans, bkeys)
+        labels, _, rounds = _batch_pivot_program(
+            jnp.asarray(ell), jnp.asarray(ranks), jnp.asarray(elig),
+            use_kernel=use_kernel)
+        labels = np.asarray(labels)
+        rounds = np.asarray(rounds)
+        for slot, ei in enumerate(members):
+            labels_by_entry[ei] = labels[slot, : bplans[slot].n]
+            rounds_by_entry[ei] = int(rounds[slot])
+
+    # Best-of-k reduction per graph (first minimum wins, like the api loop).
+    per_graph: Dict[int, List[Tuple[int, int]]] = {}
+    for ei, (gi, si, _, _) in enumerate(entries):
+        per_graph.setdefault(gi, []).append((si, ei))
+
+    results: List[ClusterResult] = []
+    for gi, (g, plan) in enumerate(zip(graphs, plans)):
+        best = None
+        for si, ei in sorted(per_graph[gi]):
+            lab = labels_by_entry[ei].astype(np.int32)
+            cost = _cost_host(g, lab)
+            if best is None or cost < best[0]:
+                best = (cost, lab, ei, si)
+        cost, lab, ei, si = best
+        info = {
+            "bucket": plan.bucket,
+            "depth": rounds_by_entry[ei],
+            "engine": "batch",
+        }
+        if plan.threshold is not None:
+            info.update(threshold=plan.threshold,
+                        high_degree=int((~plan.eligible).sum()),
+                        lambda_bound=plan.lam)
+        if num_samples > 1:
+            info.update(num_samples=num_samples, picked_sample=si)
+        results.append(ClusterResult(labels=lab, cost=cost, method=method,
+                                     info=info))
+    return results
+
+
+__all__ = [
+    "GraphPlan",
+    "plan_graph",
+    "correlation_cluster_batch",
+    "program_cache_size",
+    "MIN_ROWS",
+    "MIN_WIDTH",
+]

@@ -18,7 +18,7 @@ paper's own motivating regime (§1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -94,15 +94,22 @@ class DedupResult:
 def dedup_corpus(corpus: Corpus, threshold: float = 0.5,
                  num_hashes: int = 64, eps: float = 2.0,
                  method: str = "pivot", distributed: bool = False,
-                 seed: int = 0) -> DedupResult:
-    """MinHash → similarity graph → Theorem 26 + PIVOT → representatives."""
+                 seed: int = 0, num_samples: int = 4) -> DedupResult:
+    """MinHash → similarity graph → Theorem 26 + PIVOT → representatives.
+
+    ``num_samples``: best-of-k PIVOT (keep the lowest-disagreement draw).
+    PIVOT is 3-approx in expectation; a single unlucky permutation can split
+    true duplicate groups, so the pipeline takes the min over a few cheap
+    independent draws.
+    """
     sigs = minhash_signatures(corpus.docs, num_hashes=num_hashes, seed=seed)
     edges = similarity_edges(sigs, threshold=threshold)
     n = len(corpus.docs)
     g = build_graph(n, edges)
     res = correlation_cluster(g, method=method, eps=eps,
                               key=jax.random.PRNGKey(seed),
-                              distributed=distributed)
+                              distributed=distributed,
+                              num_samples=num_samples)
     labels = res.labels
     keep = np.zeros(n, dtype=bool)
     seen = set()
@@ -112,6 +119,104 @@ def dedup_corpus(corpus: Corpus, threshold: float = 0.5,
             keep[i] = True
     return DedupResult(keep=keep, labels=labels, clustering=res,
                        n_edges=g.m)
+
+
+# ---------------------------------------------------------------------------
+# Batched sharded dedup: per-band/per-component subgraphs → batch engine.
+# ---------------------------------------------------------------------------
+
+
+def shard_similarity_graph(n: int, edges: np.ndarray
+                           ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Split the similarity graph into independent clustering subproblems.
+
+    The LSH bands only generate candidate pairs inside shared buckets, so
+    the verified similarity graph decomposes into many small connected
+    components (near-dup groups rarely chain far). Each component is an
+    independent correlation-clustering instance: PIVOT never merges
+    vertices from different positive components, so clustering the shards
+    and stitching labels is exact, and the shards are precisely the small
+    same-shaped graphs the batch engine buckets together.
+
+    Returns ``[(global_ids, local_edges), ...]`` for every component with at
+    least one edge; isolated vertices stay singleton clusters implicitly.
+    """
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(x: int) -> int:
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:            # path compression
+            parent[x], x = root, parent[x]
+        return root
+
+    for u, v in edges:
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[ru] = rv
+
+    comp_edges: dict = {}
+    for u, v in edges:
+        comp_edges.setdefault(find(int(u)), []).append((int(u), int(v)))
+
+    shards: List[Tuple[np.ndarray, np.ndarray]] = []
+    for root, es in sorted(comp_edges.items()):
+        es = np.asarray(es, dtype=np.int64)
+        ids = np.unique(es)
+        remap = {int(v): i for i, v in enumerate(ids)}
+        local = np.array([[remap[int(u)], remap[int(v)]] for u, v in es],
+                         dtype=np.int64)
+        shards.append((ids, local))
+    return shards
+
+
+def dedup_corpus_batched(corpus: Corpus, threshold: float = 0.5,
+                         num_hashes: int = 64, eps: float = 2.0,
+                         seed: int = 0, num_samples: int = 4,
+                         use_kernel: bool = False) -> DedupResult:
+    """Sharded dedup through the batched multi-graph PIVOT engine.
+
+    Same contract as :func:`dedup_corpus`, but the similarity graph is
+    sharded into per-component subgraphs (see :func:`shard_similarity_graph`)
+    that are clustered together through ``correlation_cluster_batch`` — the
+    production path when the corpus yields millions of small near-dup
+    groups rather than one giant graph.
+    """
+    from repro.core import correlation_cluster_batch
+
+    sigs = minhash_signatures(corpus.docs, num_hashes=num_hashes, seed=seed)
+    edges = similarity_edges(sigs, threshold=threshold)
+    n = len(corpus.docs)
+    shards = shard_similarity_graph(n, edges)
+
+    labels = np.arange(n, dtype=np.int32)   # isolated docs: singletons
+    total_cost = 0
+    buckets: set = set()
+    if shards:
+        graphs = [build_graph(len(ids), local) for ids, local in shards]
+        keys = [jax.random.fold_in(jax.random.PRNGKey(seed), i)
+                for i in range(len(shards))]
+        results = correlation_cluster_batch(graphs, keys=keys, eps=eps,
+                                            num_samples=num_samples,
+                                            use_kernel=use_kernel)
+        for (ids, _), res in zip(shards, results):
+            labels[ids] = ids[res.labels]   # lift local pivots to doc ids
+            total_cost += res.cost
+            buckets.add(res.info["bucket"])
+
+    keep = np.zeros(n, dtype=bool)
+    seen = set()
+    for i in range(n):
+        if labels[i] not in seen:
+            seen.add(labels[i])
+            keep[i] = True
+    clustering = ClusterResult(
+        labels=labels, cost=total_cost, method="pivot_batch",
+        info={"n_shards": len(shards), "n_buckets": len(buckets),
+              "buckets": sorted(buckets), "num_samples": num_samples})
+    return DedupResult(keep=keep, labels=labels, clustering=clustering,
+                       n_edges=len(edges))
 
 
 def dedup_quality(result: DedupResult, corpus: Corpus) -> dict:
@@ -141,4 +246,5 @@ def dedup_quality(result: DedupResult, corpus: Corpus) -> dict:
 
 
 __all__ = ["minhash_signatures", "similarity_edges", "DedupResult",
-           "dedup_corpus", "dedup_quality"]
+           "dedup_corpus", "dedup_corpus_batched", "shard_similarity_graph",
+           "dedup_quality"]

@@ -28,6 +28,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 INF_VAL = 2**31 - 1  # int32 max; Python int so pallas kernels don't capture arrays
@@ -77,6 +78,61 @@ def neighbor_min_ell(ell: jnp.ndarray, ranks: jnp.ndarray, active: jnp.ndarray,
     return out
 
 
+def _kernel_batch(ell_ref, ranks_ref, active_ref, out_ref):
+    """Per-(graph, row-block) program of the batched grid.
+
+    Identical math to :func:`_kernel`; the leading length-1 axis is the
+    batch block (one graph's row-block plus that graph's replicated state).
+    """
+    cols = ell_ref[0]                         # (RB, W) int32
+    ranks = ranks_ref[0]                      # (R+1,)
+    active = active_ref[0]                    # (R+1,) int32 0/1
+    vals = jnp.take(ranks, cols, axis=0, fill_value=INF_VAL)
+    act = jnp.take(active, cols, axis=0, fill_value=0)
+    vals = jnp.where(act > 0, vals, INF_VAL)
+    out_ref[0] = jnp.min(vals, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def neighbor_min_ell_batch(ell: jnp.ndarray, ranks: jnp.ndarray,
+                           active: jnp.ndarray, block_rows: int = 256,
+                           interpret: bool = True) -> jnp.ndarray:
+    """Batched neighbour-min over shape-bucketed ELL adjacencies.
+
+    The multi-graph PIVOT engine (``core.batch``) packs ``B`` graphs of one
+    shape bucket into a single ``(B, R, W)`` ELL tensor; this kernel runs the
+    per-round hot loop for the whole bucket with a 2-D ``(batch, row_block)``
+    grid, so one Mosaic program serves every graph in the bucket and the
+    round loop stays on device end to end.
+
+    Args:
+      ell: (B, R, W) int32 neighbour ids; pad entries == R (per-graph pad
+        slot, see ``core.batch``).
+      ranks: (B, R+1) int32 — slot R is the INF pad slot.
+      active: (B, R+1) bool/int32 — slot R inactive.
+    Returns (B, R) int32 per-vertex mins.
+    """
+    b, n_rows, w = ell.shape
+    rb = min(block_rows, n_rows)
+    n_blocks = pl.cdiv(n_rows, rb)
+    state_w = ranks.shape[1]
+    active_i = active.astype(jnp.int32)
+
+    out = pl.pallas_call(
+        _kernel_batch,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, rb, w), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, state_w), lambda bi, i: (bi, 0)),
+            pl.BlockSpec((1, state_w), lambda bi, i: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rb), lambda bi, i: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_rows), jnp.int32),
+        interpret=interpret,
+    )(ell, ranks, active_i)
+    return out
+
+
 def pad_state(ranks: jnp.ndarray, active: jnp.ndarray):
     """Append the INF/inactive pad slot (ELL pad entries point at it)."""
     ranks_p = jnp.concatenate([ranks, jnp.array([INF], jnp.int32)])
@@ -84,14 +140,36 @@ def pad_state(ranks: jnp.ndarray, active: jnp.ndarray):
     return ranks_p, active_p
 
 
-def ell_from_graph(g, width: int | None = None) -> jnp.ndarray:
+def ell_from_graph(g, width: int | None = None,
+                   allow_truncate: bool = False) -> jnp.ndarray:
     """Build the (n, W) ELL neighbour table from a core Graph (jnp ops).
 
     Pad entries point at slot ``n`` (the pad slot added by pad_state).
+
+    A ``width`` smaller than the graph's max degree silently dropped the
+    overflow neighbours historically, which corrupts neighbour-min (and with
+    it the greedy MIS): a vertex can win a round only because its true
+    minimum-rank neighbour fell off the row. Now this raises unless the
+    caller explicitly opts in with ``allow_truncate=True`` (legitimate only
+    when the dropped columns are provably never active, e.g. rows the degree
+    cap already singled out). Under tracing (``g.deg`` is abstract) the check
+    is skipped — jit callers are expected to pass a concrete safe width, as
+    ``core.mis`` does.
     """
     n = g.n
+    max_deg = None
+    if not isinstance(g.deg, jax.core.Tracer):
+        max_deg = int(np.asarray(g.deg).max()) if n else 0
     if width is None:
-        width = max(1, g.max_degree())
+        if max_deg is None:
+            raise ValueError("ell_from_graph: pass an explicit width when "
+                             "the graph degrees are traced")
+        width = max(1, max_deg)
+    elif max_deg is not None and width < max_deg and not allow_truncate:
+        raise ValueError(
+            f"ell_from_graph: width={width} < max degree {max_deg} would "
+            "silently drop neighbours and corrupt neighbour-min / MIS "
+            "results; pass width >= max degree or allow_truncate=True")
     slot = jnp.arange(g.src.shape[0], dtype=jnp.int32) - g.row_offsets[
         jnp.minimum(g.src, n)
     ]
@@ -103,4 +181,5 @@ def ell_from_graph(g, width: int | None = None) -> jnp.ndarray:
     return ell[:n]
 
 
-__all__ = ["neighbor_min_ell", "ell_from_graph", "pad_state", "INF"]
+__all__ = ["neighbor_min_ell", "neighbor_min_ell_batch", "ell_from_graph",
+           "pad_state", "INF"]

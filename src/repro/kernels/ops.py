@@ -40,6 +40,13 @@ def neighbor_min_ell(ell, ranks_p, active_p, block_rows: int = 256):
                                 interpret=not _on_tpu())
 
 
+def neighbor_min_ell_batch(ell, ranks_p, active_p, block_rows: int = 256):
+    """Batched (B, R, W) neighbour-min — per-round hot loop of core.batch."""
+    return _nm.neighbor_min_ell_batch(ell, ranks_p, active_p,
+                                      block_rows=block_rows,
+                                      interpret=not _on_tpu())
+
+
 def _pad_to(x, mult, axis):
     size = x.shape[axis]
     rem = (-size) % mult
@@ -77,4 +84,5 @@ def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
     return out[:, :, :sq0, :]
 
 
-__all__ = ["neighbor_min", "neighbor_min_ell", "flash_attention"]
+__all__ = ["neighbor_min", "neighbor_min_ell", "neighbor_min_ell_batch",
+           "flash_attention"]

@@ -23,6 +23,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map as _shard_map
 from repro.configs.base import ModelConfig
 from .common import Pm, constrain, dense_init, linear
 
@@ -288,7 +289,7 @@ def moe_ep_local(params, x, cfg: ModelConfig, capacity_factor: float,
             y_part = yc.reshape(t_loc, d)
         return jax.lax.psum(y_part, model_ax)
 
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_ax, None), P(None, None),
                   P(model_ax, None, None), P(model_ax, None, None),

@@ -1,0 +1,117 @@
+"""Continuous batching for clustering-as-a-service.
+
+Same slot-based scheduling idiom as :class:`repro.serve.batching.
+ContinuousBatcher` (admit into fixed-capacity slots, run the device program
+over the whole batch, retire finished work), applied to graph queries
+instead of token sequences: incoming graphs are **admitted** into the shape
+bucket their padded ``(R, W)`` size maps to, a bucket **flushes** through
+``correlation_cluster_batch`` the moment it fills ``max_batch`` slots (or on
+``flush_all``), and flushed requests **retire** with their results attached.
+
+Because the device program is jit-cached per bucket shape, a steady request
+stream compiles O(#buckets) programs total no matter how many graphs flow
+through — the clustering analogue of a shape-static decode batch. Empty
+slots at flush time are padded with empty graphs (the standard accelerator
+padding trade, tracked in :class:`ClusterStats.padded_slots`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import correlation_cluster_batch, plan_graph
+from repro.core.api import ClusterResult
+from repro.core.graph import Graph
+
+
+@dataclasses.dataclass
+class ClusterRequest:
+    uid: int
+    graph: Graph
+    key: jax.Array
+    lam: Optional[int] = None
+    result: Optional[ClusterResult] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    submitted: int = 0
+    flushes: int = 0
+    clustered: int = 0
+    padded_slots: int = 0        # empty batch slots padded at flush time
+    pad_vertex_waste: int = 0    # Σ (R − n) over clustered graphs
+    buckets_seen: int = 0        # distinct (R, W) buckets ≈ compiled programs
+
+
+class ClusterBatcher:
+    """Buckets incoming graphs by padded shape and flushes full buckets."""
+
+    def __init__(self, max_batch: int = 64, method: str = "pivot",
+                 eps: float = 2.0, num_samples: int = 1,
+                 use_kernel: bool = False):
+        self.max_batch = max_batch
+        self.method = method
+        self.eps = eps
+        self.num_samples = num_samples
+        self.use_kernel = use_kernel
+        self.buckets: Dict[Tuple[int, int], List[ClusterRequest]] = {}
+        self._bucket_keys_seen: set = set()
+        self.stats = ClusterStats()
+
+    def submit(self, req: ClusterRequest) -> List[ClusterRequest]:
+        """Admit a request; returns the retired batch if its bucket flushed."""
+        plan = plan_graph(req.graph, method=self.method, eps=self.eps,
+                          lam=req.lam)
+        req.lam = plan.lam  # resolved once; the flush reuses it verbatim
+        slot_list = self.buckets.setdefault(plan.bucket, [])
+        slot_list.append(req)
+        self.stats.submitted += 1
+        self._bucket_keys_seen.add(plan.bucket)
+        self.stats.buckets_seen = len(self._bucket_keys_seen)
+        if len(slot_list) >= self.max_batch:
+            return self._flush(plan.bucket)
+        return []
+
+    def _flush(self, bucket: Tuple[int, int]) -> List[ClusterRequest]:
+        reqs = self.buckets.pop(bucket, [])
+        if not reqs:
+            return []
+        results = correlation_cluster_batch(
+            [r.graph for r in reqs],
+            keys=[r.key for r in reqs],
+            method=self.method,
+            eps=self.eps,
+            lams=[r.lam for r in reqs],
+            num_samples=self.num_samples,
+            use_kernel=self.use_kernel,
+        )
+        # The device batch carries num_samples entries per request, padded
+        # to the next power of two (see core.batch._pack_bucket).
+        n_entries = len(reqs) * max(1, self.num_samples)
+        b_pad = 1 << max(0, (n_entries - 1).bit_length())
+        self.stats.flushes += 1
+        self.stats.padded_slots += b_pad - n_entries
+        for req, res in zip(reqs, results):
+            req.result = res
+            req.done = True
+            self.stats.clustered += 1
+            self.stats.pad_vertex_waste += bucket[0] - req.graph.n
+        return reqs
+
+    def flush_all(self) -> List[ClusterRequest]:
+        """Drain every bucket (end of stream / latency deadline)."""
+        retired: List[ClusterRequest] = []
+        for bucket in list(self.buckets):
+            retired.extend(self._flush(bucket))
+        return retired
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self.buckets.values())
+
+
+__all__ = ["ClusterRequest", "ClusterStats", "ClusterBatcher"]

@@ -40,6 +40,55 @@ def test_distributed_capped_api(rng):
     assert res_d.cost == res_s.cost
 
 
+def test_distributed_packed_matches_unpacked(rng):
+    """packed=True (int8 OR-convergecast hit detection) ≡ unpacked engine ≡
+    sequential oracle — the previously untested _dist_mis_program path."""
+    edges, _ = random_arboric(220, 3, rng)
+    g = build_graph(220, edges)
+    ranks = random_permutation_ranks(220, jax.random.PRNGKey(11))
+    lab_p, mis_p, rounds_p = distributed_pivot(g, ranks, packed=True)
+    lab_u, mis_u, rounds_u = distributed_pivot(g, ranks, packed=False)
+    assert (lab_p == lab_u).all()
+    assert (mis_p == mis_u).all()
+    assert rounds_p == rounds_u
+    assert (lab_p == pivot_sequential(g, np.asarray(ranks))).all()
+
+
+@pytest.mark.slow
+def test_distributed_packed_multidevice_subprocess(rng):
+    """int8 OR-convergecast on a real 8-device CPU mesh: the packed
+    collective must stay bit-exact when pmax actually crosses shards."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.core import (build_graph, distributed_pivot,
+                                pivot_sequential, random_permutation_ranks,
+                                edge_shard_mesh)
+        from repro.core.graph import random_arboric
+        rng = np.random.default_rng(3)
+        edges, _ = random_arboric(400, 4, rng)
+        g = build_graph(400, edges)
+        ranks = random_permutation_ranks(400, jax.random.PRNGKey(6))
+        mesh = edge_shard_mesh()
+        assert mesh.devices.size == 8, mesh.devices.size
+        lab_p, _, r_p = distributed_pivot(g, ranks, mesh=mesh, packed=True)
+        lab_u, _, r_u = distributed_pivot(g, ranks, mesh=mesh, packed=False)
+        ref = pivot_sequential(g, np.asarray(ranks))
+        assert (lab_p == lab_u).all(), "packed != unpacked on 8 shards"
+        assert (lab_p == ref).all(), "packed != sequential oracle"
+        assert r_p == r_u
+        print("OK rounds=", r_p)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
+
+
 @pytest.mark.slow
 def test_distributed_eight_devices_subprocess(rng, tmp_path):
     """Bit-equality of the edge-sharded engine across 8 host devices —

@@ -66,6 +66,56 @@ def test_neighbor_min_property(n, seed, frac):
     assert (np.asarray(oracle) == np.asarray(kern)).all()
 
 
+def test_ell_truncation_raises(rng):
+    """Regression: width < max degree used to silently drop neighbours,
+    corrupting the MIS; it must raise unless explicitly allowed."""
+    g = build_graph(32, star(32))                 # hub degree 31
+    with pytest.raises(ValueError, match="width"):
+        ell_from_graph(g, width=4)
+    # explicit opt-in still works (rows beyond width are truncated)
+    ell = ell_from_graph(g, width=4, allow_truncate=True)
+    assert ell.shape == (32, 4)
+    # and a safe width is unchanged behaviour
+    assert ell_from_graph(g, width=31).shape == (32, 31)
+
+
+def test_neighbor_min_batch_matches_single(rng):
+    """Batched (batch, row_block) grid ≡ per-graph kernel on each slice."""
+    B, n = 5, 64
+    ells, rps, aps = [], [], []
+    for i in range(B):
+        edges, _ = random_arboric(n, 3, rng)
+        g = build_graph(n, edges)
+        key = jax.random.PRNGKey(i)
+        ranks = random_permutation_ranks(n, key)
+        active = jax.random.bernoulli(key, 0.5, (n,))
+        ell = ell_from_graph(g, width=16, allow_truncate=g.max_degree() > 16)
+        rp, ap = pad_state(ranks, active)
+        ells.append(ell), rps.append(rp), aps.append(ap)
+    w = max(e.shape[1] for e in ells)
+    ells = [jnp.pad(e, ((0, 0), (0, w - e.shape[1])), constant_values=n)
+            for e in ells]
+    batch_out = ops.neighbor_min_ell_batch(
+        jnp.stack(ells), jnp.stack(rps), jnp.stack(aps))
+    for i in range(B):
+        single = ops.neighbor_min_ell(ells[i], rps[i], aps[i])
+        assert (np.asarray(batch_out[i]) == np.asarray(single)).all()
+
+
+@pytest.mark.parametrize("block_rows", [16, 64, 256])
+def test_neighbor_min_batch_block_sweep(block_rows, rng):
+    edges, _ = random_arboric(100, 2, rng)
+    g = build_graph(100, edges)
+    ranks = random_permutation_ranks(100, jax.random.PRNGKey(2))
+    active = jnp.ones((100,), bool)
+    ell = ell_from_graph(g)
+    rp, ap = pad_state(ranks, active)
+    out = ops.neighbor_min_ell_batch(ell[None], rp[None], ap[None],
+                                     block_rows=block_rows)
+    expect = ref.neighbor_min_ref(ell, rp, ap)
+    assert (np.asarray(out[0]) == np.asarray(expect)).all()
+
+
 # --- flash attention --------------------------------------------------------
 
 SHAPES = [
