@@ -1,0 +1,166 @@
+"""Serving latency/throughput: full-bucket vs deadline flush policies.
+
+The question this answers: what does the ``max_wait`` deadline policy cost
+in throughput, and what does it buy in tail latency? A stream of small
+clustering queries is driven through :class:`ClusterBatcher` twice —
+
+* **full-bucket** — buckets flush only when they fill ``max_batch`` slots
+  (plus the end-of-stream drain). This is the PR 1 behaviour: maximum
+  padding efficiency, but a request whose bucket never fills waits for the
+  entire stream.
+* **deadline** — ``poll()`` after every admit flushes any bucket whose
+  oldest request has waited past ``max_wait``; partial buckets pad to the
+  next power-of-two sub-batch, so the compile budget stays
+  O(#buckets · log max_batch).
+
+Per-request latency = admit → retire on the engine clock. Both passes run
+twice: the first warms the jit caches (the serving steady state), the
+second measures. Results are asserted bit-identical to the per-graph
+engine on a sample of requests.
+
+Run:  PYTHONPATH=src python benchmarks/serve_bench.py \
+          [--graphs 200] [--max-batch 16] [--max-wait 0.05] [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import build_graph, correlation_cluster
+from repro.core.graph import random_arboric
+from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
+
+
+def make_requests(num_graphs: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for uid in range(num_graphs):
+        n = int(rng.integers(8, 96))
+        edges, _ = random_arboric(n, int(rng.integers(1, 4)), rng)
+        reqs.append((uid, build_graph(n, edges)))
+    return reqs
+
+def drive(reqs, max_batch: int, max_wait, num_samples: int,
+          arrival_gap: float = 0.0):
+    """One serving pass; returns (wall_seconds, per-request waits, stats).
+
+    ``arrival_gap`` spaces admissions in time (a Poisson-ish open-loop
+    stream approximated by a fixed gap): with it, a bucket that fills
+    slowly *ages*, which is exactly the situation the deadline policy
+    exists for — the full-bucket policy makes those requests wait for the
+    end-of-stream drain.
+    """
+    batcher = ClusterBatcher(max_batch=max_batch, max_wait=max_wait,
+                             num_samples=num_samples)
+    waits = {}
+
+    def account(done):
+        now = batcher.clock()
+        for r in done:
+            waits[r.uid] = now - r.admitted_at
+
+    t0 = time.perf_counter()
+    for uid, g in reqs:
+        if arrival_gap:
+            time.sleep(arrival_gap)
+        account(batcher.admit(
+            ClusterRequest(uid=uid, graph=g, key=jax.random.PRNGKey(uid))))
+        account(batcher.poll())
+    account(batcher.flush())
+    dt = time.perf_counter() - t0
+    assert len(waits) == len(reqs), "requests lost in the engine"
+    return dt, np.array([waits[uid] for uid, _ in reqs]), batcher.stats
+
+
+def pct(x, q):
+    return float(np.percentile(x, q))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", type=int, default=200)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait", type=float, default=0.05,
+                    help="deadline budget in seconds")
+    ap.add_argument("--num-samples", type=int, default=1)
+    ap.add_argument("--arrival-ms", type=float, default=2.0,
+                    help="inter-arrival gap of the simulated request stream")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: fewer graphs, correctness focus")
+    args = ap.parse_args()
+    n_graphs = 32 if args.smoke else args.graphs
+    # Keep the arrival gap in smoke mode: without it the stream outruns
+    # max_wait, no deadline flush ever fires, and the CI step would not
+    # exercise the partial-flush machinery at all.
+    arrival_gap = args.arrival_ms / 1e3
+
+    reqs = make_requests(n_graphs)
+    print(f"workload: {n_graphs} graphs, max_batch={args.max_batch}, "
+          f"max_wait={args.max_wait * 1e3:.0f}ms, "
+          f"arrival gap={arrival_gap * 1e3:.1f}ms")
+
+    # Warm every pow2 sub-batch program the workload can hit (deadline
+    # flushes run partial buckets, and flush grouping is timing-dependent,
+    # so per-policy warm passes alone leave compile spikes in the tail).
+    warmer = ClusterBatcher(max_batch=args.max_batch,
+                            num_samples=args.num_samples)
+    t0 = time.perf_counter()
+    compiled = warmer.warmup(g for _, g in reqs)
+    print(f"warmup: {compiled} bucket programs compiled in "
+          f"{time.perf_counter() - t0:.1f}s")
+
+    results = {}
+    for label, max_wait in [("full-bucket", None),
+                            ("deadline", args.max_wait)]:
+        drive(reqs, args.max_batch, max_wait, args.num_samples)  # warm pass
+        dt, waits, stats = drive(reqs, args.max_batch, max_wait,
+                                 args.num_samples, arrival_gap=arrival_gap)
+        results[label] = (dt, waits, stats)
+        print(f"[{label:11s}] {n_graphs / dt:8.1f} graphs/s   "
+              f"wait p50={pct(waits, 50) * 1e3:7.1f}ms  "
+              f"p99={pct(waits, 99) * 1e3:7.1f}ms  "
+              f"max={waits.max() * 1e3:7.1f}ms   "
+              f"flushes={stats.flushes} (deadline={stats.deadline_flushes}) "
+              f"padded_slots={stats.padded_slots}")
+        if label == "deadline":
+            assert stats.deadline_flushes > 0, (
+                "deadline policy never fired — the comparison below would "
+                "be two full-bucket runs; raise --arrival-ms or lower "
+                "--max-wait")
+
+    # Bit-exactness spot check against the per-graph engine.
+    sample = reqs[:: max(1, len(reqs) // 8)]
+    batcher = ClusterBatcher(max_batch=args.max_batch,
+                             max_wait=args.max_wait,
+                             num_samples=args.num_samples)
+    done = {}
+    for uid, g in sample:
+        for r in batcher.admit(ClusterRequest(uid=uid, graph=g,
+                                              key=jax.random.PRNGKey(uid))):
+            done[r.uid] = r
+        for r in batcher.poll():
+            done[r.uid] = r
+    for r in batcher.flush():
+        done[r.uid] = r
+    for uid, g in sample:
+        ref = correlation_cluster(g, key=jax.random.PRNGKey(uid),
+                                  num_samples=args.num_samples)
+        assert (done[uid].result.labels == ref.labels).all()
+        assert done[uid].result.cost == ref.cost
+    print(f"bit-exactness: {len(sample)} sampled requests match the "
+          "per-graph engine under the deadline policy")
+
+    dt_full, w_full, _ = results["full-bucket"]
+    dt_dead, w_dead, _ = results["deadline"]
+    print(f"\nsummary: deadline policy holds p99 wait at "
+          f"{pct(w_dead, 99) * 1e3:.1f}ms vs {pct(w_full, 99) * 1e3:.1f}ms "
+          f"full-bucket, at {dt_full / dt_dead * 100:.0f}% of full-bucket "
+          "throughput")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,17 @@
-"""Clustering-as-a-service demo: streaming graphs through ClusterBatcher.
+"""Clustering-as-a-service demo: streaming graphs through the engine API.
 
 Simulates the north-star serving workload — a stream of small similarity
-graphs (per-band near-dup buckets) arriving one at a time. The batcher
-admits each graph into its ``(R, W)`` shape bucket, flushes a bucket the
-moment it fills, and drains the stragglers at end of stream. Every result
-is bit-identical to running ``correlation_cluster`` on that graph alone.
+graphs (per-band near-dup buckets) arriving one at a time — under both
+flush policies of the unified engine:
+
+* **Full-bucket** (throughput mode): a bucket flushes only when it fills
+  ``max_batch`` slots; stragglers wait for the end-of-stream drain.
+* **Deadline** (latency mode): ``max_wait`` bounds how long any request
+  can sit in a partial bucket; ``poll()`` flushes overdue buckets padded
+  to the next power-of-two sub-batch.
+
+Every result is bit-identical to running ``correlation_cluster`` on that
+graph alone, under either policy.
 
 Run:  PYTHONPATH=src python examples/batch_serving.py
 """
@@ -19,36 +26,54 @@ from repro.core.graph import random_arboric
 from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
 
 
-def main():
-    rng = np.random.default_rng(42)
-    batcher = ClusterBatcher(max_batch=16, num_samples=2)
-
-    print("streaming 100 clustering queries (max_batch=16)...")
-    t0 = time.perf_counter()
-    retired = 0
-    for uid in range(100):
+def make_stream(n_requests: int, seed: int = 42):
+    rng = np.random.default_rng(seed)
+    for uid in range(n_requests):
         n = int(rng.integers(8, 64))
         edges, _ = random_arboric(n, int(rng.integers(1, 4)), rng)
-        req = ClusterRequest(uid=uid, graph=build_graph(n, edges),
+        yield ClusterRequest(uid=uid, graph=build_graph(n, edges),
                              key=jax.random.PRNGKey(uid))
-        done = batcher.submit(req)
+
+
+def drive(batcher: ClusterBatcher, n_requests: int, label: str):
+    print(f"\n--- {label} ---")
+    t0 = time.perf_counter()
+    waits, retired = [], 0
+
+    def account(done):
+        nonlocal retired
+        now = batcher.clock()   # same clock base as req.admitted_at
         for r in done:
             retired += 1
+            waits.append(now - r.admitted_at)
             if retired % 25 == 0:
                 print(f"  uid={r.uid:3d} n={r.graph.n:3d} "
                       f"clusters={len(np.unique(r.result.labels)):3d} "
                       f"cost={r.result.cost:4d} "
                       f"bucket={r.result.info['bucket']}")
-    for r in batcher.flush_all():
-        retired += 1
+
+    for req in make_stream(n_requests):
+        account(batcher.admit(req))
+        account(batcher.poll())
+    account(batcher.flush())
     dt = time.perf_counter() - t0
 
     s = batcher.stats
-    print(f"\nserved {retired} queries in {dt:.2f}s "
+    print(f"served {retired} queries in {dt:.2f}s "
           f"({retired / dt:.1f} graphs/s)")
-    print(f"flushes={s.flushes}  buckets_seen={s.buckets_seen}  "
-          f"padded_slots={s.padded_slots}  "
+    print(f"flushes={s.flushes} (deadline={s.deadline_flushes})  "
+          f"buckets_seen={s.buckets_seen}  padded_slots={s.padded_slots}  "
           f"pad_vertex_waste={s.pad_vertex_waste}")
+    print(f"max in-engine wait: {max(waits):.3f}s")
+
+
+def main():
+    n_requests = 100
+    print(f"streaming {n_requests} clustering queries (max_batch=16)...")
+    drive(ClusterBatcher(max_batch=16, num_samples=2),
+          n_requests, "full-bucket policy (throughput mode)")
+    drive(ClusterBatcher(max_batch=16, num_samples=2, max_wait=0.05),
+          n_requests, "deadline policy (max_wait=50ms, bounded tail)")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ Layout:
 
 from .api import ClusterResult, correlation_cluster, correlation_cluster_batch
 from .arboricity import arboricity_bounds, degeneracy_parallel, degeneracy_sequential
-from .batch import GraphPlan, plan_graph
+from .batch import BucketBufferPool, GraphPlan, PackStats, plan_graph
 from .cliques import clique_clustering, connected_components
 from .cost import (
     brute_force_opt,
@@ -50,6 +50,8 @@ __all__ = [
     "correlation_cluster",
     "correlation_cluster_batch",
     "GraphPlan",
+    "PackStats",
+    "BucketBufferPool",
     "plan_graph",
     "Graph",
     "build_graph",

@@ -219,6 +219,95 @@ def dedup_corpus_batched(corpus: Corpus, threshold: float = 0.5,
                        n_edges=len(edges))
 
 
+def dedup_corpus_streaming(corpus: Corpus, threshold: float = 0.5,
+                           num_hashes: int = 64, eps: float = 2.0,
+                           seed: int = 0, num_samples: int = 4,
+                           use_kernel: bool = False, max_batch: int = 32,
+                           max_wait: Optional[float] = None,
+                           batcher=None) -> DedupResult:
+    """Streaming dedup: feed similarity-graph shards through the serving
+    engine incrementally instead of one monolithic batch call.
+
+    Same contract (and bit-identical labels/cost) as
+    :func:`dedup_corpus_batched` — per-shard PRNG keys are a function of the
+    shard index only, so how shards are grouped into flushes cannot change
+    any result. What changes is the *execution discipline*: shards are
+    admitted one at a time into a
+    :class:`repro.serve.cluster_batcher.ClusterBatcher` (full-bucket
+    flushes, plus ``max_wait`` deadline flushes when set) and labels are
+    stitched as requests retire — the shape a production pipeline takes
+    when near-dup groups arrive as a stream rather than a corpus snapshot.
+
+    Pass ``batcher`` to reuse a long-lived engine (and its compiled bucket
+    programs and buffer pool) across corpora.
+    """
+    from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
+
+    sigs = minhash_signatures(corpus.docs, num_hashes=num_hashes, seed=seed)
+    edges = similarity_edges(sigs, threshold=threshold)
+    n = len(corpus.docs)
+    shards = shard_similarity_graph(n, edges)
+
+    if batcher is None:
+        batcher = ClusterBatcher(max_batch=max_batch, eps=eps,
+                                 num_samples=num_samples,
+                                 use_kernel=use_kernel, max_wait=max_wait)
+    else:
+        # A reused engine must actually implement the parameters this call
+        # promises — a mismatch would silently break the bit-identical
+        # contract with dedup_corpus_batched.
+        want = dict(num_samples=max(1, num_samples), eps=eps,
+                    use_kernel=use_kernel, method="pivot")
+        got = dict(num_samples=batcher.num_samples, eps=batcher.eps,
+                   use_kernel=batcher.use_kernel, method=batcher.method)
+        if got != want:
+            raise ValueError(
+                f"reused batcher config {got} does not match the requested "
+                f"dedup parameters {want}")
+    stats0 = dataclasses.replace(batcher.stats)  # delta vs engine lifetime
+
+    labels = np.arange(n, dtype=np.int32)   # isolated docs: singletons
+    total_cost = 0
+    buckets: set = set()
+    shard_ids = {i: ids for i, (ids, _) in enumerate(shards)}
+
+    def stitch(retired) -> None:
+        nonlocal total_cost
+        for req in retired:
+            ids = shard_ids[req.uid]
+            labels[ids] = ids[req.result.labels]   # lift local pivots
+            total_cost += req.result.cost
+            buckets.add(req.result.info["bucket"])
+
+    for i, (ids, local) in enumerate(shards):
+        req = ClusterRequest(uid=i, graph=build_graph(len(ids), local),
+                             key=jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                    i))
+        stitch(batcher.admit(req))
+        stitch(batcher.poll())
+    stitch(batcher.flush())
+
+    keep = np.zeros(n, dtype=bool)
+    seen = set()
+    for i in range(n):
+        if labels[i] not in seen:
+            seen.add(labels[i])
+            keep[i] = True
+    clustering = ClusterResult(
+        labels=labels, cost=total_cost, method="pivot_stream",
+        info={"n_shards": len(shards), "n_buckets": len(buckets),
+              "buckets": sorted(buckets), "num_samples": num_samples,
+              # deltas, so a long-lived reused batcher reports this call's
+              # serving work rather than its lifetime totals
+              "flushes": batcher.stats.flushes - stats0.flushes,
+              "deadline_flushes": (batcher.stats.deadline_flushes
+                                   - stats0.deadline_flushes),
+              "padded_slots": batcher.stats.padded_slots
+              - stats0.padded_slots})
+    return DedupResult(keep=keep, labels=labels, clustering=clustering,
+                       n_edges=len(edges))
+
+
 def dedup_quality(result: DedupResult, corpus: Corpus) -> dict:
     """Planted-cluster recall/precision of the dedup decisions."""
     dup_of = corpus.duplicate_of
@@ -246,5 +335,5 @@ def dedup_quality(result: DedupResult, corpus: Corpus) -> dict:
 
 
 __all__ = ["minhash_signatures", "similarity_edges", "DedupResult",
-           "dedup_corpus", "dedup_corpus_batched", "shard_similarity_graph",
-           "dedup_quality"]
+           "dedup_corpus", "dedup_corpus_batched", "dedup_corpus_streaming",
+           "shard_similarity_graph", "dedup_quality"]

@@ -133,6 +133,62 @@ def neighbor_min_ell_batch(ell: jnp.ndarray, ranks: jnp.ndarray,
     return out
 
 
+def _kernel_agree_batch(ell_ref, labels_full_ref, labels_rows_ref, out_ref):
+    """Per-(graph, row-block) program of the batched cost reduction.
+
+    Counts, for every vertex of the row block, how many of its ELL
+    neighbours carry the same cluster label. The eligible-induced ELL holds
+    both directions of every kept undirected edge, so summing this output
+    over rows yields ``2 · intra_pos`` — the quantity the fused batch
+    program combines with cluster sizes into the disagreement cost. Pad
+    entries point at slot R whose label is the -1 sentinel (never a real
+    label), so they contribute nothing.
+    """
+    cols = ell_ref[0]                         # (RB, W) int32
+    labels = labels_full_ref[0]               # (R+1,) int32, slot R = -1
+    own = labels_rows_ref[0]                  # (RB,) int32
+    nbr = jnp.take(labels, cols, axis=0, fill_value=-1)
+    same = (nbr == own[:, None]).astype(jnp.int32)
+    out_ref[0] = jnp.sum(same, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def label_agree_ell_batch(ell: jnp.ndarray, labels_p: jnp.ndarray,
+                          block_rows: int = 256, interpret: bool = True
+                          ) -> jnp.ndarray:
+    """Batched same-label neighbour count over shape-bucketed ELL tensors.
+
+    The device cost pass of ``core.batch``: one ``(batch, row_block)`` grid
+    program computes per-vertex agreement counts for every graph of a
+    bucket, mirroring :func:`neighbor_min_ell_batch`'s layout so the cost
+    reduction rides the same VMEM staging as the round loop.
+
+    Args:
+      ell: (B, R, W) int32 neighbour ids; pad entries == R.
+      labels_p: (B, R+1) int32 cluster labels; slot R holds the -1 sentinel.
+    Returns (B, R) int32 per-vertex same-label neighbour counts.
+    """
+    b, n_rows, w = ell.shape
+    rb = min(block_rows, n_rows)
+    n_blocks = pl.cdiv(n_rows, rb)
+    state_w = labels_p.shape[1]
+    labels_rows = labels_p[:, :n_rows]
+
+    out = pl.pallas_call(
+        _kernel_agree_batch,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, rb, w), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, state_w), lambda bi, i: (bi, 0)),
+            pl.BlockSpec((1, rb), lambda bi, i: (bi, i)),
+        ],
+        out_specs=pl.BlockSpec((1, rb), lambda bi, i: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_rows), jnp.int32),
+        interpret=interpret,
+    )(ell, labels_p, labels_rows)
+    return out
+
+
 def pad_state(ranks: jnp.ndarray, active: jnp.ndarray):
     """Append the INF/inactive pad slot (ELL pad entries point at it)."""
     ranks_p = jnp.concatenate([ranks, jnp.array([INF], jnp.int32)])
@@ -181,5 +237,5 @@ def ell_from_graph(g, width: int | None = None,
     return ell[:n]
 
 
-__all__ = ["neighbor_min_ell", "neighbor_min_ell_batch", "ell_from_graph",
-           "pad_state", "INF"]
+__all__ = ["neighbor_min_ell", "neighbor_min_ell_batch",
+           "label_agree_ell_batch", "ell_from_graph", "pad_state", "INF"]

@@ -47,6 +47,13 @@ def neighbor_min_ell_batch(ell, ranks_p, active_p, block_rows: int = 256):
                                       interpret=not _on_tpu())
 
 
+def label_agree_ell_batch(ell, labels_p, block_rows: int = 256):
+    """Batched (B, R, W) same-label neighbour count — the device cost pass
+    of core.batch (2·intra_pos when summed per graph)."""
+    return _nm.label_agree_ell_batch(ell, labels_p, block_rows=block_rows,
+                                     interpret=not _on_tpu())
+
+
 def _pad_to(x, mult, axis):
     size = x.shape[axis]
     rem = (-size) % mult
@@ -85,4 +92,4 @@ def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
 
 
 __all__ = ["neighbor_min", "neighbor_min_ell", "neighbor_min_ell_batch",
-           "flash_attention"]
+           "label_agree_ell_batch", "flash_attention"]

@@ -7,21 +7,26 @@ shape-static, the decode step always runs the full slot batch with a
 per-slot ``active`` mask; empty slots simply decode garbage that is never
 emitted (the standard padding trade on accelerators).
 
-Positions are tracked per slot; the decode kernel uses a scalar step index
-per call with per-slot masking via position arrays (see ``_mask_logits``).
-This module is deliberately host-side Python: the device-side work is only
-``prefill`` and ``decode_step``, everything else is queue management.
+This is the token path of the unified serving API: it implements the same
+:class:`repro.serve.engine.ClusterEngine` protocol (``admit`` / ``flush`` /
+``retire`` / ``stats`` / ``pending``) as the clustering path, so one outer
+loop (``engine.serve_all``) can drive either. Positions are tracked per
+slot; the decode kernel uses a scalar step index per call with per-slot
+masking via position arrays. This module is deliberately host-side Python:
+the device-side work is only ``prefill`` and ``decode_step``, everything
+else is queue management.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .engine import EngineStats
 
 
 @dataclasses.dataclass
@@ -34,7 +39,7 @@ class Request:
 
 
 @dataclasses.dataclass
-class ServeStats:
+class ServeStats(EngineStats):
     prefills: int = 0
     decode_steps: int = 0
     emitted_tokens: int = 0
@@ -62,10 +67,50 @@ class ContinuousBatcher:
         self.slot_caches: List = [None] * max_slots
         self.slot_pos: np.ndarray = np.zeros(max_slots, np.int32)
         self.slot_last: np.ndarray = np.zeros(max_slots, np.int32)
+        self._finished: Deque[Request] = deque()
         self.stats = ServeStats()
 
-    def submit(self, req: Request):
+    # -- ClusterEngine protocol ------------------------------------------
+
+    def admit(self, req: Request) -> List[Request]:
+        """Queue a request and prefill it into a free slot if one exists.
+
+        A request can retire at admission: prefill emits the first token,
+        which may already hit EOS or satisfy ``max_new_tokens`` — retiring
+        here (not after the next decode tick) keeps such requests from
+        decoding one garbage token past their stop condition.
+        """
         self.queue.append(req)
+        self.stats.submitted += 1
+        self._admit()
+        self._retire()
+        return self.retire()
+
+    def flush(self, max_ticks: int = 10_000) -> List[Request]:
+        """Decode until every admitted request finishes (or tick budget)."""
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.slots)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.retire()
+
+    def retire(self) -> List[Request]:
+        """Drain finished requests not yet handed back to the caller."""
+        out = list(self._finished)
+        self._finished.clear()
+        return out
+
+    def pending(self) -> int:
+        return len(self.queue) + sum(r is not None for r in self.slots)
+
+    # -- Scheduler internals ----------------------------------------------
+
+    def submit(self, req: Request):
+        """Deprecated alias for :meth:`admit` (prefills into a free slot
+        immediately, like admit — device work moved from the first ``step``
+        to submission time)."""
+        self.admit(req)
 
     def _admit(self):
         for i in range(self.max_slots):
@@ -94,10 +139,18 @@ class ContinuousBatcher:
                 req.done = True
                 self.slots[i] = None
                 self.slot_caches[i] = None
+                self._finished.append(req)
+                self.stats.retired += 1
 
     def step(self):
-        """One scheduler tick: admit → decode all active slots → retire."""
+        """One scheduler tick: admit → decode all active slots → retire.
+
+        Retire runs immediately after admit as well: a request whose
+        prefill token already ends it (EOS / max_new_tokens=1) must free
+        its slot before the decode pass, not emit one token past the stop.
+        """
         self._admit()
+        self._retire()
         active = [i for i in range(self.max_slots) if self.slots[i] is not None]
         if not active:
             return False
@@ -119,12 +172,8 @@ class ContinuousBatcher:
         return True
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        ticks = 0
-        while (self.queue or any(self.slots)) and ticks < max_ticks:
-            self.step()
-            ticks += 1
-        return finished
+        """Drive the loop to completion; returns the finished requests."""
+        return self.flush(max_ticks=max_ticks)
 
 
 __all__ = ["Request", "ContinuousBatcher", "ServeStats"]

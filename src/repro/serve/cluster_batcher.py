@@ -1,31 +1,52 @@
-"""Continuous batching for clustering-as-a-service.
+"""Continuous batching for clustering-as-a-service, with deadline flushes.
 
-Same slot-based scheduling idiom as :class:`repro.serve.batching.
-ContinuousBatcher` (admit into fixed-capacity slots, run the device program
-over the whole batch, retire finished work), applied to graph queries
-instead of token sequences: incoming graphs are **admitted** into the shape
-bucket their padded ``(R, W)`` size maps to, a bucket **flushes** through
-``correlation_cluster_batch`` the moment it fills ``max_batch`` slots (or on
-``flush_all``), and flushed requests **retire** with their results attached.
+Implements the :class:`repro.serve.engine.ClusterEngine` protocol for graph
+queries: incoming graphs are **admitted** into the shape bucket their padded
+``(R, W)`` size maps to, a bucket **flushes** through
+``correlation_cluster_batch`` the moment it fills ``max_batch`` slots — or,
+under the deadline policy, as soon as its oldest request has waited
+``max_wait`` seconds — and flushed requests **retire** with their results
+attached.
+
+Deadline policy (bounded tail latency)
+  A full-bucket-only policy gives great throughput but unbounded latency: a
+  request whose bucket never fills waits until end of stream. With
+  ``max_wait`` set, :meth:`ClusterBatcher.poll` flushes any bucket whose
+  oldest request is past its budget as a *partial* flush. The packer pads
+  the partial batch to the next power-of-two sub-batch, so the jit cache
+  stays **O(#buckets · log max_batch)** — latency is bounded without
+  per-size recompiles. Padding actually performed on the device is reported
+  by the packer itself (``PackStats``), so :class:`ClusterStats` can never
+  drift from what ran.
+
+Buffer reuse
+  All flushes route through one :class:`repro.core.batch.BucketBufferPool`:
+  host staging arrays per bucket shape are refilled in place and the device
+  program runs with donated inputs, so steady-state serving keeps
+  O(#buckets) persistent buffers.
 
 Because the device program is jit-cached per bucket shape, a steady request
-stream compiles O(#buckets) programs total no matter how many graphs flow
-through — the clustering analogue of a shape-static decode batch. Empty
-slots at flush time are padded with empty graphs (the standard accelerator
-padding trade, tracked in :class:`ClusterStats.padded_slots`).
+stream compiles O(#buckets · log B) programs total no matter how many
+graphs flow through — the clustering analogue of a shape-static decode
+batch.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import correlation_cluster_batch, plan_graph
+from repro.core import BucketBufferPool, correlation_cluster_batch, plan_graph
 from repro.core.api import ClusterResult
 from repro.core.graph import Graph
+
+from .engine import EngineStats
 
 
 @dataclasses.dataclass
@@ -36,52 +57,170 @@ class ClusterRequest:
     lam: Optional[int] = None
     result: Optional[ClusterResult] = None
     done: bool = False
+    admitted_at: Optional[float] = None     # engine clock time of admission
 
 
 @dataclasses.dataclass
-class ClusterStats:
-    submitted: int = 0
+class ClusterStats(EngineStats):
     flushes: int = 0
+    deadline_flushes: int = 0    # partial flushes forced by max_wait
     clustered: int = 0
-    padded_slots: int = 0        # empty batch slots padded at flush time
+    padded_slots: int = 0        # empty device entries, from the packer
     pad_vertex_waste: int = 0    # Σ (R − n) over clustered graphs
-    buckets_seen: int = 0        # distinct (R, W) buckets ≈ compiled programs
+    buckets_seen: int = 0        # distinct (R, W) buckets admitted
 
 
 class ClusterBatcher:
-    """Buckets incoming graphs by padded shape and flushes full buckets."""
+    """Bucketed clustering engine: full-bucket flushes + deadline flushes.
+
+    Implements the :class:`~repro.serve.engine.ClusterEngine` protocol
+    (``admit`` / ``flush`` / ``retire`` / ``stats`` / ``pending``), plus
+    :meth:`poll` for the ``max_wait`` deadline policy.
+
+    Args:
+      max_batch: bucket capacity; a bucket flushes when it holds this many
+        requests.
+      max_wait: optional deadline in seconds (engine-clock): ``poll()``
+        flushes any bucket whose oldest request has waited longer, padded
+        to the next power-of-two sub-batch. ``None`` = full buckets only.
+      clock: the engine clock (monotonic seconds). Injectable so tests and
+        simulators can drive virtual time.
+      num_samples: best-of-k PIVOT per request (``< 1`` is coerced to 1;
+        the engine itself rejects invalid values).
+      pool: buffer pool shared by all flushes (created if omitted).
+    """
 
     def __init__(self, max_batch: int = 64, method: str = "pivot",
                  eps: float = 2.0, num_samples: int = 1,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 max_wait: Optional[float] = None,
+                 clock=time.monotonic,
+                 pool: Optional[BucketBufferPool] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait is not None and max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {max_wait}")
         self.max_batch = max_batch
         self.method = method
         self.eps = eps
-        self.num_samples = num_samples
+        self.num_samples = max(1, num_samples)
         self.use_kernel = use_kernel
+        self.max_wait = max_wait
+        self.clock = clock
+        self.pool = pool if pool is not None else BucketBufferPool()
         self.buckets: Dict[Tuple[int, int], List[ClusterRequest]] = {}
         self._bucket_keys_seen: set = set()
+        self._retired: Deque[ClusterRequest] = deque()
         self.stats = ClusterStats()
 
-    def submit(self, req: ClusterRequest) -> List[ClusterRequest]:
-        """Admit a request; returns the retired batch if its bucket flushed."""
+    # -- ClusterEngine protocol ------------------------------------------
+
+    def admit(self, req: ClusterRequest,
+              now: Optional[float] = None) -> List[ClusterRequest]:
+        """Admit a request; returns the retired batch if its bucket flushed.
+
+        Shape/width validation happens here (``plan_graph`` raises for
+        graphs exceeding the largest supported bucket) so a bad request
+        fails at admission, not inside a later batched flush.
+        """
         plan = plan_graph(req.graph, method=self.method, eps=self.eps,
                           lam=req.lam)
         req.lam = plan.lam  # resolved once; the flush reuses it verbatim
+        req.admitted_at = self.clock() if now is None else now
         slot_list = self.buckets.setdefault(plan.bucket, [])
         slot_list.append(req)
         self.stats.submitted += 1
         self._bucket_keys_seen.add(plan.bucket)
         self.stats.buckets_seen = len(self._bucket_keys_seen)
         if len(slot_list) >= self.max_batch:
-            return self._flush(plan.bucket)
-        return []
+            self._flush(plan.bucket)
+        return self.retire()
 
-    def _flush(self, bucket: Tuple[int, int]) -> List[ClusterRequest]:
+    def flush(self) -> List[ClusterRequest]:
+        """Drain every bucket (end of stream), full or partial."""
+        for bucket in list(self.buckets):
+            self._flush(bucket)
+        return self.retire()
+
+    def retire(self) -> List[ClusterRequest]:
+        """Drain finished requests not yet handed back to the caller."""
+        out = list(self._retired)
+        self._retired.clear()
+        return out
+
+    def pending(self) -> int:
+        return sum(len(v) for v in self.buckets.values())
+
+    # -- Deadline policy --------------------------------------------------
+
+    def poll(self, now: Optional[float] = None) -> List[ClusterRequest]:
+        """Flush buckets whose oldest request has waited past ``max_wait``.
+
+        A no-op without a deadline configured. Partial buckets are padded
+        to the next power-of-two sub-batch by the packer, so deadline
+        flushes stay within the O(#buckets · log B) compile budget.
+        """
+        if self.max_wait is None:
+            return []
+        now = self.clock() if now is None else now
+        for bucket, reqs in list(self.buckets.items()):
+            if reqs and now - reqs[0].admitted_at >= self.max_wait:
+                self._flush(bucket, deadline=True)
+        return self.retire()
+
+    def oldest_wait(self, now: Optional[float] = None) -> float:
+        """Age of the oldest pending request (0.0 when idle)."""
+        now = self.clock() if now is None else now
+        ages = [now - reqs[0].admitted_at
+                for reqs in self.buckets.values() if reqs]
+        return max(ages, default=0.0)
+
+    def warmup(self, graphs) -> int:
+        """Precompile every pow2 sub-batch program the workload can hit.
+
+        Deadline flushes run partial buckets at power-of-two sub-batch
+        sizes, so a cold engine pays a jit compile the first time each
+        ``(G_pad, R, W)`` shape appears — a latency spike exactly where the
+        deadline policy promises a bound. JetStream warms its prefill
+        buckets ahead of serving for the same reason. Given sample graphs
+        covering the expected shape buckets, this compiles all
+        ``log2(max_batch)+1`` sub-batch programs per bucket up front (via
+        zero-filled dummy tensors; nothing is returned to callers).
+        Returns the number of programs compiled.
+        """
+        from repro.core.batch import program_cache_size, run_bucket_program
+        from repro.util import next_pow2
+
+        before = program_cache_size()
+        k = self.num_samples
+        seen = set()
+        for g in graphs:
+            bucket = plan_graph(g, method=self.method, eps=self.eps).bucket
+            if bucket in seen:
+                continue
+            seen.add(bucket)
+            R, W = bucket
+            g_pad = 1
+            while g_pad <= next_pow2(self.max_batch):
+                b = g_pad * k
+                ell = jnp.full((b, R, W), R, dtype=jnp.int32)
+                ranks = jnp.full((b, R + 1), np.iinfo(np.int32).max,
+                                 dtype=jnp.int32)
+                elig = jnp.zeros((b, R + 1), dtype=bool)
+                m = jnp.zeros((b,), dtype=jnp.int32)
+                jax.block_until_ready(run_bucket_program(
+                    ell, ranks, elig, m, k=k, use_kernel=self.use_kernel,
+                    donate=self.pool.donate))
+                g_pad *= 2
+        return program_cache_size() - before
+
+    # -- Internals ---------------------------------------------------------
+
+    def _flush(self, bucket: Tuple[int, int], deadline: bool = False) -> None:
         reqs = self.buckets.pop(bucket, [])
         if not reqs:
-            return []
-        results = correlation_cluster_batch(
+            return
+        results, pack = correlation_cluster_batch(
             [r.graph for r in reqs],
             keys=[r.key for r in reqs],
             method=self.method,
@@ -89,29 +228,31 @@ class ClusterBatcher:
             lams=[r.lam for r in reqs],
             num_samples=self.num_samples,
             use_kernel=self.use_kernel,
+            pool=self.pool,
+            with_stats=True,
         )
-        # The device batch carries num_samples entries per request, padded
-        # to the next power of two (see core.batch._pack_bucket).
-        n_entries = len(reqs) * max(1, self.num_samples)
-        b_pad = 1 << max(0, (n_entries - 1).bit_length())
         self.stats.flushes += 1
-        self.stats.padded_slots += b_pad - n_entries
+        if deadline:
+            self.stats.deadline_flushes += 1
+        # Pad accounting straight from the packer — no re-derivation here.
+        self.stats.padded_slots += pack.padded_entries
+        self.stats.pad_vertex_waste += pack.pad_vertex_waste
         for req, res in zip(reqs, results):
             req.result = res
             req.done = True
             self.stats.clustered += 1
-            self.stats.pad_vertex_waste += bucket[0] - req.graph.n
-        return reqs
+            self.stats.retired += 1
+            self._retired.append(req)
+
+    # -- Back-compat aliases (pre-engine API) ------------------------------
+
+    def submit(self, req: ClusterRequest) -> List[ClusterRequest]:
+        """Deprecated alias for :meth:`admit`."""
+        return self.admit(req)
 
     def flush_all(self) -> List[ClusterRequest]:
-        """Drain every bucket (end of stream / latency deadline)."""
-        retired: List[ClusterRequest] = []
-        for bucket in list(self.buckets):
-            retired.extend(self._flush(bucket))
-        return retired
-
-    def pending(self) -> int:
-        return sum(len(v) for v in self.buckets.values())
+        """Deprecated alias for :meth:`flush`."""
+        return self.flush()
 
 
 __all__ = ["ClusterRequest", "ClusterStats", "ClusterBatcher"]

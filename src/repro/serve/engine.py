@@ -1,0 +1,91 @@
+"""Unified serving-engine protocol: admit / flush / retire / stats.
+
+JetStream structures its serving stack around a small engine API that an
+outer scheduling loop drives (``prefill`` / ``generate`` / ``insert`` over
+shape-static device programs); vLLM's continuous batching is the same idea
+with slots. This module distils the discipline both of this repo's serving
+paths share into one :class:`ClusterEngine` protocol so the token path
+(:class:`repro.serve.batching.ContinuousBatcher`) and the clustering path
+(:class:`repro.serve.cluster_batcher.ClusterBatcher`) stop duplicating
+queue/retire bookkeeping and can be driven by the same outer loop:
+
+* ``admit(request)`` — hand one request to the engine. The engine may run
+  device work immediately (a bucket filled, a slot freed) and returns any
+  requests that *retired* as a direct consequence; otherwise ``[]``.
+* ``flush()`` — force pending work through the device: drain partially
+  filled buckets / decode remaining slots. Returns the retired requests.
+  Engines with a deadline policy also expose ``poll(now)`` to flush only
+  what has waited past its budget.
+* ``retire()`` — drain the finished-request queue without running device
+  work (requests completed by earlier ``admit``/``flush`` calls that the
+  caller has not collected yet).
+* ``pending()`` — number of admitted-but-unfinished requests.
+* ``stats`` — an :class:`EngineStats` (or subclass) attribute with at
+  least ``submitted``/``retired`` counters.
+
+The protocol is structural (``typing.Protocol``): anything with these
+members can be scheduled, no inheritance required. ``serve_all`` is the
+reference outer loop — admit a stream, poll deadlines, drain at the end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, List, Protocol, runtime_checkable
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Counters every serving engine keeps; subclasses add path-specific
+    fields (padding accounting, decode-step counts, ...)."""
+
+    submitted: int = 0
+    retired: int = 0
+
+
+@runtime_checkable
+class ClusterEngine(Protocol):
+    """Structural protocol for slot/bucket serving engines (see module doc)."""
+
+    stats: Any
+
+    def admit(self, request: Any) -> List[Any]:
+        """Admit one request; returns requests retired as a side effect."""
+        ...
+
+    def flush(self) -> List[Any]:
+        """Force all pending work through the device; returns retired."""
+        ...
+
+    def retire(self) -> List[Any]:
+        """Drain already-finished requests without running device work."""
+        ...
+
+    def pending(self) -> int:
+        """Admitted-but-unfinished request count."""
+        ...
+
+
+def serve_all(engine: ClusterEngine, requests: Iterable[Any]) -> List[Any]:
+    """Reference outer loop: admit a request stream, then drain the engine.
+
+    Engines with a deadline policy are polled after every admit (so a
+    ``max_wait`` budget is honoured mid-stream, not only at end of stream).
+    Time is always the *engine's own* clock — inject a virtual clock into
+    the engine (``ClusterBatcher(clock=...)``) for simulations; a second
+    clock here could disagree with the ``admitted_at`` stamps and silently
+    disable the deadline. Returns every retired request, in retirement
+    order — each request exactly once.
+    """
+    retired: List[Any] = []
+    poll = getattr(engine, "poll", None)
+    for req in requests:
+        retired.extend(engine.admit(req))
+        if poll is not None:
+            retired.extend(poll())
+    retired.extend(engine.flush())
+    retired.extend(engine.retire())
+    return retired
+
+
+__all__ = ["EngineStats", "ClusterEngine", "serve_all"]

@@ -1,0 +1,22 @@
+"""Small shared utilities used across core / serve / kernels.
+
+Kept dependency-free (stdlib only) so every layer can import it without
+cycles — ``core.batch`` packs device tensors with it and the serving layer
+uses it for slot accounting.
+"""
+
+from __future__ import annotations
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= max(1, x) (``next_pow2(0) == 1``).
+
+    The single source of truth for every power-of-two padding decision in
+    the batch engine and the serving layer: bucket rows/width, batch-axis
+    sub-batches, and the pad accounting derived from them. Keeping one
+    helper means the packer and the schedulers can never round differently.
+    """
+    return 1 << max(0, int(x) - 1).bit_length()
+
+
+__all__ = ["next_pow2"]

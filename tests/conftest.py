@@ -10,6 +10,15 @@ neighbours) with deterministic seeded sampling: each ``@given`` test runs
 ``max_examples`` times over examples drawn from a per-test RNG seeded by the
 test's qualified name, so runs are reproducible across processes. Install
 ``requirements-dev.txt`` to get the real shrinking/coverage behaviour.
+
+And a per-test **watchdog timeout**: a hung device program (e.g. a
+``lax.while_loop`` whose cond never flips) executes in C++ and never returns
+to Python, so a SIGALRM-style in-process timeout can't fire — the suite
+would stall until the CI job limit. When the real ``pytest-timeout`` plugin
+is installed (``requirements-dev.txt``) it handles this via its ``thread``
+method; otherwise a minimal stand-in below honours the same ``timeout`` ini
+key: a watchdog thread dumps all stacks (``faulthandler``) and hard-exits
+the process so the failure is visible in seconds, not hours.
 """
 
 import functools
@@ -19,6 +28,12 @@ import types
 
 import numpy as np
 import pytest
+
+try:
+    import pytest_timeout  # noqa: F401
+    _HAS_TIMEOUT_PLUGIN = True
+except ImportError:  # pragma: no cover - depends on environment
+    _HAS_TIMEOUT_PLUGIN = False
 
 
 def _install_hypothesis_stub():
@@ -99,6 +114,55 @@ except ImportError:  # pragma: no cover - depends on environment
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def pytest_addoption(parser):
+    if not _HAS_TIMEOUT_PLUGIN:
+        # Register the same ini keys pytest-timeout owns, so pytest.ini
+        # parses cleanly with or without the plugin installed.
+        parser.addini("timeout", "per-test watchdog timeout in seconds "
+                                 "(pytest-timeout stand-in)", default="0")
+        parser.addini("timeout_method", "accepted for pytest-timeout "
+                                        "compatibility; the stand-in always "
+                                        "uses a watchdog thread",
+                      default="thread")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_protocol(item, nextitem):
+    if _HAS_TIMEOUT_PLUGIN:
+        yield
+        return
+    try:
+        timeout = float(item.config.getini("timeout") or 0)
+    except (TypeError, ValueError):
+        timeout = 0.0
+    if timeout <= 0:
+        yield
+        return
+    import faulthandler
+    import os
+    import threading
+
+    done = threading.Event()
+
+    def watchdog():
+        if not done.wait(timeout):
+            sys.stderr.write(
+                f"\n+++ watchdog: {item.nodeid} exceeded {timeout:.0f}s "
+                "(hung device program?) — dumping stacks, aborting run +++\n")
+            faulthandler.dump_traceback()
+            sys.stderr.flush()
+            os._exit(71)
+
+    thread = threading.Thread(target=watchdog, daemon=True,
+                              name=f"watchdog:{item.name}")
+    thread.start()
+    try:
+        yield
+    finally:
+        done.set()
+        thread.join(timeout=1.0)
 
 
 def pytest_configure(config):
