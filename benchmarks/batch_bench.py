@@ -5,20 +5,28 @@ queries of assorted shapes (near-dup buckets, LSH bands, per-shard
 similarity graphs). The per-graph engine retraces/recompiles its while-loop
 for every new ``(n, m)`` shape; the batch engine compiles one program per
 ``(B, R, W)`` shape bucket and amortizes it over every graph that ever
-lands in the bucket.
+lands in the bucket. ``--executor`` picks how buckets reach the device:
+``sync`` (block per bucket), ``async`` (all buckets dispatched before any
+harvest — packing overlaps device execution), ``sharded`` (each bucket
+data-parallel across all local devices).
 
-Run:  PYTHONPATH=src python benchmarks/batch_bench.py [--graphs 96] [--repeat 3]
+Run:  PYTHONPATH=src python benchmarks/batch_bench.py \
+          [--graphs 96] [--repeat 3] [--executor sync] [--json BENCH_batch.json]
 
-Reported:
+Reported (and written machine-readably to ``--json`` for cross-PR perf
+tracking):
   * graphs/sec of the per-graph ``correlation_cluster`` loop
   * graphs/sec of ``correlation_cluster_batch`` (same graphs, same keys —
     output is bit-identical, which is also asserted)
-  * compile counts: per-graph MIS programs vs batch bucket programs
+  * p50/p99 over the steady-state repeats
+  * compile counts: per-graph MIS programs vs batch bucket programs, plus
+    the bounded program-cache state (size/capacity/evictions)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -26,6 +34,7 @@ import numpy as np
 
 from repro.core import build_graph, correlation_cluster, correlation_cluster_batch
 from repro.core import batch as batch_mod
+from repro.core import make_executor, program_cache_info
 from repro.core.graph import random_arboric
 from repro.core.mis import _greedy_mis_parallel_impl
 
@@ -51,9 +60,10 @@ def bench_loop(graphs, keys, lams):
     return time.perf_counter() - t0, results
 
 
-def bench_batch(graphs, keys, lams):
+def bench_batch(graphs, keys, lams, executor):
     t0 = time.perf_counter()
-    results = correlation_cluster_batch(graphs, keys=keys, lams=lams)
+    results = correlation_cluster_batch(graphs, keys=keys, lams=lams,
+                                        executor=executor)
     return time.perf_counter() - t0, results
 
 
@@ -62,10 +72,16 @@ def main():
     ap.add_argument("--graphs", type=int, default=96)
     ap.add_argument("--repeat", type=int, default=3,
                     help="steady-state repeats after the cold pass")
+    ap.add_argument("--executor", choices=["sync", "async", "sharded"],
+                    default="sync")
+    ap.add_argument("--json", default="BENCH_batch.json",
+                    help="machine-readable results path ('' to skip)")
     args = ap.parse_args()
 
     graphs, keys, lams = make_workload(args.graphs)
     n_graphs = len(graphs)
+    # One executor instance across passes — what a serving process would do.
+    executor = make_executor(args.executor)
 
     # --- cold pass: fresh shapes, compiles included (the serving scenario) --
     mis_cache0 = int(_greedy_mis_parallel_impl._cache_size())
@@ -73,7 +89,7 @@ def main():
     mis_compiles = int(_greedy_mis_parallel_impl._cache_size()) - mis_cache0
 
     batch_cache0 = batch_mod.program_cache_size()
-    t_batch, batch_res = bench_batch(graphs, keys, lams)
+    t_batch, batch_res = bench_batch(graphs, keys, lams, executor)
     batch_compiles = batch_mod.program_cache_size() - batch_cache0
     buckets = sorted({r.info["bucket"] for r in batch_res})
 
@@ -81,7 +97,8 @@ def main():
         assert (a.labels == b.labels).all() and a.cost == b.cost, \
             "batch output diverged from the per-graph engine"
 
-    print(f"workload: {n_graphs} graphs, {len(buckets)} buckets {buckets}")
+    print(f"workload: {n_graphs} graphs, {len(buckets)} buckets {buckets}, "
+          f"executor={args.executor}")
     print(f"[cold]   per-graph loop: {t_loop:8.2f}s  "
           f"{n_graphs / t_loop:8.1f} graphs/s  "
           f"({mis_compiles} MIS compiles)")
@@ -93,10 +110,11 @@ def main():
           "(graphs-shapes vs buckets)")
 
     # --- steady state: every shape already compiled --------------------------
-    t_loop_w = min(bench_loop(graphs, keys, lams)[0]
-                   for _ in range(args.repeat))
-    t_batch_w = min(bench_batch(graphs, keys, lams)[0]
-                    for _ in range(args.repeat))
+    loop_times = [bench_loop(graphs, keys, lams)[0]
+                  for _ in range(args.repeat)]
+    batch_times = [bench_batch(graphs, keys, lams, executor)[0]
+                   for _ in range(args.repeat)]
+    t_loop_w, t_batch_w = min(loop_times), min(batch_times)
     print(f"[steady] per-graph loop: {t_loop_w:8.2f}s  "
           f"{n_graphs / t_loop_w:8.1f} graphs/s")
     print(f"[steady] batch engine:   {t_batch_w:8.2f}s  "
@@ -105,6 +123,34 @@ def main():
 
     assert batch_compiles <= len(buckets) + 1, (
         "bucket contract violated: compiles must track buckets, not graphs")
+
+    if args.json:
+        payload = {
+            "bench": "batch",
+            "executor": args.executor,
+            "n_graphs": n_graphs,
+            "n_buckets": len(buckets),
+            "cold": {
+                "loop_s": t_loop,
+                "batch_s": t_batch,
+                "loop_gps": n_graphs / t_loop,
+                "batch_gps": n_graphs / t_batch,
+                "speedup": t_loop / t_batch,
+                "mis_compiles": mis_compiles,
+                "batch_compiles": batch_compiles,
+            },
+            "steady": {
+                "loop_gps": n_graphs / t_loop_w,
+                "batch_gps": n_graphs / t_batch_w,
+                "speedup": t_loop_w / t_batch_w,
+                "batch_s_p50": float(np.percentile(batch_times, 50)),
+                "batch_s_p99": float(np.percentile(batch_times, 99)),
+            },
+            "program_cache": program_cache_info(),
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

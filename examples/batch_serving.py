@@ -10,8 +10,16 @@ flush policies of the unified engine:
   can sit in a partial bucket; ``poll()`` flushes overdue buckets padded
   to the next power-of-two sub-batch.
 
+and then under the **async executor** (pipelined mode): flushes are
+dispatched without blocking, so the engine packs the next bucket while the
+previous one computes on device — completed flushes are harvested on later
+``admit``/``poll``/``flush`` calls. ``max_in_flight`` bounds how many
+flushes may be outstanding; at the bound, ``admit`` raises
+``AdmissionRejected`` (here the demo just drains and retries — a real
+front-end would shed load).
+
 Every result is bit-identical to running ``correlation_cluster`` on that
-graph alone, under either policy.
+graph alone, under every policy and executor.
 
 Run:  PYTHONPATH=src python examples/batch_serving.py
 """
@@ -23,7 +31,11 @@ import numpy as np
 
 from repro.core import build_graph
 from repro.core.graph import random_arboric
-from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
+from repro.serve.cluster_batcher import (
+    AdmissionRejected,
+    ClusterBatcher,
+    ClusterRequest,
+)
 
 
 def make_stream(n_requests: int, seed: int = 42):
@@ -53,7 +65,17 @@ def drive(batcher: ClusterBatcher, n_requests: int, label: str):
                       f"bucket={r.result.info['bucket']}")
 
     for req in make_stream(n_requests):
-        account(batcher.admit(req))
+        while True:
+            try:
+                account(batcher.admit(req))
+                break
+            except AdmissionRejected:
+                # Backpressure: the executor is at max_in_flight. Harvest
+                # whatever finished and retry (a front-end would 429 here).
+                done = batcher.retire()
+                account(done)
+                if not done:
+                    time.sleep(0.001)   # let the device catch up
         account(batcher.poll())
     account(batcher.flush())
     dt = time.perf_counter() - t0
@@ -64,6 +86,9 @@ def drive(batcher: ClusterBatcher, n_requests: int, label: str):
     print(f"flushes={s.flushes} (deadline={s.deadline_flushes})  "
           f"buckets_seen={s.buckets_seen}  padded_slots={s.padded_slots}  "
           f"pad_vertex_waste={s.pad_vertex_waste}")
+    if s.rejected or s.in_flight_peak:
+        print(f"backpressure: rejected={s.rejected}  "
+              f"in_flight_peak={s.in_flight_peak}")
     print(f"max in-engine wait: {max(waits):.3f}s")
 
 
@@ -74,6 +99,11 @@ def main():
           n_requests, "full-bucket policy (throughput mode)")
     drive(ClusterBatcher(max_batch=16, num_samples=2, max_wait=0.05),
           n_requests, "deadline policy (max_wait=50ms, bounded tail)")
+    # Pipelined serving: non-blocking flush dispatch + bounded in-flight
+    # work. The same stream, same answers — packing just overlaps compute.
+    drive(ClusterBatcher(max_batch=16, num_samples=2, max_wait=0.05,
+                         executor="async", max_in_flight=4),
+          n_requests, "async executor (pipelined flushes, max_in_flight=4)")
 
 
 if __name__ == "__main__":

@@ -11,13 +11,27 @@ Layout:
   arboricity.py  — degeneracy peeling bounds on λ
   cost.py        — disagreement cost, brute-force OPT, Lemma 25 transform
   dist.py        — shard_map edge-parallel engine (MPC ⇒ mesh mapping)
-  batch.py       — shape-bucketed multi-graph PIVOT engine (batched ELL)
+  plan.py        — batch-engine host side: bucketing, ELL packing, staging
+  executor.py    — batch-engine device side: fused program, program-cache
+                   LRU, sync/async/sharded bucket executors
+  batch.py       — `correlation_cluster_batch` entry point (plan ∘ executor)
   api.py         — `correlation_cluster` public entry point
 """
 
 from .api import ClusterResult, correlation_cluster, correlation_cluster_batch
 from .arboricity import arboricity_bounds, degeneracy_parallel, degeneracy_sequential
 from .batch import BucketBufferPool, GraphPlan, PackStats, plan_graph
+from .executor import (
+    AsyncExecutor,
+    BucketExecutor,
+    InFlightBucket,
+    ShardedExecutor,
+    SyncExecutor,
+    make_executor,
+    program_cache_info,
+    program_cache_size,
+    set_program_cache_capacity,
+)
 from .cliques import clique_clustering, connected_components
 from .cost import (
     brute_force_opt,
@@ -26,7 +40,7 @@ from .cost import (
     lemma25_transform,
 )
 from .degree_cap import degree_capped, degree_capped_pivot, degree_threshold
-from .dist import distributed_pivot, edge_shard_mesh
+from .dist import distributed_pivot, edge_shard_mesh, pow2_device_mesh
 from .forest import (
     augmenting_matching_parallel,
     clustering_from_matching,
@@ -41,6 +55,7 @@ from .mis import (
     greedy_mis_sequential,
     pivot_sequential,
     random_permutation_ranks,
+    random_permutation_ranks_batch,
 )
 from .phases import RoundLedger, algorithm1, remaining_max_degree_after_prefix
 from .pivot import PivotResult, pivot
@@ -53,6 +68,15 @@ __all__ = [
     "PackStats",
     "BucketBufferPool",
     "plan_graph",
+    "BucketExecutor",
+    "SyncExecutor",
+    "AsyncExecutor",
+    "ShardedExecutor",
+    "InFlightBucket",
+    "make_executor",
+    "program_cache_size",
+    "program_cache_info",
+    "set_program_cache_capacity",
     "Graph",
     "build_graph",
     "arboricity_bounds",
@@ -69,6 +93,7 @@ __all__ = [
     "degree_threshold",
     "distributed_pivot",
     "edge_shard_mesh",
+    "pow2_device_mesh",
     "augmenting_matching_parallel",
     "clustering_from_matching",
     "max_matching_forest",
@@ -79,6 +104,7 @@ __all__ = [
     "greedy_mis_sequential",
     "pivot_sequential",
     "random_permutation_ranks",
+    "random_permutation_ranks_batch",
     "RoundLedger",
     "algorithm1",
     "remaining_max_degree_after_prefix",

@@ -1,449 +1,54 @@
-"""Batched multi-graph PIVOT engine — shape-bucketed ELL clustering.
+"""Batched multi-graph PIVOT engine — the public entry point.
 
 The per-graph engine (``correlation_cluster``) retraces and recompiles for
 every new ``(n, m)`` shape, which is hopeless for serving millions of small
-clustering queries (near-dup buckets, LSH bands, per-shard similarity
-graphs). This module packs many small graphs into **shape buckets** and runs
-the whole bucket through one fused device program.
+clustering queries. The batch engine packs many small graphs into **shape
+buckets** and runs each bucket through one fused device program, so compile
+count is O(#buckets · log B), not O(#graphs).
 
-Bucketing scheme
-  Each graph is assigned a bucket key ``(R, W)`` where ``R`` is the vertex
-  count rounded up to a power of two (min 8) and ``W`` is the max degree of
-  the *eligible-induced* subgraph rounded up to a power of two (min 4). The
-  Theorem 26 degree cap is what makes ``W`` small: clustered vertices have
-  degree ≤ 12λ at ε=2, so ELL padding waste is bounded by the cap, exactly
-  the property the paper's TPU adaptation exploits for single graphs. A
-  bucket of ``G`` graphs × ``k`` best-of-k samples is packed into
+The engine is layered (this module is the thin composition of the two):
 
-    ell      (B, R, W) int32  — per-entry ELL adjacency, pad entries = R
-    ranks    (B, R+1)  int32  — per-entry permutation ranks, slot R = INF
-    eligible (B, R+1)  bool   — degree-cap mask, slot R inactive
-    m_edges  (B,)      int32  — undirected |E⁺| of the full (uncapped) graph
+* :mod:`repro.core.plan` — host side: ``plan_graph`` bucketing, the
+  ``_pack_bucket`` ELL packer, ``PackStats`` pad accounting, and the
+  lease-based ``BucketBufferPool`` staging reuse.
+* :mod:`repro.core.executor` — device side: the fused MIS + PIVOT capture
+  + cost + best-of-k program, the bounded LRU of compiled bucket programs,
+  and the ``BucketExecutor`` implementations (``sync`` blocking,
+  ``async`` pipelined, ``sharded`` multi-device ``shard_map``).
 
-  with ``B = next_pow2(G) · k`` — the group axis is padded to a power of two
-  so the jit cache key is the bucket shape: **compile count is
-  O(#buckets · log B)**, not O(#graphs), including deadline-driven
-  partial-bucket flushes (each pads to the next power-of-two sub-batch).
+Bit-exactness contract: for the same per-graph PRNG key,
+``correlation_cluster_batch`` returns labels, costs and picked sample
+indices **bit-identical** to per-graph ``correlation_cluster`` — under any
+executor, any flush grouping (including partial deadline flushes), and
+both kernel paths. Enforced in ``tests/test_batch.py``,
+``tests/test_engine.py`` and ``tests/test_executor.py``.
 
-Fused device pipeline (one program per bucket shape)
-  1. *Round loop* — one ``lax.while_loop`` drives the entire bucket: every
-     round does a batched neighbour-min (pure-jnp gather or the Pallas
-     ``(batch, row_block)`` grid kernel), local minima join the MIS, their
-     neighbours drop out, and per-entry ``done`` masks freeze finished
-     entries while the rest keep iterating.
-  2. *Capture pass* — the PIVOT assignment (min-rank MIS neighbour) as one
-     more batched gather.
-  3. *Cost pass* — disagreement cost per entry, on device: same-label
-     neighbour counting through the same ELL tensor (jnp gather or the
-     Pallas ``label_agree_ell_batch`` kernel) plus a batched cluster-size
-     scatter. Edges dropped by the degree cap are always cut (their
-     ineligible endpoint is a singleton), so ``cost = m − 2·intra_pos +
-     intra_pairs`` needs only the eligible-induced ELL and the scalar ``m``.
-  4. *Best-of-k argmin* — per-graph ``argmin`` over the ``k`` sample
-     replicas, computed on device so only the winning labels / costs /
-     sample indices cross back to the host (the former ``_cost_host`` loop
-     survives only as the oracle in tests).
-
-Bit-exactness contract
-  For the same per-graph PRNG key, ``correlation_cluster_batch`` returns
-  labels and costs **bit-identical** to per-graph ``correlation_cluster``:
-  ranks come from the same ``random_permutation_ranks(n_i, key_i)``, the
-  round dynamics are the same deterministic integer min-propagation, the
-  capture pass resolves the same min-rank pivots, and the integer cost /
-  first-minimum argmin match the host loop exactly. Enforced in
-  ``tests/test_batch.py`` and ``tests/test_engine.py`` across bucket
-  boundaries (n = R−1/R/R+1), methods, sampling, and both kernel paths.
-
-Buffer reuse
-  :class:`BucketBufferPool` gives steady-state serving O(#buckets)
-  persistent buffers: host staging arrays per bucket shape are reused
-  across flushes, and the device program is jit'd with ``donate_argnums``
-  so XLA recycles the input buffers for the outputs instead of holding
-  both generations live.
-
-Benchmarks
-  ``PYTHONPATH=src python benchmarks/batch_bench.py`` — throughput and
-  compile counts vs the per-graph loop; ``benchmarks/serve_bench.py`` —
-  p50/p99 serving latency under full-bucket vs deadline flush policies.
+Benchmarks: ``PYTHONPATH=src python benchmarks/batch_bench.py`` and
+``benchmarks/serve_bench.py`` (both take ``--executor {sync,async,sharded}``
+and emit machine-readable ``BENCH_*.json``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import warnings
-from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.util import next_pow2
-
-from .arboricity import arboricity_bounds
-from .degree_cap import degree_threshold
 from .graph import Graph
-from .mis import INF_RANK, random_permutation_ranks
 
-UNDECIDED = 0
-IN_MIS = 1
-REMOVED = 2
-
-MIN_ROWS = 8     # smallest R bucket
-MIN_WIDTH = 4    # smallest W bucket
-
-# Largest supported bucket shapes. R is bounded so the int32 pair count
-# R·(R−1)/2 of the device cost pass cannot overflow (jax x64 is disabled in
-# this deployment); W is bounded because an eligible-induced degree that
-# large means the degree cap is effectively off for a dense graph — the
-# per-graph engine is the right tool there.
-MAX_ROWS = 1 << 15
-MAX_WIDTH = 1 << 12
-
-_INT32_MAX = np.iinfo(np.int32).max
-
-
-# ---------------------------------------------------------------------------
-# Host-side packing.
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class GraphPlan:
-    """Per-graph packing plan: bucket key + degree-cap metadata."""
-
-    g: Graph
-    n: int
-    lam: Optional[int]          # resolved arboricity bound (None for raw)
-    threshold: Optional[float]  # degree-cap threshold (None for raw)
-    eligible: np.ndarray        # (n,) bool — vertices the inner PIVOT sees
-    wreq: int                   # max eligible-induced degree
-    R: int                      # row bucket (pow2)
-    W: int                      # width bucket (pow2)
-
-    @property
-    def bucket(self) -> Tuple[int, int]:
-        return (self.R, self.W)
-
-
-def plan_graph(g: Graph, method: str = "pivot", eps: float = 2.0,
-               lam: Optional[int] = None) -> GraphPlan:
-    """Resolve the degree cap and the (R, W) shape bucket for one graph.
-
-    Mirrors the per-graph api exactly: ``lam`` defaults to the degeneracy
-    upper bound, eligibility is ``deg <= 8(1+ε)/ε·λ`` (Theorem 26), and for
-    ``method='pivot_raw'`` every vertex is eligible.
-
-    Raises ``ValueError`` when the graph exceeds the largest supported
-    bucket (``MAX_ROWS`` vertices / eligible-induced degree ``MAX_WIDTH``).
-    """
-    n = g.n
-    if method == "pivot":
-        if lam is None:
-            _, lam = arboricity_bounds(g, exact=n <= 200_000)
-        threshold = degree_threshold(lam, eps)
-        eligible = ~(np.asarray(g.deg) > threshold)
-    elif method == "pivot_raw":
-        lam, threshold = None, None
-        eligible = np.ones(n, dtype=bool)
-    else:
-        raise ValueError(f"batch engine supports 'pivot'/'pivot_raw', "
-                         f"got {method!r}")
-
-    und = g.undirected_edges()
-    if len(und):
-        keep = eligible[und[:, 0]] & eligible[und[:, 1]]
-        kept = und[keep]
-        deg_ind = np.bincount(kept.ravel(), minlength=n) if len(kept) else \
-            np.zeros(n, np.int64)
-        wreq = int(deg_ind.max()) if len(kept) else 0
-    else:
-        wreq = 0
-
-    R = max(MIN_ROWS, next_pow2(max(1, n)))
-    W = max(MIN_WIDTH, next_pow2(max(1, wreq)))
-    if R > MAX_ROWS:
-        raise ValueError(
-            f"graph with n={n} needs row bucket R={R} > MAX_ROWS={MAX_ROWS}; "
-            "the batch engine targets many small graphs — cluster this one "
-            "through correlation_cluster (per-graph engine) instead")
-    if W > MAX_WIDTH:
-        raise ValueError(
-            f"graph needs ELL width W={W} > MAX_WIDTH={MAX_WIDTH} (max "
-            f"eligible-induced degree {wreq}); with method='pivot' the "
-            "Theorem 26 degree cap bounds this by 12λ — a width this large "
-            "means the graph is too dense for the bucketed ELL layout; use "
-            "the per-graph engine")
-    return GraphPlan(g=g, n=n, lam=lam, threshold=threshold,
-                     eligible=eligible, wreq=wreq, R=R, W=W)
-
-
-@dataclasses.dataclass
-class PackStats:
-    """Packing/padding accounting for one ``correlation_cluster_batch`` call.
-
-    Returned by the packer itself (``with_stats=True``) so serving-layer
-    stats can never drift from what was actually padded onto the device.
-    """
-
-    n_graphs: int = 0
-    n_entries: int = 0        # real device entries = graphs × num_samples
-    padded_entries: int = 0   # empty entries added for pow2 group padding
-    pad_vertex_waste: int = 0  # Σ (R − n) over real graphs
-    bucket_shapes: List[Tuple[int, int, int]] = dataclasses.field(
-        default_factory=list)  # (R, W, B) per bucket actually run
-
-
-def _pack_bucket(plans: Sequence[GraphPlan],
-                 group_keys: Sequence[Sequence[jax.Array]],
-                 k: int,
-                 staging: Optional[dict] = None):
-    """Pack one bucket's graphs (× k samples each) into device tensors.
-
-    Returns ``(ell, ranks, elig, m_edges, pad_groups)`` with batch axis
-    ``B = next_pow2(len(plans)) · k``: the ``k`` sample replicas of a graph
-    occupy contiguous entries so the device argmin can reduce over a simple
-    ``(G, k)`` reshape. ``staging`` (from :class:`BucketBufferPool`) reuses
-    host arrays across flushes instead of reallocating.
-    """
-    R, W = plans[0].bucket
-    g_pad = next_pow2(len(plans))
-    b_pad = g_pad * k
-    if staging is None:
-        ell = np.full((b_pad, R, W), R, dtype=np.int32)
-        ranks = np.full((b_pad, R + 1), _INT32_MAX, dtype=np.int32)
-        elig = np.zeros((b_pad, R + 1), dtype=bool)
-        m_edges = np.zeros((b_pad,), dtype=np.int32)
-    else:
-        ell, ranks, elig, m_edges = (staging["ell"], staging["ranks"],
-                                     staging["elig"], staging["m_edges"])
-        ell.fill(R)
-        ranks.fill(_INT32_MAX)
-        elig.fill(False)
-        m_edges.fill(0)
-
-    for gi, (plan, keys) in enumerate(zip(plans, group_keys)):
-        n = plan.n
-        base = gi * k
-        und = plan.g.undirected_edges()
-        if len(und):
-            keep = plan.eligible[und[:, 0]] & plan.eligible[und[:, 1]]
-            e = und[keep]
-        else:
-            e = np.zeros((0, 2), dtype=np.int64)
-        if len(e):
-            src = np.concatenate([e[:, 0], e[:, 1]])
-            dst = np.concatenate([e[:, 1], e[:, 0]])
-            order = np.argsort(src, kind="stable")
-            src, dst = src[order], dst[order]
-            deg = np.bincount(src, minlength=n)
-            starts = np.zeros(n + 1, dtype=np.int64)
-            np.cumsum(deg, out=starts[1:])
-            slot = np.arange(len(src)) - starts[src]
-            ell[base, src, slot] = dst
-        # The adjacency is identical across the k sample replicas; only the
-        # permutation (hence ranks) differs per sample key.
-        for si in range(1, k):
-            ell[base + si] = ell[base]
-        for si, key in enumerate(keys):
-            if n:
-                # Same per-graph permutation as the single-graph engine:
-                # ranks are a function of (n, key) only ⇒ bit-exact per graph.
-                ranks[base + si, :n] = np.asarray(
-                    random_permutation_ranks(n, key))
-                elig[base + si, :n] = plan.eligible
-            m_edges[base + si] = plan.g.m
-    return ell, ranks, elig, m_edges, g_pad - len(plans)
-
-
-# ---------------------------------------------------------------------------
-# Device program: fused MIS rounds + PIVOT capture + cost + best-of-k argmin.
-# ---------------------------------------------------------------------------
-
-
-def _gather_rows(table: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
-    """(B, R+1) per-graph state gathered through (B, R, W) neighbour ids."""
-    return jax.vmap(lambda t, e: t[e])(table, ell)
-
-
-def _batch_pivot_cost_impl(ell, ranks_p, elig_p, m_edges, k: int,
-                           use_kernel: bool):
-    """Cluster + cost + select every graph of one shape bucket on device.
-
-    Args:
-      ell: (B, R, W) int32 ELL adjacency, pad entries = R; B = G·k with the
-        k sample replicas of each graph contiguous.
-      ranks_p: (B, R+1) int32 ranks, slot R = INF.
-      elig_p: (B, R+1) bool degree-cap eligibility, slot R False.
-      m_edges: (B,) int32 full-graph undirected edge counts.
-      k: best-of-k replica count (static).
-    Returns per *group* (graph) arrays:
-      (labels (G, R), costs (G,), picked (G,), rounds (G,)).
-    """
-    B, R, W = ell.shape
-    ranks = ranks_p[:, :R]
-    elig = elig_p[:, :R]
-    # Rank gather is loop-invariant on the jnp path — hoisted out of the
-    # while body; only the activity gather changes per round.
-    nbr_ranks = None if use_kernel else _gather_rows(ranks_p, ell)
-
-    def nbr_min(active: jnp.ndarray) -> jnp.ndarray:
-        active_p = jnp.concatenate(
-            [active, jnp.zeros((B, 1), active.dtype)], axis=1)
-        if use_kernel:
-            from repro.kernels import ops as _kops  # kernels stay optional
-
-            return _kops.neighbor_min_ell_batch(ell, ranks_p, active_p)
-        act = _gather_rows(active_p, ell)
-        return jnp.min(jnp.where(act, nbr_ranks, INF_RANK), axis=2)
-
-    def cond(carry):
-        status, _ = carry
-        return jnp.any(status == UNDECIDED)
-
-    def body(carry):
-        status, rounds = carry
-        und = status == UNDECIDED            # UNDECIDED ⊆ eligible
-        nmin = nbr_min(und)
-        winners = und & (ranks < nmin)
-        wmin = nbr_min(winners)
-        hit = und & (~winners) & (wmin < INF_RANK)
-        status = jnp.where(winners, IN_MIS, status)
-        status = jnp.where(hit, REMOVED, status)
-        # Per-entry done mask: finished entries stop accumulating rounds.
-        rounds = rounds + jnp.any(und, axis=1).astype(jnp.int32)
-        return status, rounds
-
-    status0 = jnp.where(elig, UNDECIDED, REMOVED).astype(jnp.int32)
-    status, rounds = jax.lax.while_loop(
-        cond, body, (status0, jnp.zeros((B,), jnp.int32)))
-
-    # PIVOT capture pass: min-rank MIS neighbour, one batched convergecast.
-    in_mis = status == IN_MIS
-    wmin = nbr_min(in_mis)
-    arange_r = jnp.arange(R, dtype=jnp.int32)
-    rank_to_v = jax.vmap(
-        lambda rk: jnp.zeros((R + 1,), jnp.int32).at[
-            jnp.clip(rk, 0, R)].set(arange_r)
-    )(ranks)
-    piv = jnp.take_along_axis(rank_to_v, jnp.minimum(wmin, R), axis=1)
-    own = jnp.broadcast_to(arange_r[None, :], (B, R))
-    labels = jnp.where(in_mis, own,
-                       jnp.where(wmin < INF_RANK, piv, own))
-    labels = jnp.where(elig, labels, own)
-
-    # Disagreement-cost pass. Every kept (eligible-induced) undirected edge
-    # appears twice in the ELL, so the same-label neighbour count sums to
-    # 2·intra_pos; cap-dropped edges are always cut (their ineligible
-    # endpoint is a singleton) so m_edges accounts for them exactly:
-    #   cost = (m − intra_pos) + (intra_pairs − intra_pos).
-    labels_p = jnp.concatenate(
-        [labels, jnp.full((B, 1), -1, jnp.int32)], axis=1)
-    if use_kernel:
-        from repro.kernels import ops as _kops
-
-        agree = _kops.label_agree_ell_batch(ell, labels_p)
-        intra_pos2 = jnp.sum(agree, axis=1)
-    else:
-        nbr_lab = _gather_rows(labels_p, ell)
-        intra_pos2 = jnp.sum(
-            (nbr_lab == labels[:, :, None]).astype(jnp.int32), axis=(1, 2))
-    sizes = jax.vmap(
-        lambda lab: jnp.zeros((R,), jnp.int32).at[lab].add(1))(labels)
-    intra_pairs = jnp.sum(sizes * (sizes - 1) // 2, axis=1)
-    costs = m_edges - intra_pos2 + intra_pairs
-
-    # Best-of-k selection: first minimum wins (jnp.argmin tie-break), the
-    # same rule as the host loop's strict `<` — only winners cross to host.
-    G = B // k
-    cost_g = costs.reshape(G, k)
-    picked = jnp.argmin(cost_g, axis=1).astype(jnp.int32)
-    labels_win = jnp.take_along_axis(
-        labels.reshape(G, k, R), picked[:, None, None], axis=1)[:, 0]
-    costs_win = jnp.take_along_axis(cost_g, picked[:, None], axis=1)[:, 0]
-    rounds_win = jnp.take_along_axis(
-        rounds.reshape(G, k), picked[:, None], axis=1)[:, 0]
-    return labels_win, costs_win, picked, rounds_win
-
-
-_batch_program = partial(
-    jax.jit, static_argnames=("k", "use_kernel"))(_batch_pivot_cost_impl)
-# Donated variant for the serving path: XLA reuses the (B,R,W)/(B,R+1)
-# input buffers for outputs/temporaries, so a steady flush stream holds
-# O(#buckets) device buffers instead of two generations per flush.
-_batch_program_donated = partial(
-    jax.jit, static_argnames=("k", "use_kernel"),
-    donate_argnums=(0, 1, 2, 3))(_batch_pivot_cost_impl)
-
-
-def program_cache_size() -> int:
-    """Number of compiled bucket programs (benchmark: O(#buckets))."""
-    return int(_batch_program._cache_size()
-               + _batch_program_donated._cache_size())
-
-
-def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
-                       use_kernel: bool = False, donate: bool = False):
-    """Invoke the fused bucket program (optionally with donated inputs).
-
-    The single entry point for both the batch API and serving-layer warmup,
-    so the donation policy and its warning handling live in one place: the
-    selection outputs are group-shaped, so XLA cannot alias the
-    entry-shaped inputs into them on every backend — donation still
-    releases the inputs eagerly instead of holding two generations live,
-    and the "not usable" warning is expected, not actionable.
-    """
-    if donate:
-        with warnings.catch_warnings():
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            return _batch_program_donated(ell, ranks_p, elig_p, m_edges,
-                                          k=k, use_kernel=use_kernel)
-    return _batch_program(ell, ranks_p, elig_p, m_edges,
-                          k=k, use_kernel=use_kernel)
-
-
-class BucketBufferPool:
-    """Persistent per-bucket-shape buffers for steady-state serving.
-
-    Two halves, both keyed by the packed shape ``(B, R, W)``:
-
-    * **Host staging** — the numpy ``ell``/``ranks``/``eligible``/``m``
-      arrays a flush packs into are allocated once per shape and refilled
-      in place on every subsequent flush.
-    * **Device donation** — flushes routed through a pool run the
-      ``donate_argnums`` jit variant, so the device input buffers are
-      recycled into the outputs instead of surviving alongside them.
-
-    Results are bit-identical with or without the pool (asserted in
-    ``tests/test_engine.py``); the pool only changes allocation behaviour.
-    """
-
-    def __init__(self, donate: bool = True):
-        self.donate = donate
-        self._staging: Dict[Tuple[int, int, int], dict] = {}
-
-    def staging(self, b: int, r: int, w: int) -> dict:
-        key = (b, r, w)
-        buf = self._staging.get(key)
-        if buf is None:
-            buf = {
-                "ell": np.empty((b, r, w), dtype=np.int32),
-                "ranks": np.empty((b, r + 1), dtype=np.int32),
-                "elig": np.empty((b, r + 1), dtype=bool),
-                "m_edges": np.empty((b,), dtype=np.int32),
-            }
-            self._staging[key] = buf
-        return buf
-
-    @property
-    def n_buffers(self) -> int:
-        return len(self._staging)
-
-
-# ---------------------------------------------------------------------------
-# Host-side cost (numpy) — the test oracle for the device cost pass.
-# ---------------------------------------------------------------------------
+# Backward-compatible re-exports: the pre-split module exposed all of these.
+from .plan import (  # noqa: F401
+    MAX_ROWS, MAX_WIDTH, MIN_ROWS, MIN_WIDTH, BucketBufferPool, GraphPlan,
+    PackStats, StagingLease, _pack_bucket, plan_graph, result_for_plan,
+)
+from .executor import (  # noqa: F401
+    IN_MIS, REMOVED, UNDECIDED, AsyncExecutor, BucketExecutor, InFlightBucket,
+    ShardedExecutor, SyncExecutor, _batch_pivot_cost_impl, _gather_rows,
+    make_executor, pack_and_submit, program_cache_capacity,
+    program_cache_info, program_cache_size, run_bucket_program,
+    set_program_cache_capacity,
+)
 
 
 def _cost_host(g: Graph, labels: np.ndarray) -> int:
@@ -462,11 +67,6 @@ def _cost_host(g: Graph, labels: np.ndarray) -> int:
     return pos_disagree + (intra_pairs - intra_pos)
 
 
-# ---------------------------------------------------------------------------
-# Public entry point.
-# ---------------------------------------------------------------------------
-
-
 def correlation_cluster_batch(
     graphs: Sequence[Graph],
     keys: Optional[Sequence[jax.Array] | jax.Array] = None,
@@ -477,6 +77,7 @@ def correlation_cluster_batch(
     use_kernel: bool = False,
     pool: Optional[BucketBufferPool] = None,
     with_stats: bool = False,
+    executor=None,
 ):
     """Cluster many graphs through the shape-bucketed batch engine.
 
@@ -498,6 +99,10 @@ def correlation_cluster_batch(
         and run the donated device program (the serving path).
       with_stats: also return the packer's :class:`PackStats` as
         ``(results, stats)`` so callers track padding without re-deriving it.
+      executor: a :class:`~repro.core.executor.BucketExecutor`, one of
+        ``'sync'``/``'async'``/``'sharded'``, or None (sync). With the
+        async/sharded executors all buckets are dispatched before any
+        result is harvested, so packing overlaps device execution.
 
     Returns one :class:`repro.core.api.ClusterResult` per input graph with
     labels/costs bit-identical to per-graph ``correlation_cluster`` calls
@@ -528,72 +133,46 @@ def correlation_cluster_batch(
         lams = [None] * n_graphs
 
     k = num_samples
+    ex = make_executor(executor)
     plans = [plan_graph(g, method=method, eps=eps, lam=lam)
              for g, lam in zip(graphs, lams)]
 
-    buckets: Dict[Tuple[int, int], List[int]] = {}
+    buckets: dict = {}
     for gi, plan in enumerate(plans):
         buckets.setdefault(plan.bucket, []).append(gi)
 
-    labels_by_graph: Dict[int, np.ndarray] = {}
-    cost_by_graph: Dict[int, int] = {}
-    picked_by_graph: Dict[int, int] = {}
-    rounds_by_graph: Dict[int, int] = {}
-    for (R, W), members in buckets.items():
+    # Dispatch every bucket before harvesting any: with an async or sharded
+    # executor the host packs bucket i+1 while bucket i computes.
+    handles: List[InFlightBucket] = []
+    for members in buckets.values():
         bplans = [plans[gi] for gi in members]
         bkeys = [sample_keys(keys[gi], k) for gi in members]
-        b_pad = next_pow2(len(members)) * k
-        staging = pool.staging(b_pad, R, W) if pool is not None else None
-        ell, ranks, elig, m_edges, pad_groups = _pack_bucket(
-            bplans, bkeys, k=k, staging=staging)
-        labels, costs, picked, rounds = run_bucket_program(
-            jnp.asarray(ell), jnp.asarray(ranks), jnp.asarray(elig),
-            jnp.asarray(m_edges), k=k, use_kernel=use_kernel,
-            donate=pool is not None and pool.donate)
-        labels = np.asarray(labels)
-        costs = np.asarray(costs)
-        picked = np.asarray(picked)
-        rounds = np.asarray(rounds)
-        for slot, gi in enumerate(members):
-            labels_by_graph[gi] = labels[slot, : plans[gi].n].astype(np.int32)
-            cost_by_graph[gi] = int(costs[slot])
-            picked_by_graph[gi] = int(picked[slot])
-            rounds_by_graph[gi] = int(rounds[slot])
-        stats.n_graphs += len(members)
-        stats.n_entries += len(members) * k
-        stats.padded_entries += pad_groups * k
-        stats.pad_vertex_waste += sum(R - p.n for p in bplans)
-        stats.bucket_shapes.append((R, W, b_pad))
+        handle, bucket_stats = pack_and_submit(
+            bplans, bkeys, k, ex, pool=pool, use_kernel=use_kernel,
+            payload=(members, bplans), track=False)
+        handles.append(handle)
+        stats.merge(bucket_stats)
 
-    results: List[ClusterResult] = []
-    for gi, plan in enumerate(plans):
-        info = {
-            "bucket": plan.bucket,
-            "depth": rounds_by_graph[gi],
-            "engine": "batch",
-        }
-        if plan.threshold is not None:
-            info.update(threshold=plan.threshold,
-                        high_degree=int((~plan.eligible).sum()),
-                        lambda_bound=plan.lam)
-        if k > 1:
-            info.update(num_samples=k, picked_sample=picked_by_graph[gi])
-        results.append(ClusterResult(
-            labels=labels_by_graph[gi], cost=cost_by_graph[gi],
-            method=method, info=info))
+    results_by_graph: dict = {}
+    for handle in handles:       # submission order: block at most once each
+        labels, costs, picked, rounds = handle.result()
+        members, bplans = handle.payload
+        for slot, (gi, plan) in enumerate(zip(members, bplans)):
+            results_by_graph[gi] = result_for_plan(
+                plan, labels[slot], int(costs[slot]), int(picked[slot]),
+                int(rounds[slot]), k, method)
+
+    results: List[ClusterResult] = [results_by_graph[gi]
+                                    for gi in range(n_graphs)]
     return (results, stats) if with_stats else results
 
 
 __all__ = [
-    "GraphPlan",
-    "PackStats",
-    "BucketBufferPool",
-    "plan_graph",
-    "correlation_cluster_batch",
-    "program_cache_size",
-    "run_bucket_program",
-    "MIN_ROWS",
-    "MIN_WIDTH",
-    "MAX_ROWS",
-    "MAX_WIDTH",
+    "GraphPlan", "PackStats", "BucketBufferPool", "StagingLease",
+    "plan_graph", "result_for_plan", "correlation_cluster_batch",
+    "BucketExecutor", "SyncExecutor", "AsyncExecutor", "ShardedExecutor",
+    "InFlightBucket", "make_executor", "program_cache_size",
+    "program_cache_capacity", "set_program_cache_capacity",
+    "program_cache_info", "run_bucket_program",
+    "MIN_ROWS", "MIN_WIDTH", "MAX_ROWS", "MAX_WIDTH",
 ]

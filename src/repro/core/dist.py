@@ -46,6 +46,22 @@ def edge_shard_mesh(num_devices: Optional[int] = None) -> Mesh:
     return Mesh(devs, axis_names=("shard",))
 
 
+def pow2_device_mesh(num_devices: Optional[int] = None,
+                     axis_name: str = "shard") -> Mesh:
+    """1-D mesh over the largest power-of-two prefix of local devices.
+
+    The batch engine's group axis is always padded to a power of two, so a
+    data-parallel split of that axis only divides evenly across a
+    power-of-two device count. ``ShardedExecutor`` builds its mesh here: on
+    an 8-device host this is all 8, on a 6-device host the first 4.
+    """
+    devs = jax.devices()
+    limit = len(devs) if num_devices is None else max(1, min(num_devices,
+                                                             len(devs)))
+    count = 1 << (limit.bit_length() - 1)
+    return Mesh(np.array(devs[:count]), axis_names=(axis_name,))
+
+
 def _pad_edges_for_mesh(g: Graph, num_shards: int) -> Graph:
     """Re-pad the COO arrays so their length divides the shard count."""
     e = g.num_directed
@@ -165,4 +181,4 @@ def distributed_pivot(g: Graph, ranks, mesh: Optional[Mesh] = None,
     return np.asarray(labels), np.asarray(in_mis), int(rounds)
 
 
-__all__ = ["edge_shard_mesh", "distributed_pivot"]
+__all__ = ["edge_shard_mesh", "pow2_device_mesh", "distributed_pivot"]

@@ -1,0 +1,591 @@
+"""Device-side execution layer of the batch engine: programs + executors.
+
+The "how it runs" half of the plan/executor split (packing and bucketing
+live in :mod:`repro.core.plan`). Three pieces:
+
+**The fused bucket program** (:func:`_batch_pivot_cost_impl`) — one jit
+program per ``(B, R, W)`` bucket shape that runs MIS rounds
+(``lax.while_loop``), PIVOT capture, the disagreement-cost pass and the
+best-of-k argmin entirely on device, so only winning labels / costs /
+sample indices cross back to the host. Every batch entry is independent of
+every other, which is what makes both async overlap and data-parallel
+sharding semantics-preserving.
+
+**The compiled-program cache** — :func:`run_bucket_program` resolves each
+``(shape, k, kernel, donation, mesh)`` request through a bounded LRU of jit
+instances. Long-lived servers seeing many bucket shapes therefore hold at
+most :func:`program_cache_capacity` compiled programs; evictions are
+counted (:func:`program_cache_info`) instead of growing memory without
+limit.
+
+**Bucket executors** — the :class:`BucketExecutor` protocol decouples the
+serving layer from *how* a packed bucket reaches the device:
+
+* :class:`SyncExecutor` — the classic path: dispatch, block, fetch. One
+  bucket at a time, results available the moment ``submit`` returns.
+* :class:`AsyncExecutor` — non-blocking dispatch returning
+  :class:`InFlightBucket` handles; the caller packs/flushes the next
+  bucket while the previous one computes and transfers (JAX async
+  dispatch). ``retire()`` harvests completed handles without blocking;
+  ``drain()`` blocks for everything outstanding.
+* :class:`ShardedExecutor` — data-parallel ``shard_map`` over the pow2
+  group axis across the local device mesh
+  (:func:`repro.core.dist.pow2_device_mesh`), so one flush spans all local
+  devices: the MPC "more machines" axis. Group padding is raised to the
+  device count so the batch axis splits evenly; padded entries are inert.
+
+All three executors satisfy the same bit-exactness contract as the
+per-graph engine — for matching keys, labels / costs / picked sample
+indices are identical — because the program they run is the same per-entry
+computation (asserted for every executor in ``tests/test_executor.py``).
+"""
+
+from __future__ import annotations
+
+import warnings
+from collections import OrderedDict, deque
+from functools import partial
+from typing import Any, Callable, Deque, List, Optional, Protocol, Tuple, \
+    runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map as _shard_map
+from repro.util import next_pow2
+
+from .mis import INF_RANK
+
+UNDECIDED = 0
+IN_MIS = 1
+REMOVED = 2
+
+
+# ---------------------------------------------------------------------------
+# Fused device program: MIS rounds + PIVOT capture + cost + best-of-k argmin.
+# ---------------------------------------------------------------------------
+
+
+def _gather_rows(table: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
+    """(B, R+1) per-graph state gathered through (B, R, W) neighbour ids."""
+    return jax.vmap(lambda t, e: t[e])(table, ell)
+
+
+def _batch_pivot_cost_impl(ell, ranks_p, elig_p, m_edges, k: int,
+                           use_kernel: bool):
+    """Cluster + cost + select every graph of one shape bucket on device.
+
+    Args:
+      ell: (B, R, W) int32 ELL adjacency, pad entries = R; B = G·k with the
+        k sample replicas of each graph contiguous.
+      ranks_p: (B, R+1) int32 ranks, slot R = INF.
+      elig_p: (B, R+1) bool degree-cap eligibility, slot R False.
+      m_edges: (B,) int32 full-graph undirected edge counts.
+      k: best-of-k replica count (static).
+    Returns per *group* (graph) arrays:
+      (labels (G, R), costs (G,), picked (G,), rounds (G,)).
+    """
+    B, R, W = ell.shape
+    ranks = ranks_p[:, :R]
+    elig = elig_p[:, :R]
+    # Rank gather is loop-invariant on the jnp path — hoisted out of the
+    # while body; only the activity gather changes per round.
+    nbr_ranks = None if use_kernel else _gather_rows(ranks_p, ell)
+
+    def nbr_min(active: jnp.ndarray) -> jnp.ndarray:
+        active_p = jnp.concatenate(
+            [active, jnp.zeros((B, 1), active.dtype)], axis=1)
+        if use_kernel:
+            from repro.kernels import ops as _kops  # kernels stay optional
+
+            return _kops.neighbor_min_ell_batch(ell, ranks_p, active_p)
+        act = _gather_rows(active_p, ell)
+        return jnp.min(jnp.where(act, nbr_ranks, INF_RANK), axis=2)
+
+    def cond(carry):
+        status, _ = carry
+        return jnp.any(status == UNDECIDED)
+
+    def body(carry):
+        status, rounds = carry
+        und = status == UNDECIDED            # UNDECIDED ⊆ eligible
+        nmin = nbr_min(und)
+        winners = und & (ranks < nmin)
+        wmin = nbr_min(winners)
+        hit = und & (~winners) & (wmin < INF_RANK)
+        status = jnp.where(winners, IN_MIS, status)
+        status = jnp.where(hit, REMOVED, status)
+        # Per-entry done mask: finished entries stop accumulating rounds.
+        rounds = rounds + jnp.any(und, axis=1).astype(jnp.int32)
+        return status, rounds
+
+    status0 = jnp.where(elig, UNDECIDED, REMOVED).astype(jnp.int32)
+    status, rounds = jax.lax.while_loop(
+        cond, body, (status0, jnp.zeros((B,), jnp.int32)))
+
+    # PIVOT capture pass: min-rank MIS neighbour, one batched convergecast.
+    in_mis = status == IN_MIS
+    wmin = nbr_min(in_mis)
+    arange_r = jnp.arange(R, dtype=jnp.int32)
+    rank_to_v = jax.vmap(
+        lambda rk: jnp.zeros((R + 1,), jnp.int32).at[
+            jnp.clip(rk, 0, R)].set(arange_r)
+    )(ranks)
+    piv = jnp.take_along_axis(rank_to_v, jnp.minimum(wmin, R), axis=1)
+    own = jnp.broadcast_to(arange_r[None, :], (B, R))
+    labels = jnp.where(in_mis, own,
+                       jnp.where(wmin < INF_RANK, piv, own))
+    labels = jnp.where(elig, labels, own)
+
+    # Disagreement-cost pass. Every kept (eligible-induced) undirected edge
+    # appears twice in the ELL, so the same-label neighbour count sums to
+    # 2·intra_pos; cap-dropped edges are always cut (their ineligible
+    # endpoint is a singleton) so m_edges accounts for them exactly:
+    #   cost = (m − intra_pos) + (intra_pairs − intra_pos).
+    labels_p = jnp.concatenate(
+        [labels, jnp.full((B, 1), -1, jnp.int32)], axis=1)
+    if use_kernel:
+        from repro.kernels import ops as _kops
+
+        agree = _kops.label_agree_ell_batch(ell, labels_p)
+        intra_pos2 = jnp.sum(agree, axis=1)
+    else:
+        nbr_lab = _gather_rows(labels_p, ell)
+        intra_pos2 = jnp.sum(
+            (nbr_lab == labels[:, :, None]).astype(jnp.int32), axis=(1, 2))
+    sizes = jax.vmap(
+        lambda lab: jnp.zeros((R,), jnp.int32).at[lab].add(1))(labels)
+    intra_pairs = jnp.sum(sizes * (sizes - 1) // 2, axis=1)
+    costs = m_edges - intra_pos2 + intra_pairs
+
+    # Best-of-k selection: first minimum wins (jnp.argmin tie-break), the
+    # same rule as the host loop's strict `<` — only winners cross to host.
+    G = B // k
+    cost_g = costs.reshape(G, k)
+    picked = jnp.argmin(cost_g, axis=1).astype(jnp.int32)
+    labels_win = jnp.take_along_axis(
+        labels.reshape(G, k, R), picked[:, None, None], axis=1)[:, 0]
+    costs_win = jnp.take_along_axis(cost_g, picked[:, None], axis=1)[:, 0]
+    rounds_win = jnp.take_along_axis(
+        rounds.reshape(G, k), picked[:, None], axis=1)[:, 0]
+    return labels_win, costs_win, picked, rounds_win
+
+
+# ---------------------------------------------------------------------------
+# Bounded LRU of compiled bucket programs.
+# ---------------------------------------------------------------------------
+
+_DEFAULT_CACHE_CAPACITY = 256
+
+_program_cache: "OrderedDict[tuple, Callable]" = OrderedDict()
+_program_cache_capacity = _DEFAULT_CACHE_CAPACITY
+_program_cache_evictions = 0
+
+
+def _mesh_cache_key(mesh: Optional[Mesh]):
+    return None if mesh is None else tuple(d.id for d in mesh.devices.flat)
+
+
+def _build_program(k: int, use_kernel: bool, donate: bool,
+                   mesh: Optional[Mesh]) -> Callable:
+    impl = partial(_batch_pivot_cost_impl, k=k, use_kernel=use_kernel)
+    if mesh is not None:
+        axis = mesh.axis_names[0]
+        spec = P(axis)
+        # check_rep=False: the pinned jax has no replication rule for
+        # `while` inside shard_map (same situation as core.dist); every
+        # entry is independent, so out specs sharded like the inputs.
+        impl = _shard_map(impl, mesh=mesh,
+                          in_specs=(spec, spec, spec, spec),
+                          out_specs=(spec, spec, spec, spec),
+                          check_rep=False)
+    return jax.jit(impl, donate_argnums=(0, 1, 2, 3) if donate else ())
+
+
+def _evict_to_capacity() -> None:
+    global _program_cache_evictions
+    while len(_program_cache) > _program_cache_capacity:
+        _, fn = _program_cache.popitem(last=False)
+        _program_cache_evictions += 1
+        clear = getattr(fn, "clear_cache", None)
+        if clear is not None:       # drop the compiled executable eagerly
+            clear()
+
+
+def program_cache_size() -> int:
+    """Number of compiled bucket programs resident (benchmark: O(#buckets))."""
+    return len(_program_cache)
+
+
+def program_cache_capacity() -> int:
+    return _program_cache_capacity
+
+
+def set_program_cache_capacity(capacity: int) -> int:
+    """Bound the compiled-program LRU; returns the previous capacity.
+
+    Long-lived servers seeing many bucket shapes would otherwise accumulate
+    one compiled executable per ``(B, R, W, k, kernel, donation, mesh)``
+    combination forever. The default (256) is generous — a workload that
+    legitimately cycles through more shapes than this pays recompiles on
+    the evicted ones (correctness is unaffected; tested).
+    """
+    global _program_cache_capacity
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    prev = _program_cache_capacity
+    _program_cache_capacity = capacity
+    _evict_to_capacity()
+    return prev
+
+
+def program_cache_info() -> dict:
+    """Cache observability for serving stats / benchmarks."""
+    return {
+        "size": len(_program_cache),
+        "capacity": _program_cache_capacity,
+        "evictions": _program_cache_evictions,
+    }
+
+
+def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
+                       use_kernel: bool = False, donate: bool = False,
+                       mesh: Optional[Mesh] = None):
+    """Invoke the fused bucket program through the bounded program cache.
+
+    The single entry point for every executor and the serving-layer warmup,
+    so the donation policy and its warning handling live in one place: the
+    selection outputs are group-shaped, so XLA cannot alias the
+    entry-shaped inputs into them on every backend — donation still
+    releases the inputs eagerly instead of holding two generations live,
+    and the "not usable" warning is expected, not actionable.
+
+    With JAX's async dispatch this returns device arrays that may still be
+    computing; callers that need the values block via ``np.asarray`` (which
+    is what :class:`InFlightBucket` does on harvest).
+    """
+    if use_kernel:
+        # First import must happen OUTSIDE any trace: the kernels modules
+        # create module-level jnp constants, and a first import from inside
+        # the traced while-loop body would stage those constants as tracers
+        # that leak into every later (untraced) kernel call.
+        from repro.kernels import ops  # noqa: F401
+
+    ell = jnp.asarray(ell)
+    key = (ell.shape, k, use_kernel, donate, _mesh_cache_key(mesh))
+    fn = _program_cache.get(key)
+    if fn is None:
+        fn = _build_program(k, use_kernel, donate, mesh)
+        _program_cache[key] = fn
+        _evict_to_capacity()
+    else:
+        _program_cache.move_to_end(key)
+    args = (ell, jnp.asarray(ranks_p), jnp.asarray(elig_p),
+            jnp.asarray(m_edges))
+    if donate:
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return fn(*args)
+    return fn(*args)
+
+
+# ---------------------------------------------------------------------------
+# Executors.
+# ---------------------------------------------------------------------------
+
+
+class InFlightBucket:
+    """Handle for one dispatched bucket program.
+
+    Holds the (possibly still computing) device outputs, the submitter's
+    ``payload`` context, and the staging lease pinning the host buffers
+    that fed the program. ``result()`` blocks for the outputs, converts
+    them to numpy, and only then releases the lease — the invariant that
+    keeps overlapped flushes from refilling a buffer still in flight.
+    """
+
+    __slots__ = ("payload", "_outputs", "_fetched", "_lease")
+
+    def __init__(self, outputs, payload: Any = None, lease=None):
+        self._outputs = outputs
+        self._fetched: Optional[Tuple[np.ndarray, ...]] = None
+        self.payload = payload
+        self._lease = lease
+
+    @property
+    def harvested(self) -> bool:
+        return self._fetched is not None
+
+    def ready(self) -> bool:
+        """True once the device program has finished (never blocks).
+
+        Also true after a *failed* fetch (``_outputs`` cleared): there is
+        nothing left to wait for, and ``result()`` reports the failure.
+        """
+        if self._fetched is not None or self._outputs is None:
+            return True
+        probe = getattr(self._outputs[0], "is_ready", None)
+        if probe is None:        # very old jax: no non-blocking probe
+            return False
+        return all(o.is_ready() for o in self._outputs)
+
+    def result(self) -> Tuple[np.ndarray, ...]:
+        """(labels, costs, picked, rounds) as numpy; blocks if needed.
+
+        The staging lease is released whether the fetch succeeds or the
+        device program surfaces a runtime error here — either way the
+        program is finished with its input buffers.
+        """
+        if self._fetched is None:
+            outputs, self._outputs = self._outputs, None
+            if outputs is None:
+                raise RuntimeError(
+                    "bucket program outputs unavailable (an earlier fetch "
+                    "of this handle failed)")
+            try:
+                self._fetched = tuple(np.asarray(o) for o in outputs)
+            finally:
+                if self._lease is not None:
+                    self._lease.release()
+                    self._lease = None
+        return self._fetched
+
+
+@runtime_checkable
+class BucketExecutor(Protocol):
+    """Structural protocol the serving layer schedules bucket flushes by."""
+
+    name: str
+    mesh: Optional[Mesh]
+
+    def group_pad(self, n_groups: int) -> int:
+        """Padded group count for a bucket of ``n_groups`` graphs."""
+        ...
+
+    def submit(self, ell, ranks_p, elig_p, m_edges, k: int,
+               use_kernel: bool = False, donate: bool = False,
+               payload: Any = None, lease=None,
+               track: bool = True) -> InFlightBucket:
+        """Dispatch one packed bucket; returns its in-flight handle.
+
+        ``track=True`` (serving layers) enqueues the handle for delivery
+        through ``retire``/``drain``; ``track=False`` (one-shot callers
+        that keep their own handle list and harvest via ``result()``)
+        leaves queue bookkeeping to the submitter.
+        """
+        ...
+
+    def retire(self) -> List[InFlightBucket]:
+        """Harvest completed handles without blocking."""
+        ...
+
+    def drain(self) -> List[InFlightBucket]:
+        """Hand back every outstanding handle (callers block via result)."""
+        ...
+
+    @property
+    def in_flight(self) -> int:
+        """Submitted-but-unharvested bucket count (backpressure signal)."""
+        ...
+
+
+class _QueueExecutor:
+    """Shared submit/retire bookkeeping for the concrete executors."""
+
+    name = "base"
+    mesh: Optional[Mesh] = None
+
+    def __init__(self):
+        self._pending: Deque[InFlightBucket] = deque()
+
+    def group_pad(self, n_groups: int) -> int:
+        return next_pow2(max(1, n_groups))
+
+    def submit(self, ell, ranks_p, elig_p, m_edges, k: int,
+               use_kernel: bool = False, donate: bool = False,
+               payload: Any = None, lease=None,
+               track: bool = True) -> InFlightBucket:
+        outputs = run_bucket_program(ell, ranks_p, elig_p, m_edges, k=k,
+                                     use_kernel=use_kernel, donate=donate,
+                                     mesh=self.mesh)
+        handle = InFlightBucket(outputs, payload=payload, lease=lease)
+        self._post_submit(handle)
+        if track:
+            self._pending.append(handle)
+        return handle
+
+    def _post_submit(self, handle: InFlightBucket) -> None:
+        pass
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._pending)
+
+    def retire(self) -> List[InFlightBucket]:
+        done: List[InFlightBucket] = []
+        still: Deque[InFlightBucket] = deque()
+        while self._pending:
+            h = self._pending.popleft()
+            if h.ready():
+                done.append(h)
+            else:
+                still.append(h)
+        self._pending = still
+        return done
+
+    def drain(self) -> List[InFlightBucket]:
+        out = list(self._pending)
+        self._pending.clear()
+        return out
+
+
+class SyncExecutor(_QueueExecutor):
+    """The classic path: dispatch, block, fetch — one bucket at a time.
+
+    ``submit`` returns only after the program has completed and its outputs
+    (and staging lease) have been harvested into the handle, so ``retire``
+    always finds every submitted handle ready and ``in_flight`` never
+    exceeds the unharvested-handle count of the current caller.
+    """
+
+    name = "sync"
+
+    def _post_submit(self, handle: InFlightBucket) -> None:
+        handle.result()
+
+
+class AsyncExecutor(_QueueExecutor):
+    """Pipelined path: non-blocking dispatch, handles harvested later.
+
+    JAX dispatch is asynchronous — ``submit`` returns as soon as the
+    program is enqueued, so the caller overlaps host-side packing of the
+    next bucket with device execution and device→host transfer of the
+    previous ones. ``retire()`` harvests whatever has finished;
+    ``drain()`` hands back everything (harvest order = submission order,
+    so results block at most once per handle).
+    """
+
+    name = "async"
+
+
+class ShardedExecutor(AsyncExecutor):
+    """Data-parallel path: one flush spans every local device.
+
+    The packed batch axis is split across a 1-D mesh with ``shard_map``
+    (the same MPC ⇒ mesh mapping as :mod:`repro.core.dist`, reusing its
+    mesh utilities): each device runs the fused program on ``B/D`` entries
+    with zero collectives, because batch entries are mutually independent.
+    ``group_pad`` raises the group padding to the device count so the pow2
+    group axis splits evenly and best-of-k replicas never straddle a shard
+    boundary. Dispatch stays asynchronous, so sharding and pipelining
+    compose.
+    """
+
+    name = "sharded"
+
+    def __init__(self, num_devices: Optional[int] = None,
+                 mesh: Optional[Mesh] = None):
+        super().__init__()
+        if mesh is None:
+            from .dist import pow2_device_mesh
+
+            mesh = pow2_device_mesh(num_devices)
+        self.mesh = mesh
+        self.num_devices = int(mesh.devices.size)
+        if self.num_devices & (self.num_devices - 1):
+            raise ValueError(
+                f"ShardedExecutor needs a power-of-two device count to "
+                f"split the pow2 group axis evenly, got mesh of "
+                f"{self.num_devices} (use pow2_device_mesh)")
+
+    def group_pad(self, n_groups: int) -> int:
+        return max(self.num_devices, next_pow2(max(1, n_groups)))
+
+
+def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
+                    pool=None, use_kernel: bool = False, payload: Any = None,
+                    track: bool = True):
+    """Pack one bucket and dispatch it through an executor.
+
+    The single lease → ``_pack_bucket`` → ``submit`` sequence shared by
+    ``correlation_cluster_batch`` and the serving-layer flush, so group
+    padding, donation policy and pad accounting cannot drift between the
+    two paths. Returns ``(handle, stats)`` where ``stats`` is this one
+    flush's :class:`~repro.core.plan.PackStats` — the single source every
+    caller's pad accounting merges from. If packing or dispatch raises,
+    the staging lease is released before re-raising — nothing was
+    dispatched, so the buffers are genuinely free.
+    """
+    from .plan import PackStats, _pack_bucket
+
+    R, W = plans[0].bucket
+    g_pad = executor.group_pad(len(plans))
+    b_pad = g_pad * k
+    lease = pool.acquire(b_pad, R, W) if pool is not None else None
+    try:
+        ell, ranks, elig, m_edges, pad_groups = _pack_bucket(
+            plans, group_keys, k=k, g_pad=g_pad,
+            staging=lease.arrays if lease is not None else None)
+        handle = executor.submit(
+            ell, ranks, elig, m_edges, k=k, use_kernel=use_kernel,
+            donate=pool is not None and pool.donate,
+            payload=payload, lease=lease, track=track)
+    except BaseException:
+        if lease is not None:
+            lease.release()
+        raise
+    stats = PackStats(
+        n_graphs=len(plans),
+        n_entries=len(plans) * k,
+        padded_entries=pad_groups * k,
+        pad_vertex_waste=sum(R - p.n for p in plans),
+        bucket_shapes=[(R, W, b_pad)],
+    )
+    return handle, stats
+
+
+_EXECUTORS = {
+    "sync": SyncExecutor,
+    "async": AsyncExecutor,
+    "sharded": ShardedExecutor,
+}
+
+
+def make_executor(spec=None) -> BucketExecutor:
+    """Resolve an executor argument: name, instance, or None (→ sync)."""
+    if spec is None:
+        return SyncExecutor()
+    if isinstance(spec, str):
+        try:
+            return _EXECUTORS[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown executor {spec!r}; expected one of "
+                f"{sorted(_EXECUTORS)}") from None
+    if isinstance(spec, BucketExecutor):
+        return spec
+    raise TypeError(f"executor must be a name or BucketExecutor, "
+                    f"got {type(spec).__name__}")
+
+
+__all__ = [
+    "UNDECIDED",
+    "IN_MIS",
+    "REMOVED",
+    "InFlightBucket",
+    "BucketExecutor",
+    "SyncExecutor",
+    "AsyncExecutor",
+    "ShardedExecutor",
+    "make_executor",
+    "pack_and_submit",
+    "run_bucket_program",
+    "program_cache_size",
+    "program_cache_capacity",
+    "set_program_cache_capacity",
+    "program_cache_info",
+]

@@ -22,7 +22,7 @@ with CSR tiles staged through VMEM and can be swapped in via ``use_kernel``.
 
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import NamedTuple, Tuple
 
 import jax
@@ -44,6 +44,29 @@ def random_permutation_ranks(n: int, key: jax.Array) -> jnp.ndarray:
     perm = jax.random.permutation(key, n)
     ranks = jnp.zeros((n,), jnp.int32).at[perm].set(jnp.arange(n, dtype=jnp.int32))
     return ranks
+
+
+@lru_cache(maxsize=1024)
+def _perm_ranks_batch_for(n: int):
+    # One jitted vmap per vertex count, held in a bounded LRU: a long-lived
+    # server seeing arbitrarily many distinct n must not accumulate one
+    # resident executable per size forever (evicted sizes just recompile).
+    return jax.jit(jax.vmap(lambda k: random_permutation_ranks(n, k)))
+
+
+def random_permutation_ranks_batch(n: int, keys) -> jax.Array:
+    """Ranks for several keys of one graph in a single fused dispatch.
+
+    Row ``i`` is bit-identical to ``random_permutation_ranks(n, keys[i])``
+    (``jax.random.permutation`` is deterministic per key under ``vmap``;
+    asserted in ``tests/test_mis.py``). The batch-engine packer uses this
+    for the best-of-k sample keys of each graph: one async dispatch per
+    graph instead of ``k`` eager permutation calls, which keeps host-side
+    packing off the device's critical path.
+    """
+    if not isinstance(keys, jax.Array):
+        keys = jnp.stack(list(keys))
+    return _perm_ranks_batch_for(n)(keys)
 
 
 # ---------------------------------------------------------------------------

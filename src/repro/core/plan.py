@@ -1,0 +1,368 @@
+"""Host-side planning layer of the batch engine: bucketing, packing, staging.
+
+This is the "what runs" half of the plan/executor split (the "how it runs"
+half is :mod:`repro.core.executor`). Everything here is pure numpy on the
+host:
+
+* :func:`plan_graph` resolves one graph's degree cap and its ``(R, W)``
+  shape bucket (``R`` = vertex count rounded to a power of two, ``W`` = max
+  *eligible-induced* degree rounded to a power of two — the Theorem 26 cap
+  is what keeps ``W ≤ 12λ`` and makes ELL padding cheap).
+* :func:`_pack_bucket` lays one bucket's graphs (× k best-of-k samples)
+  into the ``(B, R, W)`` ELL tensor plus ``(B, R+1)`` rank/eligibility
+  state the device program consumes, with the group axis padded to a power
+  of two (callers may request extra group padding, e.g. to a device-count
+  multiple for the sharded executor).
+* :class:`PackStats` is the packer's own padding accounting — the single
+  source serving stats are derived from, so they cannot drift from what was
+  actually padded onto the device.
+* :class:`BucketBufferPool` owns the persistent host staging arrays.
+  Staging is handed out as **leases**: an acquired buffer is not eligible
+  for reuse until its lease is released, which the executor layer does only
+  after the bucket's device program has completed and its outputs have been
+  fetched. That is the invariant that makes async (overlapped) flushes
+  safe — a buffer feeding an in-flight program is never refilled.
+
+The bit-exactness contract lives at this layer too: ranks come from the
+same ``random_permutation_ranks(n_i, key_i)`` as the per-graph engine, so
+for matching keys any grouping of graphs into buckets — full flushes,
+partial deadline flushes, sharded flushes — yields identical results.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.util import next_pow2
+
+from .arboricity import arboricity_bounds
+from .degree_cap import degree_threshold
+from .graph import Graph
+from .mis import random_permutation_ranks_batch
+
+MIN_ROWS = 8     # smallest R bucket
+MIN_WIDTH = 4    # smallest W bucket
+
+# Largest supported bucket shapes. R is bounded so the int32 pair count
+# R·(R−1)/2 of the device cost pass cannot overflow (jax x64 is disabled in
+# this deployment); W is bounded because an eligible-induced degree that
+# large means the degree cap is effectively off for a dense graph — the
+# per-graph engine is the right tool there.
+MAX_ROWS = 1 << 15
+MAX_WIDTH = 1 << 12
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass
+class GraphPlan:
+    """Per-graph packing plan: bucket key + degree-cap metadata."""
+
+    g: Graph
+    n: int
+    lam: Optional[int]          # resolved arboricity bound (None for raw)
+    threshold: Optional[float]  # degree-cap threshold (None for raw)
+    eligible: np.ndarray        # (n,) bool — vertices the inner PIVOT sees
+    wreq: int                   # max eligible-induced degree
+    R: int                      # row bucket (pow2)
+    W: int                      # width bucket (pow2)
+
+    @property
+    def bucket(self) -> Tuple[int, int]:
+        return (self.R, self.W)
+
+
+def plan_graph(g: Graph, method: str = "pivot", eps: float = 2.0,
+               lam: Optional[int] = None) -> GraphPlan:
+    """Resolve the degree cap and the (R, W) shape bucket for one graph.
+
+    Mirrors the per-graph api exactly: ``lam`` defaults to the degeneracy
+    upper bound, eligibility is ``deg <= 8(1+ε)/ε·λ`` (Theorem 26), and for
+    ``method='pivot_raw'`` every vertex is eligible.
+
+    Raises ``ValueError`` when the graph exceeds the largest supported
+    bucket (``MAX_ROWS`` vertices / eligible-induced degree ``MAX_WIDTH``).
+    """
+    n = g.n
+    if method == "pivot":
+        if lam is None:
+            _, lam = arboricity_bounds(g, exact=n <= 200_000)
+        threshold = degree_threshold(lam, eps)
+        eligible = ~(np.asarray(g.deg) > threshold)
+    elif method == "pivot_raw":
+        lam, threshold = None, None
+        eligible = np.ones(n, dtype=bool)
+    else:
+        raise ValueError(f"batch engine supports 'pivot'/'pivot_raw', "
+                         f"got {method!r}")
+
+    und = g.undirected_edges()
+    if len(und):
+        keep = eligible[und[:, 0]] & eligible[und[:, 1]]
+        kept = und[keep]
+        deg_ind = np.bincount(kept.ravel(), minlength=n) if len(kept) else \
+            np.zeros(n, np.int64)
+        wreq = int(deg_ind.max()) if len(kept) else 0
+    else:
+        wreq = 0
+
+    R = max(MIN_ROWS, next_pow2(max(1, n)))
+    W = max(MIN_WIDTH, next_pow2(max(1, wreq)))
+    if R > MAX_ROWS:
+        raise ValueError(
+            f"graph with n={n} needs row bucket R={R} > MAX_ROWS={MAX_ROWS}; "
+            "the batch engine targets many small graphs — cluster this one "
+            "through correlation_cluster (per-graph engine) instead")
+    if W > MAX_WIDTH:
+        raise ValueError(
+            f"graph needs ELL width W={W} > MAX_WIDTH={MAX_WIDTH} (max "
+            f"eligible-induced degree {wreq}); with method='pivot' the "
+            "Theorem 26 degree cap bounds this by 12λ — a width this large "
+            "means the graph is too dense for the bucketed ELL layout; use "
+            "the per-graph engine")
+    return GraphPlan(g=g, n=n, lam=lam, threshold=threshold,
+                     eligible=eligible, wreq=wreq, R=R, W=W)
+
+
+@dataclasses.dataclass
+class PackStats:
+    """Packing/padding accounting for one ``correlation_cluster_batch`` call.
+
+    Returned by the packer itself (``with_stats=True``) so serving-layer
+    stats can never drift from what was actually padded onto the device.
+    """
+
+    n_graphs: int = 0
+    n_entries: int = 0        # real device entries = graphs × num_samples
+    padded_entries: int = 0   # empty entries added for pow2 group padding
+    pad_vertex_waste: int = 0  # Σ (R − n) over real graphs
+    bucket_shapes: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)  # (R, W, B) per bucket actually run
+
+    def merge(self, other: "PackStats") -> None:
+        """Accumulate another flush's packing accounting into this one."""
+        self.n_graphs += other.n_graphs
+        self.n_entries += other.n_entries
+        self.padded_entries += other.padded_entries
+        self.pad_vertex_waste += other.pad_vertex_waste
+        self.bucket_shapes.extend(other.bucket_shapes)
+
+
+def _pack_bucket(plans: Sequence[GraphPlan],
+                 group_keys: Sequence[Sequence[jax.Array]],
+                 k: int,
+                 staging: Optional[dict] = None,
+                 g_pad: Optional[int] = None):
+    """Pack one bucket's graphs (× k samples each) into device tensors.
+
+    Returns ``(ell, ranks, elig, m_edges, pad_groups)`` with batch axis
+    ``B = g_pad · k`` where ``g_pad`` defaults to ``next_pow2(len(plans))``
+    — executors may request more group padding (e.g. the sharded executor
+    pads to at least its device count so the batch axis splits evenly).
+    The ``k`` sample replicas of a graph occupy contiguous entries so the
+    device argmin can reduce over a simple ``(G, k)`` reshape. ``staging``
+    (a lease from :class:`BucketBufferPool`) reuses host arrays across
+    flushes instead of reallocating.
+    """
+    R, W = plans[0].bucket
+    if g_pad is None:
+        g_pad = next_pow2(len(plans))
+    elif g_pad < len(plans):
+        raise ValueError(f"g_pad={g_pad} < {len(plans)} graphs in bucket")
+    b_pad = g_pad * k
+    if staging is None:
+        ell = np.full((b_pad, R, W), R, dtype=np.int32)
+        ranks = np.full((b_pad, R + 1), _INT32_MAX, dtype=np.int32)
+        elig = np.zeros((b_pad, R + 1), dtype=bool)
+        m_edges = np.zeros((b_pad,), dtype=np.int32)
+    else:
+        ell, ranks, elig, m_edges = (staging["ell"], staging["ranks"],
+                                     staging["elig"], staging["m_edges"])
+        ell.fill(R)
+        ranks.fill(_INT32_MAX)
+        elig.fill(False)
+        m_edges.fill(0)
+
+    # Dispatch every graph's rank batch first (one fused device call per
+    # graph, async under JAX dispatch): the permutations compute while the
+    # numpy ELL packing below runs on the host. Same per-graph permutation
+    # as the single-graph engine — ranks are a function of (n, key) only,
+    # and the batched call is row-bit-identical to per-key calls — so the
+    # result stays bit-exact per graph.
+    rank_batches = [
+        random_permutation_ranks_batch(plan.n, keys) if plan.n else None
+        for plan, keys in zip(plans, group_keys)
+    ]
+
+    for gi, (plan, keys) in enumerate(zip(plans, group_keys)):
+        n = plan.n
+        base = gi * k
+        und = plan.g.undirected_edges()
+        if len(und):
+            keep = plan.eligible[und[:, 0]] & plan.eligible[und[:, 1]]
+            e = und[keep]
+        else:
+            e = np.zeros((0, 2), dtype=np.int64)
+        if len(e):
+            src = np.concatenate([e[:, 0], e[:, 1]])
+            dst = np.concatenate([e[:, 1], e[:, 0]])
+            order = np.argsort(src, kind="stable")
+            src, dst = src[order], dst[order]
+            deg = np.bincount(src, minlength=n)
+            starts = np.zeros(n + 1, dtype=np.int64)
+            np.cumsum(deg, out=starts[1:])
+            slot = np.arange(len(src)) - starts[src]
+            ell[base, src, slot] = dst
+        # The adjacency is identical across the k sample replicas; only the
+        # permutation (hence ranks) differs per sample key.
+        for si in range(1, k):
+            ell[base + si] = ell[base]
+        for si in range(len(keys)):
+            if n:
+                elig[base + si, :n] = plan.eligible
+            m_edges[base + si] = plan.g.m
+
+    # Harvest the (by now computed) rank batches into the staging arrays.
+    for gi, (plan, batch) in enumerate(zip(plans, rank_batches)):
+        if batch is None:
+            continue
+        base = gi * k
+        rk = np.asarray(batch)
+        for si in range(rk.shape[0]):
+            ranks[base + si, : plan.n] = rk[si]
+    return ell, ranks, elig, m_edges, g_pad - len(plans)
+
+
+def result_for_plan(plan: GraphPlan, labels_row: np.ndarray, cost: int,
+                    picked: int, rounds: int, k: int, method: str):
+    """Build one :class:`~repro.core.api.ClusterResult` from device outputs.
+
+    Shared by ``correlation_cluster_batch`` and the serving-layer harvest so
+    the result/info schema cannot diverge between the one-shot and the
+    streaming paths.
+    """
+    from .api import ClusterResult  # deferred: api imports the batch layer
+
+    info = {
+        "bucket": plan.bucket,
+        "depth": rounds,
+        "engine": "batch",
+    }
+    if plan.threshold is not None:
+        info.update(threshold=plan.threshold,
+                    high_degree=int((~plan.eligible).sum()),
+                    lambda_bound=plan.lam)
+    if k > 1:
+        info.update(num_samples=k, picked_sample=picked)
+    return ClusterResult(labels=labels_row[: plan.n].astype(np.int32),
+                         cost=cost, method=method, info=info)
+
+
+class StagingLease:
+    """One checked-out host staging buffer set (see :class:`BucketBufferPool`).
+
+    ``arrays`` maps ``ell``/``ranks``/``elig``/``m_edges`` to the numpy
+    staging arrays a flush packs into. The lease must be released (once)
+    after the device program consuming the buffers has completed; the
+    executor layer does this when a flush's outputs are fetched.
+    """
+
+    __slots__ = ("pool", "key", "arrays", "released")
+
+    def __init__(self, pool: "BucketBufferPool", key: Tuple[int, int, int],
+                 arrays: dict):
+        self.pool = pool
+        self.key = key
+        self.arrays = arrays
+        self.released = False
+
+    def release(self) -> None:
+        if not self.released:
+            self.released = True
+            self.pool._release(self)
+
+
+class BucketBufferPool:
+    """Persistent per-bucket-shape buffers for steady-state serving.
+
+    Two halves, both keyed by the packed shape ``(B, R, W)``:
+
+    * **Host staging** — the numpy ``ell``/``ranks``/``eligible``/``m``
+      arrays a flush packs into are allocated once per shape and refilled
+      in place on later flushes. Buffers are handed out as
+      :class:`StagingLease` objects: a leased buffer is **never** handed
+      out again until released, so an async executor overlapping flushes of
+      the same bucket shape gets a second buffer generation instead of
+      corrupting the one still feeding an in-flight program (regression
+      tested in ``tests/test_executor.py``). Synchronous serving releases
+      each lease before the next flush, holding O(#buckets) buffers;
+      pipelined serving holds O(#buckets · in-flight).
+    * **Device donation** — flushes routed through a pool run the
+      ``donate_argnums`` jit variant, so the device input buffers are
+      recycled into the outputs instead of surviving alongside them.
+
+    Results are bit-identical with or without the pool (asserted in
+    ``tests/test_engine.py``); the pool only changes allocation behaviour.
+    """
+
+    def __init__(self, donate: bool = True):
+        self.donate = donate
+        self._free: Dict[Tuple[int, int, int], List[dict]] = {}
+        self._allocated = 0
+        self._leased = 0
+
+    def _new_buffers(self, b: int, r: int, w: int) -> dict:
+        return {
+            "ell": np.empty((b, r, w), dtype=np.int32),
+            "ranks": np.empty((b, r + 1), dtype=np.int32),
+            "elig": np.empty((b, r + 1), dtype=bool),
+            "m_edges": np.empty((b,), dtype=np.int32),
+        }
+
+    def acquire(self, b: int, r: int, w: int) -> StagingLease:
+        """Check out a staging buffer set for shape ``(b, r, w)``.
+
+        Reuses a free buffer when one exists; otherwise allocates — a
+        buffer whose lease is outstanding is never returned.
+        """
+        key = (b, r, w)
+        free = self._free.get(key)
+        if free:
+            arrays = free.pop()
+        else:
+            arrays = self._new_buffers(b, r, w)
+            self._allocated += 1
+        self._leased += 1
+        return StagingLease(self, key, arrays)
+
+    def _release(self, lease: StagingLease) -> None:
+        self._leased -= 1
+        self._free.setdefault(lease.key, []).append(lease.arrays)
+
+    @property
+    def n_buffers(self) -> int:
+        """Total staging buffer sets allocated (free + leased)."""
+        return self._allocated
+
+    @property
+    def leased(self) -> int:
+        """Buffer sets currently checked out to in-flight flushes."""
+        return self._leased
+
+
+__all__ = [
+    "GraphPlan",
+    "PackStats",
+    "StagingLease",
+    "BucketBufferPool",
+    "plan_graph",
+    "result_for_plan",
+    "MIN_ROWS",
+    "MIN_WIDTH",
+    "MAX_ROWS",
+    "MAX_WIDTH",
+]

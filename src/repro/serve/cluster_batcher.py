@@ -2,33 +2,44 @@
 
 Implements the :class:`repro.serve.engine.ClusterEngine` protocol for graph
 queries: incoming graphs are **admitted** into the shape bucket their padded
-``(R, W)`` size maps to, a bucket **flushes** through
-``correlation_cluster_batch`` the moment it fills ``max_batch`` slots — or,
-under the deadline policy, as soon as its oldest request has waited
-``max_wait`` seconds — and flushed requests **retire** with their results
-attached.
+``(R, W)`` size maps to, a bucket **flushes** through the injected
+:class:`~repro.core.executor.BucketExecutor` the moment it fills
+``max_batch`` slots — or, under the deadline policy, as soon as its oldest
+request has waited ``max_wait`` seconds — and flushed requests **retire**
+with their results attached.
+
+Executor injection (how a flush reaches the device)
+  ``ClusterBatcher(executor=...)`` takes ``'sync'`` (block per flush — the
+  classic path), ``'async'`` (non-blocking dispatch: the batcher packs and
+  flushes the next bucket while the previous one computes and transfers;
+  completed flushes are harvested on the next ``admit``/``poll``/``retire``),
+  ``'sharded'`` (one flush data-parallel across all local devices via
+  ``shard_map``), or any :class:`BucketExecutor` instance. Results are
+  bit-identical under every executor — scheduling can never change an
+  answer. An executor instance must not be shared between engines: the
+  batcher harvests *all* of its executor's handles.
+
+Admission backpressure (bounded in-flight work)
+  With ``max_in_flight`` set, ``admit`` raises :class:`AdmissionRejected`
+  (and counts ``stats.rejected``) while that many flushes are still in
+  flight — the signal a front-end needs to shed load instead of queueing
+  unboundedly when arrivals outrun the device.
 
 Deadline policy (bounded tail latency)
-  A full-bucket-only policy gives great throughput but unbounded latency: a
-  request whose bucket never fills waits until end of stream. With
-  ``max_wait`` set, :meth:`ClusterBatcher.poll` flushes any bucket whose
-  oldest request is past its budget as a *partial* flush. The packer pads
-  the partial batch to the next power-of-two sub-batch, so the jit cache
-  stays **O(#buckets · log max_batch)** — latency is bounded without
-  per-size recompiles. Padding actually performed on the device is reported
-  by the packer itself (``PackStats``), so :class:`ClusterStats` can never
-  drift from what ran.
+  With ``max_wait`` set, :meth:`ClusterBatcher.poll` flushes any bucket
+  whose oldest request is past its budget as a *partial* flush, padded to
+  the next power-of-two sub-batch so the jit cache stays
+  O(#buckets · log max_batch). Padding actually performed on the device is
+  reported by the packer itself (``PackStats`` fields), so
+  :class:`ClusterStats` can never drift from what ran.
 
 Buffer reuse
-  All flushes route through one :class:`repro.core.batch.BucketBufferPool`:
-  host staging arrays per bucket shape are refilled in place and the device
-  program runs with donated inputs, so steady-state serving keeps
-  O(#buckets) persistent buffers.
-
-Because the device program is jit-cached per bucket shape, a steady request
-stream compiles O(#buckets · log B) programs total no matter how many
-graphs flow through — the clustering analogue of a shape-static decode
-batch.
+  All flushes route through one :class:`repro.core.plan.BucketBufferPool`:
+  host staging arrays per bucket shape are **leased** per flush, refilled
+  in place, and run through the donated device program. A lease is only
+  released once its flush's outputs are fetched, so pipelined flushes of
+  the same bucket shape get distinct buffer generations — a buffer feeding
+  an in-flight program is never refilled.
 """
 
 from __future__ import annotations
@@ -42,11 +53,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BucketBufferPool, correlation_cluster_batch, plan_graph
-from repro.core.api import ClusterResult
+from repro.core import BucketBufferPool, make_executor, plan_graph
+from repro.core.api import ClusterResult, sample_keys
+from repro.core.executor import pack_and_submit
 from repro.core.graph import Graph
+from repro.core.plan import GraphPlan, result_for_plan
+from repro.util import next_pow2
 
 from .engine import EngineStats
+
+
+class AdmissionRejected(RuntimeError):
+    """Raised by ``admit`` when ``max_in_flight`` flushes are outstanding."""
 
 
 @dataclasses.dataclass
@@ -58,6 +76,7 @@ class ClusterRequest:
     result: Optional[ClusterResult] = None
     done: bool = False
     admitted_at: Optional[float] = None     # engine clock time of admission
+    plan: Optional[GraphPlan] = None        # resolved once at admission
 
 
 @dataclasses.dataclass
@@ -68,6 +87,8 @@ class ClusterStats(EngineStats):
     padded_slots: int = 0        # empty device entries, from the packer
     pad_vertex_waste: int = 0    # Σ (R − n) over clustered graphs
     buckets_seen: int = 0        # distinct (R, W) buckets admitted
+    rejected: int = 0            # admissions refused by backpressure
+    in_flight_peak: int = 0      # max concurrent in-flight flushes seen
 
 
 class ClusterBatcher:
@@ -88,6 +109,11 @@ class ClusterBatcher:
       num_samples: best-of-k PIVOT per request (``< 1`` is coerced to 1;
         the engine itself rejects invalid values).
       pool: buffer pool shared by all flushes (created if omitted).
+      executor: bucket executor name (``'sync'``/``'async'``/``'sharded'``)
+        or instance — see the module docstring. Default ``'sync'``.
+      max_in_flight: optional bound on concurrently in-flight flushes;
+        ``admit`` raises :class:`AdmissionRejected` at the bound. ``None``
+        disables backpressure (one-shot / offline driving).
     """
 
     def __init__(self, max_batch: int = 64, method: str = "pivot",
@@ -95,11 +121,16 @@ class ClusterBatcher:
                  use_kernel: bool = False,
                  max_wait: Optional[float] = None,
                  clock=time.monotonic,
-                 pool: Optional[BucketBufferPool] = None):
+                 pool: Optional[BucketBufferPool] = None,
+                 executor="sync",
+                 max_in_flight: Optional[int] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait is not None and max_wait < 0:
             raise ValueError(f"max_wait must be >= 0, got {max_wait}")
+        if max_in_flight is not None and max_in_flight < 1:
+            raise ValueError(
+                f"max_in_flight must be >= 1, got {max_in_flight}")
         self.max_batch = max_batch
         self.method = method
         self.eps = eps
@@ -108,9 +139,12 @@ class ClusterBatcher:
         self.max_wait = max_wait
         self.clock = clock
         self.pool = pool if pool is not None else BucketBufferPool()
+        self.executor = make_executor(executor)
+        self.max_in_flight = max_in_flight
         self.buckets: Dict[Tuple[int, int], List[ClusterRequest]] = {}
         self._bucket_keys_seen: set = set()
         self._retired: Deque[ClusterRequest] = deque()
+        self._in_flight_reqs = 0
         self.stats = ClusterStats()
 
     # -- ClusterEngine protocol ------------------------------------------
@@ -120,12 +154,22 @@ class ClusterBatcher:
         """Admit a request; returns the retired batch if its bucket flushed.
 
         Shape/width validation happens here (``plan_graph`` raises for
-        graphs exceeding the largest supported bucket) so a bad request
-        fails at admission, not inside a later batched flush.
+        graphs exceeding the largest supported bucket) and so does
+        backpressure (:class:`AdmissionRejected` while ``max_in_flight``
+        flushes are outstanding) — a request the engine cannot take fails
+        at admission, not inside a later batched flush.
         """
+        self._harvest()
+        if (self.max_in_flight is not None
+                and self.executor.in_flight >= self.max_in_flight):
+            self.stats.rejected += 1
+            raise AdmissionRejected(
+                f"{self.executor.in_flight} flushes in flight >= "
+                f"max_in_flight={self.max_in_flight}; retry after retiring")
         plan = plan_graph(req.graph, method=self.method, eps=self.eps,
                           lam=req.lam)
-        req.lam = plan.lam  # resolved once; the flush reuses it verbatim
+        req.plan = plan         # resolved once; the flush reuses it verbatim
+        req.lam = plan.lam
         req.admitted_at = self.clock() if now is None else now
         slot_list = self.buckets.setdefault(plan.bucket, [])
         slot_list.append(req)
@@ -137,31 +181,38 @@ class ClusterBatcher:
         return self.retire()
 
     def flush(self) -> List[ClusterRequest]:
-        """Drain every bucket (end of stream), full or partial."""
+        """Drain every bucket (end of stream), full or partial, and block
+        for all in-flight work."""
         for bucket in list(self.buckets):
             self._flush(bucket)
+        self._harvest(block=True)
         return self.retire()
 
     def retire(self) -> List[ClusterRequest]:
-        """Drain finished requests not yet handed back to the caller."""
+        """Drain finished requests not yet handed back to the caller
+        (harvesting any flushes that completed since the last call)."""
+        self._harvest()
         out = list(self._retired)
         self._retired.clear()
         return out
 
     def pending(self) -> int:
-        return sum(len(v) for v in self.buckets.values())
+        """Admitted-but-unfinished requests: bucketed + in flight."""
+        return sum(len(v) for v in self.buckets.values()) \
+            + self._in_flight_reqs
 
     # -- Deadline policy --------------------------------------------------
 
     def poll(self, now: Optional[float] = None) -> List[ClusterRequest]:
         """Flush buckets whose oldest request has waited past ``max_wait``.
 
-        A no-op without a deadline configured. Partial buckets are padded
-        to the next power-of-two sub-batch by the packer, so deadline
-        flushes stay within the O(#buckets · log B) compile budget.
+        Without a deadline configured this still harvests completed
+        in-flight flushes. Partial buckets are padded to the next
+        power-of-two sub-batch by the packer, so deadline flushes stay
+        within the O(#buckets · log B) compile budget.
         """
         if self.max_wait is None:
-            return []
+            return self.retire()
         now = self.clock() if now is None else now
         for bucket, reqs in list(self.buckets.items()):
             if reqs and now - reqs[0].admitted_at >= self.max_wait:
@@ -183,13 +234,14 @@ class ClusterBatcher:
         ``(G_pad, R, W)`` shape appears — a latency spike exactly where the
         deadline policy promises a bound. JetStream warms its prefill
         buckets ahead of serving for the same reason. Given sample graphs
-        covering the expected shape buckets, this compiles all
-        ``log2(max_batch)+1`` sub-batch programs per bucket up front (via
-        zero-filled dummy tensors; nothing is returned to callers).
+        covering the expected shape buckets, this compiles every sub-batch
+        program *for this engine's executor* (the sharded executor floors
+        sub-batches at its device count, so it usually has fewer) via
+        zero-filled dummy tensors; nothing is returned to callers.
         Returns the number of programs compiled.
         """
-        from repro.core.batch import program_cache_size, run_bucket_program
-        from repro.util import next_pow2
+        from repro.core.executor import program_cache_size, \
+            run_bucket_program
 
         before = program_cache_size()
         k = self.num_samples
@@ -200,9 +252,12 @@ class ClusterBatcher:
                 continue
             seen.add(bucket)
             R, W = bucket
-            g_pad = 1
+            pads, g_pad = set(), 1
             while g_pad <= next_pow2(self.max_batch):
-                b = g_pad * k
+                pads.add(self.executor.group_pad(g_pad))
+                g_pad *= 2
+            for gp in sorted(pads):
+                b = gp * k
                 ell = jnp.full((b, R, W), R, dtype=jnp.int32)
                 ranks = jnp.full((b, R + 1), np.iinfo(np.int32).max,
                                  dtype=jnp.int32)
@@ -210,39 +265,77 @@ class ClusterBatcher:
                 m = jnp.zeros((b,), dtype=jnp.int32)
                 jax.block_until_ready(run_bucket_program(
                     ell, ranks, elig, m, k=k, use_kernel=self.use_kernel,
-                    donate=self.pool.donate))
-                g_pad *= 2
+                    donate=self.pool.donate, mesh=self.executor.mesh))
         return program_cache_size() - before
 
     # -- Internals ---------------------------------------------------------
 
     def _flush(self, bucket: Tuple[int, int], deadline: bool = False) -> None:
+        """Pack one bucket and hand it to the executor (maybe async)."""
         reqs = self.buckets.pop(bucket, [])
         if not reqs:
             return
-        results, pack = correlation_cluster_batch(
-            [r.graph for r in reqs],
-            keys=[r.key for r in reqs],
-            method=self.method,
-            eps=self.eps,
-            lams=[r.lam for r in reqs],
-            num_samples=self.num_samples,
-            use_kernel=self.use_kernel,
-            pool=self.pool,
-            with_stats=True,
-        )
+        k = self.num_samples
+        plans = [r.plan for r in reqs]
+        bkeys = [sample_keys(r.key, k) for r in reqs]
+        try:
+            _, pack = pack_and_submit(
+                plans, bkeys, k, self.executor, pool=self.pool,
+                use_kernel=self.use_kernel, payload=reqs)
+        except BaseException:
+            # Nothing was dispatched (the helper released the staging
+            # lease): requeue the popped requests so none are lost, then
+            # surface the error to the caller.
+            self.buckets[bucket] = reqs
+            raise
+        self._in_flight_reqs += len(reqs)
         self.stats.flushes += 1
         if deadline:
             self.stats.deadline_flushes += 1
         # Pad accounting straight from the packer — no re-derivation here.
         self.stats.padded_slots += pack.padded_entries
         self.stats.pad_vertex_waste += pack.pad_vertex_waste
-        for req, res in zip(reqs, results):
-            req.result = res
-            req.done = True
-            self.stats.clustered += 1
-            self.stats.retired += 1
-            self._retired.append(req)
+        self.stats.in_flight_peak = max(self.stats.in_flight_peak,
+                                        self.executor.in_flight)
+        self._harvest()
+
+    def _harvest(self, block: bool = False) -> None:
+        """Collect completed flushes from the executor into the retired
+        queue (``block=True`` waits for everything in flight).
+
+        A flush whose fetch fails (device-side runtime error surfacing at
+        ``result()``) has its requests requeued into their bucket — ahead
+        of newer arrivals, preserving deadline age order — and the first
+        such error is re-raised after every other handle has been
+        processed, so one bad flush can neither lose requests nor strand
+        the handles behind it.
+        """
+        handles = self.executor.drain() if block else self.executor.retire()
+        first_err: Optional[BaseException] = None
+        for handle in handles:
+            reqs = handle.payload
+            try:
+                labels, costs, picked, rounds = handle.result()
+            except BaseException as err:
+                self._in_flight_reqs -= len(reqs)
+                if reqs:
+                    bucket = reqs[0].plan.bucket
+                    self.buckets[bucket] = reqs + self.buckets.get(bucket, [])
+                if first_err is None:
+                    first_err = err
+                continue
+            for slot, req in enumerate(reqs):
+                req.result = result_for_plan(
+                    req.plan, labels[slot], int(costs[slot]),
+                    int(picked[slot]), int(rounds[slot]),
+                    self.num_samples, self.method)
+                req.done = True
+                self.stats.clustered += 1
+                self.stats.retired += 1
+                self._retired.append(req)
+            self._in_flight_reqs -= len(reqs)
+        if first_err is not None:
+            raise first_err
 
     # -- Back-compat aliases (pre-engine API) ------------------------------
 
@@ -255,4 +348,5 @@ class ClusterBatcher:
         return self.flush()
 
 
-__all__ = ["ClusterRequest", "ClusterStats", "ClusterBatcher"]
+__all__ = ["ClusterRequest", "ClusterStats", "ClusterBatcher",
+           "AdmissionRejected"]

@@ -12,6 +12,10 @@ queue/retire bookkeeping and can be driven by the same outer loop:
 * ``admit(request)`` — hand one request to the engine. The engine may run
   device work immediately (a bucket filled, a slot freed) and returns any
   requests that *retired* as a direct consequence; otherwise ``[]``.
+  Engines with admission control may refuse instead: ``ClusterBatcher``
+  raises ``AdmissionRejected`` (and counts ``stats.rejected``) while its
+  ``max_in_flight`` backpressure bound is hit — the caller sheds load or
+  retries after the next retire, rather than queueing unboundedly.
 * ``flush()`` — force pending work through the device: drain partially
   filled buckets / decode remaining slots. Returns the retired requests.
   Engines with a deadline policy also expose ``poll(now)`` to flush only

@@ -1,0 +1,433 @@
+"""Pluggable bucket-executor layer: sync ≡ async ≡ sharded, bit-exactly.
+
+The contracts under test (core/plan.py, core/executor.py,
+serve/cluster_batcher.py):
+
+* all three executors return labels/costs/picked sample indices
+  bit-identical to per-graph ``correlation_cluster`` — for full flushes,
+  partial deadline flushes, and both kernel paths;
+* ``BucketBufferPool`` leases: a staging buffer feeding an in-flight
+  program is never handed out again until that flush's outputs are
+  fetched (the async-overlap regression);
+* ``max_in_flight`` admission backpressure rejects at admit time and
+  counts the rejection;
+* the compiled-program cache is a bounded LRU with an eviction counter,
+  and eviction only costs a recompile, never correctness;
+* the sharded executor raises group padding to its device count (8-device
+  proof runs in a subprocess, mirroring tests/test_dist.py).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncExecutor,
+    BucketBufferPool,
+    BucketExecutor,
+    ShardedExecutor,
+    SyncExecutor,
+    build_graph,
+    correlation_cluster,
+    correlation_cluster_batch,
+    make_executor,
+    plan_graph,
+    pow2_device_mesh,
+)
+from repro.core import executor as exec_mod
+from repro.core.api import sample_keys
+from repro.core.graph import path, random_arboric
+from repro.core.plan import _pack_bucket
+from repro.serve.cluster_batcher import (
+    AdmissionRejected,
+    ClusterBatcher,
+    ClusterRequest,
+)
+
+
+def _rand_graph(n, lam, seed):
+    edges, _ = random_arboric(n, lam, np.random.default_rng(seed))
+    return build_graph(n, edges)
+
+
+def _assert_matches(g, key, res_batch, **kwargs):
+    res_single = correlation_cluster(g, key=key, **kwargs)
+    assert (res_batch.labels == res_single.labels).all()
+    assert res_batch.cost == res_single.cost
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+class _StallingExecutor(AsyncExecutor):
+    """Async executor whose harvests are deferred until released — makes
+    in-flight overlap deterministic for backpressure/lease tests."""
+
+    def __init__(self):
+        super().__init__()
+        self.stalled = True
+
+    def retire(self):
+        return [] if self.stalled else super().retire()
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: every executor, full + partial deadline flushes, both
+# kernel paths (the tentpole contract).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("executor", ["sync", "async", "sharded"])
+def test_executor_full_and_deadline_flushes_bit_exact(executor, use_kernel):
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=4, max_wait=1.0, clock=clock,
+                             executor=executor, use_kernel=use_kernel,
+                             num_samples=2)
+    rng = np.random.default_rng(17)
+    reqs = []
+    for i in range(6):          # 4 fill one bucket; 2 become stragglers
+        n = int(rng.integers(5, 13))
+        req = ClusterRequest(uid=i, graph=_rand_graph(n, 2, seed=200 + i),
+                             key=jax.random.PRNGKey(i))
+        reqs.append(req)
+        batcher.admit(req)
+    clock.advance(2.0)
+    batcher.poll()              # deadline partial flush for the stragglers
+    batcher.flush()             # drains in-flight work too
+    assert batcher.pending() == 0
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        _assert_matches(r.graph, jax.random.PRNGKey(r.uid), r.result,
+                        num_samples=2)
+    assert batcher.stats.clustered == 6
+    assert batcher.stats.deadline_flushes >= 1
+
+
+@pytest.mark.parametrize("executor", ["async", "sharded"])
+def test_batch_api_executor_param_bit_exact(executor):
+    graphs = [_rand_graph(n, 2, seed=n) for n in (7, 9, 16, 33)]
+    keys = [jax.random.PRNGKey(i) for i in range(4)]
+    pool = BucketBufferPool()
+    results = correlation_cluster_batch(graphs, keys=keys, num_samples=2,
+                                        executor=executor, pool=pool)
+    for g, key, res in zip(graphs, keys, results):
+        _assert_matches(g, key, res, num_samples=2)
+    # One-shot calls harvest everything before returning: no leaked leases.
+    assert pool.leased == 0
+
+
+def test_async_executor_overlaps_then_drains():
+    """Handles stay in flight across admits; flush() collects everything."""
+    ex = AsyncExecutor()
+    batcher = ClusterBatcher(max_batch=2, executor=ex)
+    reqs = [ClusterRequest(uid=i, graph=build_graph(6, path(6)),
+                           key=jax.random.PRNGKey(i)) for i in range(6)]
+    retired = []
+    for r in reqs:
+        retired += batcher.admit(r)     # 3 full-bucket flushes dispatched
+    retired += batcher.flush()
+    assert sorted(r.uid for r in retired) == list(range(6))
+    assert ex.in_flight == 0 and batcher.pending() == 0
+    for r in reqs:
+        _assert_matches(r.graph, jax.random.PRNGKey(r.uid), r.result)
+
+
+# ---------------------------------------------------------------------------
+# Admission backpressure (max_in_flight).
+# ---------------------------------------------------------------------------
+
+
+def test_backpressure_rejects_at_admit_and_recovers():
+    ex = _StallingExecutor()
+    batcher = ClusterBatcher(max_batch=2, executor=ex, max_in_flight=1)
+    g = build_graph(6, path(6))
+    for i in range(2):          # fills the bucket → one in-flight flush
+        batcher.admit(ClusterRequest(uid=i, graph=g,
+                                     key=jax.random.PRNGKey(i)))
+    assert ex.in_flight == 1
+    with pytest.raises(AdmissionRejected):
+        batcher.admit(ClusterRequest(uid=2, graph=g,
+                                     key=jax.random.PRNGKey(2)))
+    assert batcher.stats.rejected == 1
+    assert batcher.stats.submitted == 2     # the rejected one never entered
+    ex.stalled = False
+    done = batcher.flush()      # blocking harvest clears the backpressure
+    assert sorted(r.uid for r in done) == [0, 1]
+    out = batcher.admit(ClusterRequest(uid=2, graph=g,
+                                       key=jax.random.PRNGKey(2)))
+    assert out == []            # admitted fine once capacity freed
+    assert batcher.stats.in_flight_peak == 1
+    batcher.flush()
+
+
+def test_batcher_validates_max_in_flight():
+    with pytest.raises(ValueError, match="max_in_flight"):
+        ClusterBatcher(max_in_flight=0)
+
+
+# ---------------------------------------------------------------------------
+# BucketBufferPool leases: the async-overlap regression (satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_pool_lease_not_reused_while_outstanding():
+    pool = BucketBufferPool()
+    lease1 = pool.acquire(4, 8, 4)
+    lease2 = pool.acquire(4, 8, 4)      # same shape, first still leased
+    assert lease1.arrays["ell"] is not lease2.arrays["ell"]
+    assert pool.n_buffers == 2 and pool.leased == 2
+    lease1.release()
+    lease1.release()                    # idempotent
+    assert pool.leased == 1
+    lease3 = pool.acquire(4, 8, 4)      # reuses the freed generation
+    assert lease3.arrays["ell"] is lease1.arrays["ell"]
+    assert pool.n_buffers == 2
+    lease2.release()
+    lease3.release()
+    assert pool.leased == 0
+
+
+def test_interleaved_async_flushes_never_refill_in_flight_staging():
+    """Two same-shape flushes in flight at once must pack into *distinct*
+    staging generations, and both must stay bit-exact — the regression
+    guard for the async host↔device overlap path."""
+    ex = _StallingExecutor()
+    pool = BucketBufferPool()
+    batcher = ClusterBatcher(max_batch=2, executor=ex, pool=pool)
+    graphs = [_rand_graph(6, 1, seed=s) for s in range(4)]
+    for i, g in enumerate(graphs):      # two flushes of the same (8,4) bucket
+        batcher.admit(ClusterRequest(uid=i, graph=g,
+                                     key=jax.random.PRNGKey(i)))
+    assert ex.in_flight == 2
+    # Both flushes hold their own staging lease — nothing was refilled.
+    assert pool.leased == 2 and pool.n_buffers == 2
+    ex.stalled = False
+    done = {r.uid: r for r in batcher.flush()}
+    assert sorted(done) == [0, 1, 2, 3]
+    assert pool.leased == 0             # harvest released both leases
+    for i, g in enumerate(graphs):
+        _assert_matches(g, jax.random.PRNGKey(i), done[i].result)
+    # Steady state: the freed generations are reused, the pool stops growing.
+    for i, g in enumerate(graphs):
+        batcher.admit(ClusterRequest(uid=10 + i, graph=g,
+                                     key=jax.random.PRNGKey(i)))
+    batcher.flush()
+    assert pool.n_buffers == 2
+
+
+def test_flush_failure_releases_lease_and_requeues_requests():
+    """A failed dispatch must release the staging lease (no pool growth)
+    and put the popped requests back so none are silently lost."""
+    class _FailingExecutor(SyncExecutor):
+        def __init__(self):
+            super().__init__()
+            self.fail = True
+
+        def submit(self, *args, **kwargs):
+            if self.fail:
+                raise RuntimeError("injected submit failure")
+            return super().submit(*args, **kwargs)
+
+    ex = _FailingExecutor()
+    pool = BucketBufferPool()
+    batcher = ClusterBatcher(max_batch=2, executor=ex, pool=pool)
+    g = build_graph(6, path(6))
+    batcher.admit(ClusterRequest(uid=0, graph=g, key=jax.random.PRNGKey(0)))
+    with pytest.raises(RuntimeError, match="injected"):
+        batcher.admit(ClusterRequest(uid=1, graph=g,
+                                     key=jax.random.PRNGKey(1)))
+    assert pool.leased == 0             # lease released on the failure path
+    assert batcher.pending() == 2       # both requests requeued
+    ex.fail = False
+    done = batcher.flush()              # retry succeeds with the same state
+    assert sorted(r.uid for r in done) == [0, 1]
+    for r in done:
+        _assert_matches(r.graph, jax.random.PRNGKey(r.uid), r.result)
+    assert pool.leased == 0
+
+
+def test_harvest_failure_requeues_requests_and_releases_lease():
+    """A device-side error surfacing at fetch time must requeue the
+    flush's requests, release its staging lease, and keep pending()
+    accounting sound — then a retry must succeed."""
+    class _Boom:
+        def __array__(self, *args, **kwargs):
+            raise RuntimeError("injected fetch failure")
+
+    ex = _StallingExecutor()
+    pool = BucketBufferPool()
+    batcher = ClusterBatcher(max_batch=2, executor=ex, pool=pool)
+    g = build_graph(6, path(6))
+    for i in range(2):
+        batcher.admit(ClusterRequest(uid=i, graph=g,
+                                     key=jax.random.PRNGKey(i)))
+    assert ex.in_flight == 1
+    ex._pending[0]._outputs = (_Boom(),) * 4    # poison the fetch
+    ex.stalled = False
+    with pytest.raises(RuntimeError, match="injected fetch"):
+        batcher.flush()
+    assert pool.leased == 0                     # lease released on failure
+    assert batcher.pending() == 2               # requests requeued, not lost
+    done = batcher.flush()                      # retry re-packs and succeeds
+    assert sorted(r.uid for r in done) == [0, 1]
+    for r in done:
+        _assert_matches(r.graph, jax.random.PRNGKey(r.uid), r.result)
+
+
+def test_handle_result_releases_lease_exactly_once():
+    pool = BucketBufferPool()
+    g = build_graph(6, path(6))
+    plan = plan_graph(g)
+    lease = pool.acquire(1, plan.R, plan.W)
+    ell, ranks, elig, m, _ = _pack_bucket(
+        [plan], [sample_keys(jax.random.PRNGKey(0), 1)], k=1,
+        staging=lease.arrays, g_pad=1)
+    ex = AsyncExecutor()
+    h = ex.submit(ell, ranks, elig, m, k=1, donate=pool.donate, lease=lease)
+    assert pool.leased == 1
+    h.result()
+    h.result()      # second fetch is a no-op
+    assert pool.leased == 0
+    (res,) = correlation_cluster_batch([g], keys=[jax.random.PRNGKey(0)])
+    assert (h.result()[0][0, :6].astype(np.int32) == res.labels).all()
+
+
+# ---------------------------------------------------------------------------
+# Bounded LRU program cache (satellite).
+# ---------------------------------------------------------------------------
+
+
+def test_program_cache_lru_evicts_and_recompiles_correctly():
+    prev = exec_mod.set_program_cache_capacity(2)
+    try:
+        evict0 = exec_mod.program_cache_info()["evictions"]
+        # Three distinct bucket shapes through a capacity-2 cache.
+        graphs = [build_graph(6, path(6)), build_graph(12, path(12)),
+                  build_graph(24, path(24))]
+        keys = [jax.random.PRNGKey(i) for i in range(3)]
+        for g, key in zip(graphs, keys):
+            (res,) = correlation_cluster_batch([g], keys=[key])
+            _assert_matches(g, key, res)
+        info = exec_mod.program_cache_info()
+        assert info["size"] <= 2 and info["capacity"] == 2
+        assert info["evictions"] > evict0
+        # The evicted shape recompiles and still answers bit-exactly.
+        (res,) = correlation_cluster_batch([graphs[0]], keys=[keys[0]])
+        _assert_matches(graphs[0], keys[0], res)
+    finally:
+        exec_mod.set_program_cache_capacity(prev)
+
+
+def test_program_cache_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        exec_mod.set_program_cache_capacity(0)
+    info = exec_mod.program_cache_info()
+    assert info["size"] <= info["capacity"]
+
+
+# ---------------------------------------------------------------------------
+# Factory / protocol / sharded group padding.
+# ---------------------------------------------------------------------------
+
+
+def test_make_executor_resolves_names_and_instances():
+    assert isinstance(make_executor(None), SyncExecutor)
+    assert isinstance(make_executor("async"), AsyncExecutor)
+    assert isinstance(make_executor("sharded"), ShardedExecutor)
+    ex = AsyncExecutor()
+    assert make_executor(ex) is ex
+    for impl in (SyncExecutor(), AsyncExecutor(), make_executor("sharded")):
+        assert isinstance(impl, BucketExecutor)
+    with pytest.raises(ValueError, match="unknown executor"):
+        make_executor("turbo")
+    with pytest.raises(TypeError, match="executor"):
+        make_executor(42)
+
+
+def test_sharded_group_pad_floors_at_device_count():
+    ex = ShardedExecutor(mesh=pow2_device_mesh(1))
+    assert ex.num_devices == 1
+    assert ex.group_pad(3) == 4         # plain pow2 on a 1-device mesh
+    assert ex.group_pad(0) == 1
+
+
+def test_sync_executor_completes_at_submit():
+    ex = SyncExecutor()
+    g = build_graph(6, path(6))
+    plan = plan_graph(g)
+    ell, ranks, elig, m, _ = _pack_bucket(
+        [plan], [sample_keys(jax.random.PRNGKey(0), 1)], k=1)
+    h = ex.submit(ell, ranks, elig, m, k=1)
+    assert h.ready() and h.harvested
+    assert ex.retire() == [h]           # delivered exactly once
+    assert ex.retire() == []
+
+
+# ---------------------------------------------------------------------------
+# 8-virtual-device sharded execution (slow, subprocess — mirrors test_dist).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_executor_eight_devices_subprocess():
+    """One flush spans all 8 host devices and stays bit-exact vs the
+    per-graph engine, with group padding raised to the device count."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.core import (build_graph, correlation_cluster,
+                                correlation_cluster_batch)
+        from repro.core.executor import ShardedExecutor
+        from repro.core.graph import random_arboric
+        from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
+        ex = ShardedExecutor()
+        assert ex.num_devices == 8, ex.num_devices
+        assert ex.group_pad(3) == 8     # floored at the device count
+        rng = np.random.default_rng(4)
+        graphs = [build_graph(n, random_arboric(n, 2, rng)[0])
+                  for n in rng.integers(5, 30, size=12)]
+        keys = [jax.random.PRNGKey(i) for i in range(12)]
+        res, stats = correlation_cluster_batch(
+            graphs, keys=keys, num_samples=2, executor=ex, with_stats=True)
+        assert all(B % 8 == 0 for _, _, B in stats.bucket_shapes)
+        for g, key, r in zip(graphs, keys, res):
+            ref = correlation_cluster(g, key=key, num_samples=2)
+            assert (r.labels == ref.labels).all(), "8-shard label mismatch"
+            assert r.cost == ref.cost
+        b = ClusterBatcher(max_batch=4, executor="sharded", num_samples=2)
+        done = []
+        for i, g in enumerate(graphs):
+            done += b.admit(ClusterRequest(uid=i, graph=g,
+                                           key=jax.random.PRNGKey(i)))
+        done += b.flush()
+        assert len(done) == 12
+        for r in done:
+            ref = correlation_cluster(r.graph,
+                                      key=jax.random.PRNGKey(r.uid),
+                                      num_samples=2)
+            assert (r.result.labels == ref.labels).all()
+            assert r.result.cost == ref.cost
+        print("OK devices=", ex.num_devices)
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout

@@ -119,3 +119,18 @@ def test_kernel_path_equivalence(rng):
     a = greedy_mis_parallel(g, ranks)
     b = greedy_mis_parallel(g, ranks, use_kernel=True)
     assert (np.asarray(a.status) == np.asarray(b.status)).all()
+
+
+def test_batched_permutation_ranks_bit_identical():
+    """The packer's fused rank batch must be row-bit-identical to per-key
+    calls — the property the batch engine's bit-exactness rests on."""
+    from repro.core import random_permutation_ranks_batch
+
+    for n in (1, 2, 7, 33, 96):
+        keys = [jax.random.fold_in(jax.random.PRNGKey(5), i)
+                for i in range(4)]
+        batch = np.asarray(random_permutation_ranks_batch(n, keys))
+        assert batch.shape == (4, n)
+        for i, key in enumerate(keys):
+            solo = np.asarray(random_permutation_ranks(n, key))
+            assert (batch[i] == solo).all(), (n, i)
