@@ -8,10 +8,14 @@ for every new ``(n, m)`` shape; the batch engine compiles one program per
 lands in the bucket. ``--executor`` picks how buckets reach the device:
 ``sync`` (block per bucket), ``async`` (all buckets dispatched before any
 harvest — packing overlaps device execution), ``sharded`` (each bucket
-data-parallel across all local devices).
+data-parallel across all local devices). ``--policy`` picks the scheduling
+policy for the serving-style pass (the same workload streamed through
+``ClusterBatcher`` + ``serve_all``), whose per-bucket flush-latency
+telemetry is emitted alongside the one-shot numbers.
 
 Run:  PYTHONPATH=src python benchmarks/batch_bench.py \
-          [--graphs 96] [--repeat 3] [--executor sync] [--json BENCH_batch.json]
+          [--graphs 96] [--repeat 3] [--executor sync] [--policy full] \
+          [--json BENCH_batch.json]
 
 Reported (and written machine-readably to ``--json`` for cross-PR perf
 tracking):
@@ -19,6 +23,8 @@ tracking):
   * graphs/sec of ``correlation_cluster_batch`` (same graphs, same keys —
     output is bit-identical, which is also asserted)
   * p50/p99 over the steady-state repeats
+  * graphs/sec of the serving pass under ``--policy`` + its flush-latency
+    telemetry (p50/p99 wall + pack per bucket shape)
   * compile counts: per-graph MIS programs vs batch bucket programs, plus
     the bounded program-cache state (size/capacity/evictions)
 """
@@ -37,6 +43,9 @@ from repro.core import batch as batch_mod
 from repro.core import make_executor, program_cache_info
 from repro.core.graph import random_arboric
 from repro.core.mis import _greedy_mis_parallel_impl
+from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
+from repro.serve.engine import serve_all
+from repro.serve.scheduler import POLICY_NAMES
 
 
 def make_workload(num_graphs: int, seed: int = 0):
@@ -67,6 +76,26 @@ def bench_batch(graphs, keys, lams, executor):
     return time.perf_counter() - t0, results
 
 
+def bench_serve_policy(graphs, lams, policy: str, executor: str):
+    """Stream the workload through the serving engine under a policy.
+
+    Same graphs/keys as the one-shot passes (so results are asserted
+    bit-identical to the per-graph loop), driven by ``serve_all``. Returns
+    (wall_seconds, {uid: request}, stats); the stats carry the per-bucket
+    flush-latency telemetry the JSON emits.
+    """
+    max_wait = None if policy == "full" else 0.05
+    batcher = ClusterBatcher(max_batch=32, policy=policy, max_wait=max_wait,
+                             executor=executor)
+    reqs = [ClusterRequest(uid=i, graph=g, key=jax.random.PRNGKey(i),
+                           lam=lam)
+            for i, (g, lam) in enumerate(zip(graphs, lams))]
+    t0 = time.perf_counter()
+    retired = serve_all(batcher, reqs)
+    dt = time.perf_counter() - t0
+    return dt, {r.uid: r for r in retired}, batcher.stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graphs", type=int, default=96)
@@ -74,6 +103,8 @@ def main():
                     help="steady-state repeats after the cold pass")
     ap.add_argument("--executor", choices=["sync", "async", "sharded"],
                     default="sync")
+    ap.add_argument("--policy", choices=list(POLICY_NAMES), default="full",
+                    help="scheduling policy for the serving-style pass")
     ap.add_argument("--json", default="BENCH_batch.json",
                     help="machine-readable results path ('' to skip)")
     args = ap.parse_args()
@@ -124,10 +155,24 @@ def main():
     assert batch_compiles <= len(buckets) + 1, (
         "bucket contract violated: compiles must track buckets, not graphs")
 
+    # --- serving pass: same workload through the scheduler-driven engine ----
+    bench_serve_policy(graphs, lams, args.policy, args.executor)  # warm
+    t_serve, served, serve_stats = bench_serve_policy(
+        graphs, lams, args.policy, args.executor)
+    for uid, a in enumerate(loop_res):
+        b = served[uid].result
+        assert (a.labels == b.labels).all() and a.cost == b.cost, \
+            "serving-policy output diverged from the per-graph engine"
+    print(f"[serve]  policy={args.policy:9s} {n_graphs / t_serve:8.1f} "
+          f"graphs/s  flushes={serve_stats.flushes} "
+          f"(deadline={serve_stats.deadline_flushes}, "
+          f"stolen={serve_stats.stolen_requests})")
+
     if args.json:
         payload = {
             "bench": "batch",
             "executor": args.executor,
+            "policy": args.policy,
             "n_graphs": n_graphs,
             "n_buckets": len(buckets),
             "cold": {
@@ -145,6 +190,15 @@ def main():
                 "speedup": t_loop_w / t_batch_w,
                 "batch_s_p50": float(np.percentile(batch_times, 50)),
                 "batch_s_p99": float(np.percentile(batch_times, 99)),
+            },
+            "serve": {
+                "policy": args.policy,
+                "gps": n_graphs / t_serve,
+                "flushes": serve_stats.flushes,
+                "deadline_flushes": serve_stats.deadline_flushes,
+                "coalesced_flushes": serve_stats.coalesced_flushes,
+                "stolen_requests": serve_stats.stolen_requests,
+                "flush_latency": serve_stats.latency.summary(),
             },
             "program_cache": program_cache_info(),
         }

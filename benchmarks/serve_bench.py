@@ -1,34 +1,35 @@
-"""Serving latency/throughput: flush policies × bucket executors.
+"""Serving latency/throughput: scheduling policies × bucket executors.
 
-Two questions answered, machine-readably (``BENCH_serve.json``):
+Three questions answered, machine-readably (``BENCH_serve.json``):
 
-* **Policy** — what does the ``max_wait`` deadline policy cost in
-  throughput and buy in tail latency? A stream of small clustering queries
-  is driven through :class:`ClusterBatcher` under the full-bucket policy
-  (buckets flush only when they fill ``max_batch``) and the deadline
-  policy (``poll()`` flushes any bucket whose oldest request waited past
-  ``max_wait``, padded to a pow2 sub-batch).
-* **Executor** — what does pipelined execution buy? The same closed-loop
-  stream is pushed through the ``sync`` executor (block per flush) and the
-  ``async`` executor (dispatch and keep packing — host packs bucket i+1
-  while bucket i computes), plus ``--executor sharded`` to span all local
-  devices per flush. Results are asserted bit-identical to the per-graph
-  engine in every configuration.
+* **Policy** — what does each scheduling policy cost in throughput and buy
+  in tail latency? A stream of small clustering queries is driven through
+  :class:`ClusterBatcher` under the full-bucket policy (buckets flush only
+  when they fill ``max_batch``), the deadline policy (``poll()`` flushes
+  any bucket whose oldest request waited past ``max_wait``), and — when
+  ``--policy`` selects them — the adaptive and coalescing policies from
+  ``repro.serve.scheduler``. Every pass emits its per-bucket flush-latency
+  telemetry (p50/p99 wall + pack) so scheduling quality is tracked across
+  PRs.
+* **Starvation** (the coalescing acceptance scenario) — a skewed
+  two-bucket arrival stream on a *virtual* clock: a hot bucket fills
+  constantly while a cold bucket trickles. Under the full-bucket policy
+  the cold requests wait for the end-of-stream drain; the coalescing
+  policy promotes them into hot flushes and bounds their p99 wait. The
+  comparison is deterministic (virtual time) and asserted.
+* **Executor / adaptive window** — what does pipelined execution buy, and
+  does the adaptive in-flight window match a hand-tuned static
+  ``max_in_flight``? Closed-loop steady-state comparisons, interleaved so
+  background-load drift hits every engine equally; best-of-N reported.
 
 Per-request latency = admit → retire on the engine clock. Policy passes run
 twice: the first warms the jit caches (the serving steady state), the
 second measures.
 
-The executor comparison is a *steady-state* measurement: one long-lived
-batcher per executor (buffer pools and jit caches fully warm — a fresh
-engine per pass would charge the async path its pipelined buffer
-generations again on every pass), with repeat passes interleaved
-(sync, async, sync, ...) so background-load drift on a shared host hits
-every executor equally; best-of-N per executor is reported.
-
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py \
           [--graphs 200] [--max-batch 16] [--max-wait 0.05] \
-          [--executor sync] [--smoke] [--json BENCH_serve.json]
+          [--policy deadline] [--executor sync] [--smoke] \
+          [--json BENCH_serve.json]
 """
 
 from __future__ import annotations
@@ -41,8 +42,15 @@ import jax
 import numpy as np
 
 from repro.core import build_graph, correlation_cluster, program_cache_info
-from repro.core.graph import random_arboric
-from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
+from repro.core.graph import path, random_arboric
+from repro.serve.cluster_batcher import (
+    AdmissionRejected,
+    ClusterBatcher,
+    ClusterRequest,
+)
+from repro.serve.engine import serve_all
+from repro.serve.scheduler import POLICY_NAMES
+from repro.util import VirtualClock
 
 
 def make_requests(num_graphs: int, seed: int = 0, n_lo: int = 8,
@@ -61,7 +69,8 @@ def make_requests(num_graphs: int, seed: int = 0, n_lo: int = 8,
 
 
 def drive(reqs, max_batch: int, max_wait, num_samples: int,
-          executor: str = "sync", arrival_gap: float = 0.0, batcher=None):
+          executor: str = "sync", arrival_gap: float = 0.0, batcher=None,
+          policy=None):
     """One serving pass; returns (wall_seconds, per-request waits, stats).
 
     ``arrival_gap`` spaces admissions in time (a Poisson-ish open-loop
@@ -70,10 +79,13 @@ def drive(reqs, max_batch: int, max_wait, num_samples: int,
     exists for — the full-bucket policy makes those requests wait for the
     end-of-stream drain. Pass a long-lived ``batcher`` to measure the
     steady state (warm pools and caches) instead of a cold engine.
+    Admissions refused by a backpressure window are retried after a
+    harvest, like the ``serve_all`` reference loop.
     """
     if batcher is None:
         batcher = ClusterBatcher(max_batch=max_batch, max_wait=max_wait,
-                                 num_samples=num_samples, executor=executor)
+                                 num_samples=num_samples, executor=executor,
+                                 policy=policy)
     waits = {}
 
     def account(done):
@@ -85,9 +97,20 @@ def drive(reqs, max_batch: int, max_wait, num_samples: int,
     for uid, g, lam in reqs:
         if arrival_gap:
             time.sleep(arrival_gap)
-        account(batcher.admit(
-            ClusterRequest(uid=uid, graph=g, key=jax.random.PRNGKey(uid),
-                           lam=lam)))
+        req = ClusterRequest(uid=uid, graph=g, key=jax.random.PRNGKey(uid),
+                             lam=lam)
+        while True:
+            try:
+                account(batcher.admit(req))
+                break
+            except AdmissionRejected:
+                done = batcher.retire()
+                account(done)
+                if not done:
+                    # No progress: sleep like serve_all's reject_backoff —
+                    # a zero-backoff spin would burn the very host cores
+                    # the steady-state comparison measures.
+                    time.sleep(0.0005)
         account(batcher.poll())
     account(batcher.flush())
     dt = time.perf_counter() - t0
@@ -95,29 +118,104 @@ def drive(reqs, max_batch: int, max_wait, num_samples: int,
     return dt, np.array([waits[uid] for uid, *_ in reqs]), batcher.stats
 
 
-def steady_throughput(reqs, max_batch: int, num_samples: int,
-                      executors, repeat: int = 5):
-    """Steady-state closed-loop graphs/s per executor, interleaved.
+def steady_throughput(reqs, engines, repeat: int = 5):
+    """Steady-state closed-loop graphs/s per named engine, interleaved.
 
-    One long-lived batcher per executor (so pools, jit caches and — for
-    the pipelined path — the extra in-flight staging generations are all
-    warm, as in real serving). Passes alternate between executors
-    (sync, async, sync, ...) so background-load drift on a shared host
-    degrades every executor's sample set equally; best-of-N per executor
-    is reported.
+    Long-lived engines (so pools, jit caches and — for the pipelined path
+    — the extra in-flight staging generations are all warm, as in real
+    serving). Passes alternate between engines (a, b, a, ...) so
+    background-load drift on a shared host degrades every engine's sample
+    set equally; best-of-N per engine is reported.
     """
-    engines = {name: ClusterBatcher(max_batch=max_batch,
-                                    num_samples=num_samples, executor=name)
-               for name in executors}
-    best = {name: None for name in executors}
-    for name in executors:                      # warm pass per executor
-        drive(reqs, max_batch, None, num_samples, batcher=engines[name])
+    best = {name: None for name in engines}
+    for name, engine in engines.items():        # warm pass per engine
+        drive(reqs, engine.max_batch, None, engine.num_samples,
+              batcher=engine)
     for _ in range(repeat):
-        for name in executors:
-            dt, _, _ = drive(reqs, max_batch, None, num_samples,
-                             batcher=engines[name])
+        for name, engine in engines.items():
+            dt, _, _ = drive(reqs, engine.max_batch, None,
+                             engine.num_samples, batcher=engine)
             best[name] = dt if best[name] is None else min(best[name], dt)
     return {name: len(reqs) / t for name, t in best.items()}
+
+
+def starvation_comparison(smoke: bool, max_batch: int = 16,
+                          gap: float = 0.002):
+    """Skewed two-bucket stream on a virtual clock: full vs coalesce.
+
+    A hot ``(32, 4)`` bucket receives almost every arrival; a cold
+    ``(8, 4)`` bucket gets one request every ``cold_every`` arrivals and
+    never fills ``max_batch``. Waits are measured in *virtual* seconds, so
+    the comparison is deterministic: under the full-bucket policy cold
+    requests survive to the end-of-stream drain (p99 wait grows with the
+    stream), under the coalescing policy (deadline ``10·gap``, aggressive
+    ``steal_wait``) the hot bucket's partial deadline flushes have spare
+    room and the cold requests are promoted into them — their p99 wait is
+    bounded by the hot flush cadence, not the stream length.
+    """
+    n_hot = 64 if smoke else 240
+    cold_every = 16
+
+    def build_stream():
+        # Fresh rng per pass: both policies must see the *identical* stream
+        # or the asserted A/B would compare two different workloads.
+        rng = np.random.default_rng(7)
+        stream = []
+        uid = 0
+        for i in range(n_hot):
+            if i % cold_every == 0:
+                stream.append((uid, build_graph(6, path(6)), True))
+                uid += 1
+            n = int(rng.integers(17, 30))
+            stream.append((uid, build_graph(n, path(n)), False))
+            uid += 1
+        return stream
+
+    from repro.serve.scheduler import CoalescingPolicy
+
+    results = {}
+    for policy in ("full", "coalesce"):
+        clock = VirtualClock()
+        pol = CoalescingPolicy(max_batch, max_wait=10 * gap,
+                               steal_wait=gap / 2) \
+            if policy == "coalesce" else policy
+        batcher = ClusterBatcher(max_batch=max_batch, policy=pol,
+                                 clock=clock)
+        waits, is_cold = {}, {}
+        stream = build_stream()
+
+        def account(done, now):
+            for r in done:
+                waits[r.uid] = now - r.admitted_at
+
+        for uid, g, cold in stream:
+            is_cold[uid] = cold
+            clock.advance(gap)
+            account(batcher.admit(
+                ClusterRequest(uid=uid, graph=g,
+                               key=jax.random.PRNGKey(uid))), clock.t)
+            account(batcher.poll(), clock.t)
+        account(batcher.flush(), clock.t)
+        cold_waits = np.array([w for uid, w in waits.items() if is_cold[uid]])
+        hot_waits = np.array([w for uid, w in waits.items()
+                              if not is_cold[uid]])
+        results[policy] = {
+            "cold_p99_ms": pct(cold_waits, 99) * 1e3,
+            "cold_max_ms": float(cold_waits.max()) * 1e3,
+            "hot_p99_ms": pct(hot_waits, 99) * 1e3,
+            "coalesced_flushes": batcher.stats.coalesced_flushes,
+            "stolen_requests": batcher.stats.stolen_requests,
+        }
+        print(f"[starve:{policy:8s}] cold p99={results[policy]['cold_p99_ms']:8.1f}ms "
+              f"max={results[policy]['cold_max_ms']:8.1f}ms   "
+              f"hot p99={results[policy]['hot_p99_ms']:6.1f}ms   "
+              f"stolen={batcher.stats.stolen_requests}")
+    assert results["coalesce"]["stolen_requests"] > 0, \
+        "coalescing policy never stole — the scenario is broken"
+    assert results["coalesce"]["cold_p99_ms"] < results["full"]["cold_p99_ms"], (
+        "coalescing must bound the starved bucket's p99 wait below the "
+        "full-bucket policy's end-of-stream drain")
+    return results
 
 
 def pct(x, q):
@@ -133,6 +231,9 @@ def main():
     ap.add_argument("--num-samples", type=int, default=1)
     ap.add_argument("--arrival-ms", type=float, default=2.0,
                     help="inter-arrival gap of the simulated request stream")
+    ap.add_argument("--policy", choices=list(POLICY_NAMES),
+                    default="deadline",
+                    help="scheduling policy for the headline policy pass")
     ap.add_argument("--executor", choices=["sync", "async", "sharded"],
                     default="sync",
                     help="bucket executor for the policy passes")
@@ -151,7 +252,7 @@ def main():
     print(f"workload: {n_graphs} graphs, max_batch={args.max_batch}, "
           f"max_wait={args.max_wait * 1e3:.0f}ms, "
           f"arrival gap={arrival_gap * 1e3:.1f}ms, "
-          f"executor={args.executor}")
+          f"policy={args.policy}, executor={args.executor}")
 
     # Warm every pow2 sub-batch program the workload can hit (deadline
     # flushes run partial buckets, and flush grouping is timing-dependent,
@@ -164,26 +265,40 @@ def main():
     print(f"warmup: {compiled} bucket programs compiled in "
           f"{time.perf_counter() - t0:.1f}s")
 
+    # Policy comparison: full-bucket and deadline always (the cross-PR
+    # baseline pair), plus the selected --policy when it is neither.
+    policy_runs = ["full", "deadline"]
+    if args.policy not in policy_runs:
+        policy_runs.append(args.policy)
     results = {}
-    for label, max_wait in [("full-bucket", None),
-                            ("deadline", args.max_wait)]:
+    for policy in policy_runs:
+        max_wait = None if policy == "full" else args.max_wait
         drive(reqs, args.max_batch, max_wait, args.num_samples,
-              executor=args.executor)                         # warm pass
+              executor=args.executor, policy=policy)          # warm pass
         dt, waits, stats = drive(reqs, args.max_batch, max_wait,
                                  args.num_samples, executor=args.executor,
-                                 arrival_gap=arrival_gap)
-        results[label] = (dt, waits, stats)
-        print(f"[{label:11s}] {n_graphs / dt:8.1f} graphs/s   "
+                                 policy=policy, arrival_gap=arrival_gap)
+        results[policy] = (dt, waits, stats)
+        extra = ""
+        if stats.stolen_requests:
+            extra = f" stolen={stats.stolen_requests}"
+        if stats.rejected:
+            extra += f" rejected={stats.rejected}"
+        print(f"[{policy:9s}] {n_graphs / dt:8.1f} graphs/s   "
               f"wait p50={pct(waits, 50) * 1e3:7.1f}ms  "
               f"p99={pct(waits, 99) * 1e3:7.1f}ms  "
               f"max={waits.max() * 1e3:7.1f}ms   "
-              f"flushes={stats.flushes} (deadline={stats.deadline_flushes}) "
-              f"padded_slots={stats.padded_slots}")
-        if label == "deadline":
+              f"flushes={stats.flushes} (deadline={stats.deadline_flushes})"
+              f"{extra}")
+        if policy == "deadline":
             assert stats.deadline_flushes > 0, (
                 "deadline policy never fired — the comparison below would "
                 "be two full-bucket runs; raise --arrival-ms or lower "
                 "--max-wait")
+
+    # Starvation: the coalescing acceptance scenario (virtual clock,
+    # deterministic, asserted).
+    starvation = starvation_comparison(args.smoke)
 
     # Executor comparison: closed-loop steady state, sync vs pipelined
     # (vs the selected executor when it is neither). The async win is the
@@ -198,8 +313,11 @@ def main():
     exec_names = ["sync", "async"]
     if args.executor not in exec_names:
         exec_names.append(args.executor)
-    comparison = steady_throughput(comp_reqs, args.max_batch,
-                                   args.num_samples, exec_names,
+    engines = {name: ClusterBatcher(max_batch=args.max_batch,
+                                    num_samples=args.num_samples,
+                                    executor=name)
+               for name in exec_names}
+    comparison = steady_throughput(comp_reqs, engines,
                                    repeat=3 if args.smoke else 6)
     for name in exec_names:
         print(f"[executor:{name:8s}] {comparison[name]:8.1f} graphs/s "
@@ -207,32 +325,46 @@ def main():
     async_speedup = comparison["async"] / comparison["sync"]
     print(f"[executor] async pipelining: {async_speedup:.2f}x over sync")
 
-    # Bit-exactness spot check against the per-graph engine.
+    # Adaptive in-flight window vs a hand-tuned static max_in_flight: same
+    # closed loop, pipelined executor, interleaved best-of-N. The adaptive
+    # window replaces the static knob, so steady-state throughput should
+    # match or beat it.
+    window_engines = {
+        "static": ClusterBatcher(max_batch=args.max_batch,
+                                 num_samples=args.num_samples,
+                                 executor="async", max_in_flight=4),
+        "adaptive": ClusterBatcher(max_batch=args.max_batch,
+                                   num_samples=args.num_samples,
+                                   executor="async", policy="adaptive"),
+    }
+    window_cmp = steady_throughput(comp_reqs, window_engines,
+                                   repeat=3 if args.smoke else 6)
+    adaptive_ratio = window_cmp["adaptive"] / window_cmp["static"]
+    print(f"[in-flight] static(4)={window_cmp['static']:8.1f} g/s   "
+          f"adaptive={window_cmp['adaptive']:8.1f} g/s   "
+          f"ratio={adaptive_ratio:.2f}x")
+
+    # Bit-exactness spot check against the per-graph engine, under the
+    # selected policy.
     sample = reqs[:: max(1, len(reqs) // 8)]
     batcher = ClusterBatcher(max_batch=args.max_batch,
                              max_wait=args.max_wait,
                              num_samples=args.num_samples,
-                             executor=args.executor)
-    done = {}
-    for uid, g, lam in sample:
-        for r in batcher.admit(ClusterRequest(uid=uid, graph=g,
-                                              key=jax.random.PRNGKey(uid),
-                                              lam=lam)):
-            done[r.uid] = r
-        for r in batcher.poll():
-            done[r.uid] = r
-    for r in batcher.flush():
-        done[r.uid] = r
+                             executor=args.executor, policy=args.policy)
+    sample_reqs = [ClusterRequest(uid=uid, graph=g,
+                                  key=jax.random.PRNGKey(uid), lam=lam)
+                   for uid, g, lam in sample]
+    done = {r.uid: r for r in serve_all(batcher, sample_reqs)}
     for uid, g, lam in sample:
         ref = correlation_cluster(g, key=jax.random.PRNGKey(uid), lam=lam,
                                   num_samples=args.num_samples)
         assert (done[uid].result.labels == ref.labels).all()
         assert done[uid].result.cost == ref.cost
     print(f"bit-exactness: {len(sample)} sampled requests match the "
-          f"per-graph engine under the deadline policy "
+          f"per-graph engine under the {args.policy!r} policy "
           f"({args.executor} executor)")
 
-    dt_full, w_full, s_full = results["full-bucket"]
+    dt_full, w_full, s_full = results["full"]
     dt_dead, w_dead, s_dead = results["deadline"]
     print(f"\nsummary: deadline policy holds p99 wait at "
           f"{pct(w_dead, 99) * 1e3:.1f}ms vs {pct(w_full, 99) * 1e3:.1f}ms "
@@ -248,12 +380,23 @@ def main():
                 "wait_max_ms": float(waits.max()) * 1e3,
                 "flushes": stats.flushes,
                 "deadline_flushes": stats.deadline_flushes,
+                "coalesced_flushes": stats.coalesced_flushes,
+                "stolen_requests": stats.stolen_requests,
                 "padded_slots": stats.padded_slots,
                 "rejected": stats.rejected,
                 "in_flight_peak": stats.in_flight_peak,
+                "flush_latency": stats.latency.summary(),
             }
+        policies_payload = {
+            "full_bucket": policy_payload(*results["full"]),
+            "deadline": policy_payload(*results["deadline"]),
+        }
+        for policy in policy_runs:
+            if policy not in ("full", "deadline"):
+                policies_payload[policy] = policy_payload(*results[policy])
         payload = {
             "bench": "serve",
+            "policy": args.policy,
             "executor": args.executor,
             "smoke": bool(args.smoke),
             "n_graphs": n_graphs,
@@ -261,12 +404,12 @@ def main():
             "max_wait_ms": args.max_wait * 1e3,
             "arrival_gap_ms": arrival_gap * 1e3,
             "warmup_programs": compiled,
-            "policies": {
-                "full_bucket": policy_payload(dt_full, w_full, s_full),
-                "deadline": policy_payload(dt_dead, w_dead, s_dead),
-            },
+            "policies": policies_payload,
+            "starvation": starvation,
             "executor_steady_gps": comparison,
             "async_speedup_vs_sync": async_speedup,
+            "inflight_window_gps": window_cmp,
+            "adaptive_vs_static_ratio": adaptive_ratio,
             "program_cache": program_cache_info(),
         }
         with open(args.json, "w") as f:

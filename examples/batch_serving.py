@@ -1,22 +1,29 @@
 """Clustering-as-a-service demo: streaming graphs through the engine API.
 
 Simulates the north-star serving workload — a stream of small similarity
-graphs (per-band near-dup buckets) arriving one at a time — under both
-flush policies of the unified engine:
+graphs (per-band near-dup buckets) arriving one at a time — under the
+scheduling policies of the pluggable scheduler layer
+(``repro.serve.scheduler``):
 
 * **Full-bucket** (throughput mode): a bucket flushes only when it fills
   ``max_batch`` slots; stragglers wait for the end-of-stream drain.
 * **Deadline** (latency mode): ``max_wait`` bounds how long any request
   can sit in a partial bucket; ``poll()`` flushes overdue buckets padded
   to the next power-of-two sub-batch.
+* **Adaptive** (self-tuning pipelining): the deadline policy plus a
+  dynamic in-flight admission window derived from observed flush latency
+  — it replaces the hand-tuned ``max_in_flight`` knob. At the window,
+  ``admit`` raises ``AdmissionRejected`` (here the demo just drains and
+  retries — a real front-end would shed load).
+* **Coalescing** (work-stealing): requests starving in a small shape
+  bucket are promoted into a compatible larger bucket's flush, so no
+  queue waits unboundedly behind a hot one.
 
-and then under the **async executor** (pipelined mode): flushes are
-dispatched without blocking, so the engine packs the next bucket while the
-previous one computes on device — completed flushes are harvested on later
-``admit``/``poll``/``flush`` calls. ``max_in_flight`` bounds how many
-flushes may be outstanding; at the bound, ``admit`` raises
-``AdmissionRejected`` (here the demo just drains and retries — a real
-front-end would shed load).
+The full-bucket/deadline drives also contrast the **async executor**
+(pipelined mode): flushes are dispatched without blocking, so the engine
+packs the next bucket while the previous one computes on device —
+completed flushes are harvested on later ``admit``/``poll``/``flush``
+calls.
 
 Every result is bit-identical to running ``correlation_cluster`` on that
 graph alone, under every policy and executor.
@@ -82,13 +89,20 @@ def drive(batcher: ClusterBatcher, n_requests: int, label: str):
 
     s = batcher.stats
     print(f"served {retired} queries in {dt:.2f}s "
-          f"({retired / dt:.1f} graphs/s)")
-    print(f"flushes={s.flushes} (deadline={s.deadline_flushes})  "
+          f"({retired / dt:.1f} graphs/s)  [policy={s.policy}]")
+    print(f"flushes={s.flushes} (deadline={s.deadline_flushes}, "
+          f"coalesced={s.coalesced_flushes})  "
           f"buckets_seen={s.buckets_seen}  padded_slots={s.padded_slots}  "
           f"pad_vertex_waste={s.pad_vertex_waste}")
+    if s.stolen_requests:
+        print(f"work-stealing: {s.stolen_requests} requests promoted into "
+              "larger-bucket flushes")
     if s.rejected or s.in_flight_peak:
         print(f"backpressure: rejected={s.rejected}  "
               f"in_flight_peak={s.in_flight_peak}")
+    if s.latency.total_flushes:
+        print(f"flush latency: wall EWMA={s.latency.ewma_wall * 1e3:.1f}ms  "
+              f"pack EWMA={s.latency.ewma_pack * 1e3:.1f}ms")
     print(f"max in-engine wait: {max(waits):.3f}s")
 
 
@@ -104,6 +118,17 @@ def main():
     drive(ClusterBatcher(max_batch=16, num_samples=2, max_wait=0.05,
                          executor="async", max_in_flight=4),
           n_requests, "async executor (pipelined flushes, max_in_flight=4)")
+    # Self-tuning pipelining: the adaptive policy derives the in-flight
+    # window from the flush-latency telemetry instead of the knob above.
+    drive(ClusterBatcher(max_batch=16, num_samples=2, max_wait=0.05,
+                         executor="async", policy="adaptive"),
+          n_requests, "adaptive policy (latency-derived in-flight window)")
+    # Work-stealing: requests stuck in a rare shape bucket ride a hot
+    # bucket's flush at a promoted (R, W) shape — same answers, bounded
+    # wait for the starved bucket.
+    drive(ClusterBatcher(max_batch=16, num_samples=2, max_wait=0.05,
+                         policy="coalesce"),
+          n_requests, "coalescing policy (cross-bucket work-stealing)")
 
 
 if __name__ == "__main__":

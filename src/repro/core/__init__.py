@@ -20,7 +20,13 @@ Layout:
 
 from .api import ClusterResult, correlation_cluster, correlation_cluster_batch
 from .arboricity import arboricity_bounds, degeneracy_parallel, degeneracy_sequential
-from .batch import BucketBufferPool, GraphPlan, PackStats, plan_graph
+from .batch import (
+    BucketBufferPool,
+    GraphPlan,
+    PackStats,
+    plan_graph,
+    promote_plan,
+)
 from .executor import (
     AsyncExecutor,
     BucketExecutor,
@@ -68,6 +74,7 @@ __all__ = [
     "PackStats",
     "BucketBufferPool",
     "plan_graph",
+    "promote_plan",
     "BucketExecutor",
     "SyncExecutor",
     "AsyncExecutor",

@@ -40,7 +40,8 @@ from .graph import Graph
 # Backward-compatible re-exports: the pre-split module exposed all of these.
 from .plan import (  # noqa: F401
     MAX_ROWS, MAX_WIDTH, MIN_ROWS, MIN_WIDTH, BucketBufferPool, GraphPlan,
-    PackStats, StagingLease, _pack_bucket, plan_graph, result_for_plan,
+    PackStats, StagingLease, _pack_bucket, plan_graph, promote_plan,
+    result_for_plan,
 )
 from .executor import (  # noqa: F401
     IN_MIS, REMOVED, UNDECIDED, AsyncExecutor, BucketExecutor, InFlightBucket,
@@ -169,7 +170,8 @@ def correlation_cluster_batch(
 
 __all__ = [
     "GraphPlan", "PackStats", "BucketBufferPool", "StagingLease",
-    "plan_graph", "result_for_plan", "correlation_cluster_batch",
+    "plan_graph", "promote_plan", "result_for_plan",
+    "correlation_cluster_batch",
     "BucketExecutor", "SyncExecutor", "AsyncExecutor", "ShardedExecutor",
     "InFlightBucket", "make_executor", "program_cache_size",
     "program_cache_capacity", "set_program_cache_capacity",

@@ -42,6 +42,7 @@ computation (asserted for every executor in ``tests/test_executor.py``).
 
 from __future__ import annotations
 
+import time
 import warnings
 from collections import OrderedDict, deque
 from functools import partial
@@ -306,15 +307,37 @@ class InFlightBucket:
     that fed the program. ``result()`` blocks for the outputs, converts
     them to numpy, and only then releases the lease — the invariant that
     keeps overlapped flushes from refilling a buffer still in flight.
+
+    Per-flush latency telemetry rides on the handle: ``shape`` is the
+    packed ``(B, R, W)``, ``pack_seconds`` the host packing time (stamped
+    by :func:`pack_and_submit`), ``submitted_at`` the dispatch wall-clock
+    stamp, and ``wall_seconds`` the submit→fetch wall time, filled in when
+    the outputs are first fetched. The serving layer feeds these into its
+    :class:`~repro.serve.scheduler.FlushTelemetry` so scheduling policies
+    can adapt to observed flush latency.
     """
 
-    __slots__ = ("payload", "_outputs", "_fetched", "_lease")
+    __slots__ = ("payload", "_outputs", "_fetched", "_lease",
+                 "shape", "pack_seconds", "submitted_at", "wall_seconds",
+                 "inflight_at_submit")
 
-    def __init__(self, outputs, payload: Any = None, lease=None):
+    def __init__(self, outputs, payload: Any = None, lease=None,
+                 shape: Optional[Tuple[int, ...]] = None,
+                 pack_seconds: float = 0.0,
+                 submitted_at: Optional[float] = None,
+                 inflight_at_submit: int = 1):
         self._outputs = outputs
         self._fetched: Optional[Tuple[np.ndarray, ...]] = None
         self.payload = payload
         self._lease = lease
+        self.shape = shape
+        self.pack_seconds = pack_seconds
+        self.submitted_at = submitted_at
+        self.wall_seconds: Optional[float] = None
+        # In-flight depth counting this flush — wall time includes queueing
+        # behind the depth−1 earlier flushes, so telemetry divides by this
+        # to estimate per-flush service time.
+        self.inflight_at_submit = inflight_at_submit
 
     @property
     def harvested(self) -> bool:
@@ -348,6 +371,8 @@ class InFlightBucket:
                     "of this handle failed)")
             try:
                 self._fetched = tuple(np.asarray(o) for o in outputs)
+                if self.submitted_at is not None:
+                    self.wall_seconds = time.perf_counter() - self.submitted_at
             finally:
                 if self._lease is not None:
                     self._lease.release()
@@ -369,13 +394,16 @@ class BucketExecutor(Protocol):
     def submit(self, ell, ranks_p, elig_p, m_edges, k: int,
                use_kernel: bool = False, donate: bool = False,
                payload: Any = None, lease=None,
-               track: bool = True) -> InFlightBucket:
+               track: bool = True,
+               pack_seconds: float = 0.0) -> InFlightBucket:
         """Dispatch one packed bucket; returns its in-flight handle.
 
         ``track=True`` (serving layers) enqueues the handle for delivery
         through ``retire``/``drain``; ``track=False`` (one-shot callers
         that keep their own handle list and harvest via ``result()``)
-        leaves queue bookkeeping to the submitter.
+        leaves queue bookkeeping to the submitter. ``pack_seconds`` is the
+        host packing time the submitter measured; it is carried on the
+        handle for latency telemetry.
         """
         ...
 
@@ -408,11 +436,17 @@ class _QueueExecutor:
     def submit(self, ell, ranks_p, elig_p, m_edges, k: int,
                use_kernel: bool = False, donate: bool = False,
                payload: Any = None, lease=None,
-               track: bool = True) -> InFlightBucket:
+               track: bool = True,
+               pack_seconds: float = 0.0) -> InFlightBucket:
+        shape = tuple(int(s) for s in np.shape(ell))
+        submitted_at = time.perf_counter()
         outputs = run_bucket_program(ell, ranks_p, elig_p, m_edges, k=k,
                                      use_kernel=use_kernel, donate=donate,
                                      mesh=self.mesh)
-        handle = InFlightBucket(outputs, payload=payload, lease=lease)
+        handle = InFlightBucket(outputs, payload=payload, lease=lease,
+                                shape=shape, pack_seconds=pack_seconds,
+                                submitted_at=submitted_at,
+                                inflight_at_submit=len(self._pending) + 1)
         self._post_submit(handle)
         if track:
             self._pending.append(handle)
@@ -527,13 +561,16 @@ def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
     b_pad = g_pad * k
     lease = pool.acquire(b_pad, R, W) if pool is not None else None
     try:
+        t_pack = time.perf_counter()
         ell, ranks, elig, m_edges, pad_groups = _pack_bucket(
             plans, group_keys, k=k, g_pad=g_pad,
             staging=lease.arrays if lease is not None else None)
+        pack_seconds = time.perf_counter() - t_pack
         handle = executor.submit(
             ell, ranks, elig, m_edges, k=k, use_kernel=use_kernel,
             donate=pool is not None and pool.donate,
-            payload=payload, lease=lease, track=track)
+            payload=payload, lease=lease, track=track,
+            pack_seconds=pack_seconds)
     except BaseException:
         if lease is not None:
             lease.release()

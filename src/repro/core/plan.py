@@ -128,6 +128,37 @@ def plan_graph(g: Graph, method: str = "pivot", eps: float = 2.0,
                      eligible=eligible, wreq=wreq, R=R, W=W)
 
 
+def promote_plan(plan: GraphPlan, R: int, W: int) -> GraphPlan:
+    """Re-target a plan at a larger ``(R, W)`` shape bucket (coalescing).
+
+    The scheduler's work-stealing policy packs a starving bucket's
+    requests into a compatible hot bucket's flush; this is the shape
+    promotion that makes the packed tensors line up. It is bit-exact by
+    construction: ranks/eligibility are a function of ``(n, key)`` only,
+    promoted rows ``n..R`` carry INF rank and are ineligible (removed
+    before the first MIS round, singleton labels sliced off by
+    ``result_for_plan``), extra ELL width slots hold the pad id ``R``
+    whose gathered rank is INF / label is −1, and the cost identity sums
+    zero over both. Asserted against the per-graph engine in
+    ``tests/test_scheduler.py``.
+
+    Raises ``ValueError`` if the target shape cannot hold the plan
+    (``R < plan.R`` or ``W < plan.W``) or exceeds the largest supported
+    bucket.
+    """
+    if R < plan.R or W < plan.W:
+        raise ValueError(
+            f"cannot promote bucket {plan.bucket} into ({R}, {W}): the "
+            "target must be at least as large in both dimensions")
+    if R > MAX_ROWS or W > MAX_WIDTH:
+        raise ValueError(
+            f"promotion target ({R}, {W}) exceeds the largest supported "
+            f"bucket ({MAX_ROWS}, {MAX_WIDTH})")
+    if (R, W) == plan.bucket:
+        return plan
+    return dataclasses.replace(plan, R=R, W=W)
+
+
 @dataclasses.dataclass
 class PackStats:
     """Packing/padding accounting for one ``correlation_cluster_batch`` call.
@@ -360,6 +391,7 @@ __all__ = [
     "StagingLease",
     "BucketBufferPool",
     "plan_graph",
+    "promote_plan",
     "result_for_plan",
     "MIN_ROWS",
     "MIN_WIDTH",

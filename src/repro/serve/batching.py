@@ -68,7 +68,9 @@ class ContinuousBatcher:
         self.slot_pos: np.ndarray = np.zeros(max_slots, np.int32)
         self.slot_last: np.ndarray = np.zeros(max_slots, np.int32)
         self._finished: Deque[Request] = deque()
-        self.stats = ServeStats()
+        # Slot-fill is this path's (only) scheduling policy — named in the
+        # protocol's stats surface like the clustering path's policies.
+        self.stats = ServeStats(policy="slot-fill")
 
     # -- ClusterEngine protocol ------------------------------------------
 

@@ -1,12 +1,29 @@
-"""Continuous batching for clustering-as-a-service, with deadline flushes.
+"""Continuous batching for clustering-as-a-service — the *mechanics* half.
 
 Implements the :class:`repro.serve.engine.ClusterEngine` protocol for graph
 queries: incoming graphs are **admitted** into the shape bucket their padded
-``(R, W)`` size maps to, a bucket **flushes** through the injected
-:class:`~repro.core.executor.BucketExecutor` the moment it fills
-``max_batch`` slots — or, under the deadline policy, as soon as its oldest
-request has waited ``max_wait`` seconds — and flushed requests **retire**
-with their results attached.
+``(R, W)`` size maps to, buckets **flush** through the injected
+:class:`~repro.core.executor.BucketExecutor`, and flushed requests
+**retire** with their results attached. *When* a bucket flushes, at what
+sub-batch size, whether an admission is refused, and whether a flush steals
+work from a starving neighbour bucket are not decided here: every decision
+is delegated to the injected :class:`~repro.serve.scheduler.SchedulerPolicy`
+(``policy=``), and this class only executes the
+:class:`~repro.serve.scheduler.FlushDecision` values it returns. The
+batcher owns the queues, the staging leases, the packing, the harvest, and
+the stats — the policy owns the schedule.
+
+Scheduling policies (see :mod:`repro.serve.scheduler` for the full story)
+  ``policy=`` takes ``'full'`` (flush only full buckets), ``'deadline'``
+  (bound any request's wait by ``max_wait``), ``'adaptive'`` (deadline +
+  a dynamic in-flight admission window derived from observed flush
+  latency, replacing the static ``max_in_flight`` knob), ``'coalesce'``
+  (work-stealing: starving smaller-bucket requests are promoted into a
+  compatible larger bucket's flush via
+  :func:`repro.core.plan.promote_plan`), any
+  :class:`~repro.serve.scheduler.SchedulerPolicy` instance, or ``None`` —
+  which reproduces the historical behaviour from ``max_wait`` /
+  ``max_in_flight`` alone.
 
 Executor injection (how a flush reaches the device)
   ``ClusterBatcher(executor=...)`` takes ``'sync'`` (block per flush — the
@@ -15,23 +32,26 @@ Executor injection (how a flush reaches the device)
   completed flushes are harvested on the next ``admit``/``poll``/``retire``),
   ``'sharded'`` (one flush data-parallel across all local devices via
   ``shard_map``), or any :class:`BucketExecutor` instance. Results are
-  bit-identical under every executor — scheduling can never change an
-  answer. An executor instance must not be shared between engines: the
-  batcher harvests *all* of its executor's handles.
+  bit-identical under every executor *and every policy* — scheduling can
+  never change an answer, including coalesced flushes where a request runs
+  at a promoted ``(R, W)`` shape. An executor instance must not be shared
+  between engines: the batcher harvests *all* of its executor's handles.
 
 Admission backpressure (bounded in-flight work)
-  With ``max_in_flight`` set, ``admit`` raises :class:`AdmissionRejected`
-  (and counts ``stats.rejected``) while that many flushes are still in
-  flight — the signal a front-end needs to shed load instead of queueing
-  unboundedly when arrivals outrun the device.
+  The policy's ``on_admit`` gate refuses requests while its admission
+  window is full — ``admit`` raises :class:`AdmissionRejected` (counted in
+  ``stats.rejected``), the signal a front-end needs to shed load instead
+  of queueing unboundedly when arrivals outrun the device. The static
+  window is ``max_in_flight``; the adaptive policy derives a dynamic one
+  from flush-latency telemetry.
 
-Deadline policy (bounded tail latency)
-  With ``max_wait`` set, :meth:`ClusterBatcher.poll` flushes any bucket
-  whose oldest request is past its budget as a *partial* flush, padded to
-  the next power-of-two sub-batch so the jit cache stays
-  O(#buckets · log max_batch). Padding actually performed on the device is
-  reported by the packer itself (``PackStats`` fields), so
-  :class:`ClusterStats` can never drift from what ran.
+Telemetry (the policies' stats surface)
+  Every harvested flush records its host pack time and submit→fetch wall
+  time — stamped by the executor layer on the
+  :class:`~repro.core.executor.InFlightBucket` handle — into
+  ``stats.latency`` (a :class:`~repro.serve.scheduler.FlushTelemetry`),
+  keyed by bucket shape. Policies read the EWMAs; benchmarks emit the
+  p50/p99 summaries.
 
 Buffer reuse
   All flushes route through one :class:`repro.core.plan.BucketBufferPool`:
@@ -40,6 +60,15 @@ Buffer reuse
   released once its flush's outputs are fetched, so pipelined flushes of
   the same bucket shape get distinct buffer generations — a buffer feeding
   an in-flight program is never refilled.
+
+Clocks
+  The engine clock (``clock=``, monotonic seconds, injectable) is the
+  *only* time source scheduling decisions see: ``admitted_at`` stamps,
+  deadline ages, steal thresholds. No code path falls back to a bare
+  ``time.monotonic()`` call, so tests and simulators drive virtual time
+  deterministically. (Telemetry wall/pack latencies are real wall-clock
+  measurements from the executor layer — they describe the device, not
+  the request stream.)
 """
 
 from __future__ import annotations
@@ -47,7 +76,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,14 +86,11 @@ from repro.core import BucketBufferPool, make_executor, plan_graph
 from repro.core.api import ClusterResult, sample_keys
 from repro.core.executor import pack_and_submit
 from repro.core.graph import Graph
-from repro.core.plan import GraphPlan, result_for_plan
+from repro.core.plan import GraphPlan, promote_plan, result_for_plan
 from repro.util import next_pow2
 
-from .engine import EngineStats
-
-
-class AdmissionRejected(RuntimeError):
-    """Raised by ``admit`` when ``max_in_flight`` flushes are outstanding."""
+from .engine import AdmissionRejected, EngineStats
+from .scheduler import FlushDecision, FlushTelemetry, make_policy
 
 
 @dataclasses.dataclass
@@ -83,47 +109,62 @@ class ClusterRequest:
 class ClusterStats(EngineStats):
     flushes: int = 0
     deadline_flushes: int = 0    # partial flushes forced by max_wait
+    coalesced_flushes: int = 0   # flushes that stole from another bucket
+    stolen_requests: int = 0     # requests promoted into a larger bucket
     clustered: int = 0
     padded_slots: int = 0        # empty device entries, from the packer
     pad_vertex_waste: int = 0    # Σ (R − n) over clustered graphs
     buckets_seen: int = 0        # distinct (R, W) buckets admitted
     rejected: int = 0            # admissions refused by backpressure
     in_flight_peak: int = 0      # max concurrent in-flight flushes seen
+    latency: FlushTelemetry = dataclasses.field(
+        default_factory=FlushTelemetry)  # per-bucket flush wall/pack times
 
 
 class ClusterBatcher:
-    """Bucketed clustering engine: full-bucket flushes + deadline flushes.
+    """Bucketed clustering engine: queue/lease/harvest mechanics, with all
+    flush/admission decisions delegated to a scheduling policy.
 
     Implements the :class:`~repro.serve.engine.ClusterEngine` protocol
     (``admit`` / ``flush`` / ``retire`` / ``stats`` / ``pending``), plus
-    :meth:`poll` for the ``max_wait`` deadline policy.
+    :meth:`poll` to give time-based policies (deadline, coalescing) a tick.
 
     Args:
-      max_batch: bucket capacity; a bucket flushes when it holds this many
-        requests.
-      max_wait: optional deadline in seconds (engine-clock): ``poll()``
-        flushes any bucket whose oldest request has waited longer, padded
-        to the next power-of-two sub-batch. ``None`` = full buckets only.
+      max_batch: bucket capacity; the default policies flush a bucket when
+        it holds this many requests.
+      max_wait: optional deadline in seconds (engine-clock). With the
+        default policy selection, setting it selects the deadline policy:
+        ``poll()`` flushes any bucket whose oldest request has waited
+        longer, padded to the next power-of-two sub-batch. ``None`` = full
+        buckets only.
       clock: the engine clock (monotonic seconds). Injectable so tests and
-        simulators can drive virtual time.
+        simulators can drive virtual time; ``None`` selects
+        ``time.monotonic``. Every scheduling decision uses this clock and
+        nothing else.
       num_samples: best-of-k PIVOT per request (``< 1`` is coerced to 1;
         the engine itself rejects invalid values).
       pool: buffer pool shared by all flushes (created if omitted).
       executor: bucket executor name (``'sync'``/``'async'``/``'sharded'``)
         or instance — see the module docstring. Default ``'sync'``.
-      max_in_flight: optional bound on concurrently in-flight flushes;
-        ``admit`` raises :class:`AdmissionRejected` at the bound. ``None``
-        disables backpressure (one-shot / offline driving).
+      max_in_flight: optional static bound on concurrently in-flight
+        flushes; the policy's ``on_admit`` gate raises
+        :class:`AdmissionRejected` at the bound. ``None`` disables
+        backpressure (one-shot / offline driving).
+      policy: scheduling policy name (``'full'``/``'deadline'``/
+        ``'adaptive'``/``'coalesce'``) or
+        :class:`~repro.serve.scheduler.SchedulerPolicy` instance; ``None``
+        derives the historical behaviour from ``max_wait``/``max_in_flight``.
     """
 
     def __init__(self, max_batch: int = 64, method: str = "pivot",
                  eps: float = 2.0, num_samples: int = 1,
                  use_kernel: bool = False,
                  max_wait: Optional[float] = None,
-                 clock=time.monotonic,
+                 clock=None,
                  pool: Optional[BucketBufferPool] = None,
                  executor="sync",
-                 max_in_flight: Optional[int] = None):
+                 max_in_flight: Optional[int] = None,
+                 policy=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait is not None and max_wait < 0:
@@ -137,54 +178,59 @@ class ClusterBatcher:
         self.num_samples = max(1, num_samples)
         self.use_kernel = use_kernel
         self.max_wait = max_wait
-        self.clock = clock
+        self.clock = time.monotonic if clock is None else clock
         self.pool = pool if pool is not None else BucketBufferPool()
         self.executor = make_executor(executor)
         self.max_in_flight = max_in_flight
+        self.policy = make_policy(policy, max_batch=max_batch,
+                                  max_wait=max_wait,
+                                  max_in_flight=max_in_flight)
         self.buckets: Dict[Tuple[int, int], List[ClusterRequest]] = {}
         self._bucket_keys_seen: set = set()
         self._retired: Deque[ClusterRequest] = deque()
         self._in_flight_reqs = 0
-        self.stats = ClusterStats()
+        self.stats = ClusterStats(policy=self.policy.name)
 
     # -- ClusterEngine protocol ------------------------------------------
 
     def admit(self, req: ClusterRequest,
               now: Optional[float] = None) -> List[ClusterRequest]:
-        """Admit a request; returns the retired batch if its bucket flushed.
+        """Admit a request; returns whatever retired as a consequence.
 
         Shape/width validation happens here (``plan_graph`` raises for
         graphs exceeding the largest supported bucket) and so does
-        backpressure (:class:`AdmissionRejected` while ``max_in_flight``
-        flushes are outstanding) — a request the engine cannot take fails
-        at admission, not inside a later batched flush.
+        backpressure — the policy's ``on_admit`` gate refuses while its
+        admission window is full (:class:`AdmissionRejected`, counted in
+        ``stats.rejected``). A request the engine cannot take fails at
+        admission, not inside a later batched flush.
         """
         self._harvest()
-        if (self.max_in_flight is not None
-                and self.executor.in_flight >= self.max_in_flight):
+        now = self.clock() if now is None else now
+        if not self.policy.on_admit(self.buckets, now, self._telemetry()):
             self.stats.rejected += 1
             raise AdmissionRejected(
-                f"{self.executor.in_flight} flushes in flight >= "
-                f"max_in_flight={self.max_in_flight}; retry after retiring")
+                f"policy {self.policy.name!r} refused admission with "
+                f"{self.executor.in_flight} flushes in flight; retry after "
+                "retiring")
         plan = plan_graph(req.graph, method=self.method, eps=self.eps,
                           lam=req.lam)
         req.plan = plan         # resolved once; the flush reuses it verbatim
         req.lam = plan.lam
-        req.admitted_at = self.clock() if now is None else now
-        slot_list = self.buckets.setdefault(plan.bucket, [])
-        slot_list.append(req)
+        req.admitted_at = now
+        self.buckets.setdefault(plan.bucket, []).append(req)
         self.stats.submitted += 1
         self._bucket_keys_seen.add(plan.bucket)
         self.stats.buckets_seen = len(self._bucket_keys_seen)
-        if len(slot_list) >= self.max_batch:
-            self._flush(plan.bucket)
+        self._run_policy(now)
         return self.retire()
 
     def flush(self) -> List[ClusterRequest]:
         """Drain every bucket (end of stream), full or partial, and block
-        for all in-flight work."""
+        for all in-flight work. End-of-stream draining is mechanics, not
+        policy — every queue flushes at its native shape."""
         for bucket in list(self.buckets):
-            self._flush(bucket)
+            self._execute(FlushDecision(bucket=bucket,
+                                        count=len(self.buckets[bucket])))
         self._harvest(block=True)
         return self.retire()
 
@@ -201,26 +247,21 @@ class ClusterBatcher:
         return sum(len(v) for v in self.buckets.values()) \
             + self._in_flight_reqs
 
-    # -- Deadline policy --------------------------------------------------
+    # -- Policy driving ----------------------------------------------------
 
     def poll(self, now: Optional[float] = None) -> List[ClusterRequest]:
-        """Flush buckets whose oldest request has waited past ``max_wait``.
-
-        Without a deadline configured this still harvests completed
-        in-flight flushes. Partial buckets are padded to the next
-        power-of-two sub-batch by the packer, so deadline flushes stay
-        within the O(#buckets · log B) compile budget.
+        """Give the policy a time tick: harvest completed flushes, let the
+        policy flush whatever its schedule says is due (overdue deadline
+        buckets, coalesced steals, ...), and return the retired requests.
         """
-        if self.max_wait is None:
-            return self.retire()
         now = self.clock() if now is None else now
-        for bucket, reqs in list(self.buckets.items()):
-            if reqs and now - reqs[0].admitted_at >= self.max_wait:
-                self._flush(bucket, deadline=True)
+        self._harvest()
+        self._run_policy(now)
         return self.retire()
 
     def oldest_wait(self, now: Optional[float] = None) -> float:
-        """Age of the oldest pending request (0.0 when idle)."""
+        """Age of the oldest pending request (0.0 when idle), on the
+        engine clock."""
         now = self.clock() if now is None else now
         ages = [now - reqs[0].admitted_at
                 for reqs in self.buckets.values() if reqs]
@@ -270,28 +311,76 @@ class ClusterBatcher:
 
     # -- Internals ---------------------------------------------------------
 
-    def _flush(self, bucket: Tuple[int, int], deadline: bool = False) -> None:
-        """Pack one bucket and hand it to the executor (maybe async)."""
-        reqs = self.buckets.pop(bucket, [])
-        if not reqs:
+    def _telemetry(self) -> FlushTelemetry:
+        """The policies' stats surface, with ``in_flight`` refreshed — the
+        single place that syncs it, so no policy call sees a stale count."""
+        telemetry = self.stats.latency
+        telemetry.in_flight = self.executor.in_flight
+        return telemetry
+
+    def _run_policy(self, now: float) -> None:
+        """Ask the policy what to flush and execute each decision."""
+        for decision in self.policy.select_flushes(self.buckets, now,
+                                                   self._telemetry()):
+            self._execute(decision)
+
+    def _take(self, bucket: Tuple[int, int],
+              count: int) -> List[ClusterRequest]:
+        """Pop up to ``count`` oldest requests from one bucket queue."""
+        q = self.buckets.get(bucket)
+        if not q or count <= 0:
+            return []
+        taken, rest = q[:count], q[count:]
+        if rest:
+            self.buckets[bucket] = rest
+        else:
+            self.buckets.pop(bucket, None)
+        return taken
+
+    def _requeue(self, reqs: Sequence[ClusterRequest]) -> None:
+        """Put popped requests back at the *front* of their own bucket
+        queues (each request's native plan bucket), preserving age order —
+        stolen requests return to the queue they were stolen from."""
+        by_bucket: Dict[Tuple[int, int], List[ClusterRequest]] = {}
+        for r in reqs:
+            by_bucket.setdefault(r.plan.bucket, []).append(r)
+        for bucket, rs in by_bucket.items():
+            self.buckets[bucket] = rs + self.buckets.get(bucket, [])
+
+    def _execute(self, decision: FlushDecision) -> None:
+        """Carry out one policy decision: pop the requests it names
+        (including steals from smaller buckets), promote plans to the
+        decision's ``(R, W)`` shape, pack, and hand to the executor."""
+        reqs = self._take(decision.bucket, decision.count)
+        stolen: List[ClusterRequest] = []
+        for src, cnt in decision.steal:
+            stolen.extend(self._take(src, cnt))
+        all_reqs = reqs + stolen
+        if not all_reqs:
             return
         k = self.num_samples
-        plans = [r.plan for r in reqs]
-        bkeys = [sample_keys(r.key, k) for r in reqs]
+        R, W = decision.bucket
+        # Promotion is a no-op for native requests; for stolen ones it
+        # re-targets the plan at the flush's larger shape (bit-exact).
+        plans = [promote_plan(r.plan, R, W) for r in all_reqs]
+        bkeys = [sample_keys(r.key, k) for r in all_reqs]
         try:
             _, pack = pack_and_submit(
                 plans, bkeys, k, self.executor, pool=self.pool,
-                use_kernel=self.use_kernel, payload=reqs)
+                use_kernel=self.use_kernel, payload=all_reqs)
         except BaseException:
             # Nothing was dispatched (the helper released the staging
             # lease): requeue the popped requests so none are lost, then
             # surface the error to the caller.
-            self.buckets[bucket] = reqs
+            self._requeue(all_reqs)
             raise
-        self._in_flight_reqs += len(reqs)
+        self._in_flight_reqs += len(all_reqs)
         self.stats.flushes += 1
-        if deadline:
+        if decision.deadline:
             self.stats.deadline_flushes += 1
+        if stolen:
+            self.stats.coalesced_flushes += 1
+            self.stats.stolen_requests += len(stolen)
         # Pad accounting straight from the packer — no re-derivation here.
         self.stats.padded_slots += pack.padded_entries
         self.stats.pad_vertex_waste += pack.pad_vertex_waste
@@ -304,11 +393,12 @@ class ClusterBatcher:
         queue (``block=True`` waits for everything in flight).
 
         A flush whose fetch fails (device-side runtime error surfacing at
-        ``result()``) has its requests requeued into their bucket — ahead
-        of newer arrivals, preserving deadline age order — and the first
-        such error is re-raised after every other handle has been
+        ``result()``) has its requests requeued into their native buckets
+        — ahead of newer arrivals, preserving deadline age order — and the
+        first such error is re-raised after every other handle has been
         processed, so one bad flush can neither lose requests nor strand
-        the handles behind it.
+        the handles behind it. Successful harvests record the flush's
+        wall/pack latency into ``stats.latency`` and notify the policy.
         """
         handles = self.executor.drain() if block else self.executor.retire()
         first_err: Optional[BaseException] = None
@@ -319,8 +409,7 @@ class ClusterBatcher:
             except BaseException as err:
                 self._in_flight_reqs -= len(reqs)
                 if reqs:
-                    bucket = reqs[0].plan.bucket
-                    self.buckets[bucket] = reqs + self.buckets.get(bucket, [])
+                    self._requeue(reqs)
                 if first_err is None:
                     first_err = err
                 continue
@@ -334,6 +423,12 @@ class ClusterBatcher:
                 self.stats.retired += 1
                 self._retired.append(req)
             self._in_flight_reqs -= len(reqs)
+            if handle.shape is not None and handle.wall_seconds is not None:
+                bucket = (handle.shape[1], handle.shape[2])
+                self.stats.latency.record(bucket, handle.wall_seconds,
+                                          handle.pack_seconds,
+                                          depth=handle.inflight_at_submit)
+                self.policy.on_retire(bucket, self.stats.latency)
         if first_err is not None:
             raise first_err
 

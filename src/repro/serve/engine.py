@@ -35,16 +35,27 @@ reference outer loop — admit a stream, poll deadlines, drain at the end.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Iterable, List, Protocol, runtime_checkable
+
+
+class AdmissionRejected(RuntimeError):
+    """Raised by ``admit`` when an engine's admission policy refuses a
+    request (e.g. the in-flight window is full) — the caller sheds load or
+    retries after the next retire."""
 
 
 @dataclasses.dataclass
 class EngineStats:
     """Counters every serving engine keeps; subclasses add path-specific
-    fields (padding accounting, decode-step counts, ...)."""
+    fields (padding accounting, decode-step counts, ...). ``policy`` names
+    the scheduling policy driving the engine's flush/admission decisions —
+    part of the protocol's stats surface so outer loops and benchmarks can
+    report which scheduler produced the numbers."""
 
     submitted: int = 0
     retired: int = 0
+    policy: str = ""
 
 
 @runtime_checkable
@@ -70,21 +81,38 @@ class ClusterEngine(Protocol):
         ...
 
 
-def serve_all(engine: ClusterEngine, requests: Iterable[Any]) -> List[Any]:
+def serve_all(engine: ClusterEngine, requests: Iterable[Any],
+              reject_backoff: float = 0.0005) -> List[Any]:
     """Reference outer loop: admit a request stream, then drain the engine.
 
     Engines with a deadline policy are polled after every admit (so a
-    ``max_wait`` budget is honoured mid-stream, not only at end of stream).
-    Time is always the *engine's own* clock — inject a virtual clock into
-    the engine (``ClusterBatcher(clock=...)``) for simulations; a second
-    clock here could disagree with the ``admitted_at`` stamps and silently
-    disable the deadline. Returns every retired request, in retirement
-    order — each request exactly once.
+    ``max_wait`` budget is honoured mid-stream, not only at end of stream)
+    — this is what lets the driver exercise deadline/adaptive scheduling
+    policies instead of only full-bucket flushes. Engines with admission
+    control are retried: on :class:`AdmissionRejected` the loop harvests
+    finished work (``retire`` + ``poll``) and re-admits, sleeping
+    ``reject_backoff`` seconds only when no progress was made — a stand-in
+    for a front-end that would 429/shed instead. Time is always the
+    *engine's own* clock — inject a virtual clock into the engine
+    (``ClusterBatcher(clock=...)``) for simulations; a second clock here
+    could disagree with the ``admitted_at`` stamps and silently disable
+    the deadline. Returns every retired request, in retirement order —
+    each request exactly once.
     """
     retired: List[Any] = []
     poll = getattr(engine, "poll", None)
     for req in requests:
-        retired.extend(engine.admit(req))
+        while True:
+            try:
+                retired.extend(engine.admit(req))
+                break
+            except AdmissionRejected:
+                progressed = engine.retire()
+                if poll is not None:
+                    progressed.extend(poll())
+                retired.extend(progressed)
+                if not progressed and reject_backoff:
+                    time.sleep(reject_backoff)  # let in-flight work finish
         if poll is not None:
             retired.extend(poll())
     retired.extend(engine.flush())
@@ -92,4 +120,4 @@ def serve_all(engine: ClusterEngine, requests: Iterable[Any]) -> List[Any]:
     return retired
 
 
-__all__ = ["EngineStats", "ClusterEngine", "serve_all"]
+__all__ = ["AdmissionRejected", "EngineStats", "ClusterEngine", "serve_all"]

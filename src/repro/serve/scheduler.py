@@ -1,0 +1,466 @@
+"""Pluggable scheduling-policy layer: *which* bucket flushes, *when*, at
+*what* sub-batch size.
+
+The serving analogue of the paper's MPC resource question. Cohen-Addad et
+al. get constant rounds by being deliberate about what each round does and
+how machines are loaded — per-round compute is never the bottleneck, the
+round/launch schedule is. In this repo the "round" is a bucket flush and
+the "machines" are the in-flight device programs, so the scheduling
+decisions (flush triggers, admission control, load balancing across bucket
+queues) deserve their own layer instead of being hard-coded into
+:class:`~repro.serve.cluster_batcher.ClusterBatcher`. The batcher keeps
+the *mechanics* — queues, staging leases, packing, harvest — and delegates
+every *decision* to a :class:`SchedulerPolicy`:
+
+* :class:`FullBucketPolicy` — flush a bucket only when it holds
+  ``max_batch`` requests. MPC analogue: run a round only with machines at
+  full memory load, maximizing work amortized per round (the paper's
+  O(n·λ) total-memory budget spent in as few rounds as possible).
+* :class:`DeadlinePolicy` — full buckets, plus flush any bucket whose
+  oldest request has waited ``max_wait`` (a partial, pow2-padded
+  sub-batch). MPC analogue: the constant-*round* guarantee itself — no
+  item's round count depends on what the rest of the stream does.
+* :class:`AdaptivePolicy` — replaces the static ``max_in_flight`` knob
+  with a dynamic admission window derived from executor telemetry: keep
+  ``ceil(EWMA(flush service time) / EWMA(pack time))`` flushes in flight —
+  enough that the host never leaves the device idle, no more than that so
+  queueing delay is not hidden inside the engine. MPC analogue: sizing
+  the number of machines to the observed round time instead of fixing it
+  up front.
+* :class:`CoalescingPolicy` — work-stealing across bucket queues: when a
+  bucket flushes, requests starving in a *compatible smaller* ``(R', W')``
+  bucket (``R' ≤ R, W' ≤ W``) are promoted into the flush via
+  :func:`repro.core.plan.promote_plan`, so no queue waits unboundedly
+  behind a hot one. MPC analogue: migrating a straggler machine's items
+  into a busier machine's round — sound here because a graph that fits a
+  small ``(R, W)`` memory budget trivially fits a larger one, and the
+  clustering of each packed entry is independent of its neighbours in the
+  batch (which is also why promotion is bit-exact).
+
+Policies see three read-only inputs: the bucket queues (admission-ordered
+request lists), the engine clock's ``now``, and a :class:`FlushTelemetry`
+(per-bucket flush latency EWMAs/percentiles fed by the executor layer,
+plus the current in-flight count). They return :class:`FlushDecision`
+values — bucket key, sub-batch size, and optionally which queues to steal
+from — and the batcher executes them without second-guessing.
+
+Determinism: policies only ever read the injected engine clock (``now``)
+and telemetry; they never touch wall-clock time themselves, so tests and
+simulators drive them with virtual clocks and fabricated telemetry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, \
+    runtime_checkable
+
+import numpy as np
+
+BucketKey = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushDecision:
+    """One flush the policy wants executed.
+
+    ``bucket`` is the ``(R, W)`` shape the flush packs into; ``count``
+    requests are taken (oldest first) from that bucket's own queue;
+    ``steal`` names extra ``(source_bucket, count)`` groups to promote into
+    the same flush (their plans are re-targeted at ``bucket`` via
+    :func:`repro.core.plan.promote_plan` — every source must satisfy
+    ``R' ≤ R and W' ≤ W``). ``deadline`` marks the flush as forced by a
+    wait budget, for stats accounting only.
+    """
+
+    bucket: BucketKey
+    count: int
+    steal: Tuple[Tuple[BucketKey, int], ...] = ()
+    deadline: bool = False
+
+
+class FlushTelemetry:
+    """Rolling flush-latency telemetry — the policies' stats surface.
+
+    The executor layer stamps each :class:`~repro.core.executor.
+    InFlightBucket` with its host pack time and its submit→fetch wall
+    time; the batcher feeds those here on harvest. Policies read the
+    EWMAs (adaptive in-flight control); benchmarks and ``ClusterStats``
+    read :meth:`summary` (per-bucket p50/p99). Bounded: at most ``window``
+    samples are retained per bucket shape.
+
+    ``in_flight`` is refreshed by the batcher before every policy call —
+    it is the number of submitted-but-unharvested flushes, the quantity
+    admission control windows bound.
+    """
+
+    def __init__(self, window: int = 256, alpha: float = 0.2):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.window = window
+        self.alpha = alpha
+        self.in_flight = 0
+        self.total_flushes = 0
+        self._ewma_wall: Optional[float] = None
+        self._ewma_service: Optional[float] = None
+        self._ewma_pack: Optional[float] = None
+        self._per_bucket: Dict[BucketKey, dict] = {}
+
+    def record(self, bucket: BucketKey, wall_s: float,
+               pack_s: float = 0.0, depth: int = 1) -> None:
+        """Account one completed flush of shape ``bucket``.
+
+        ``depth`` is how many flushes were in flight when this one was
+        submitted (1 = it had the device to itself). Submit→fetch wall
+        time includes queueing behind the ``depth − 1`` earlier flushes,
+        so ``wall / depth`` estimates the per-flush *service* time — the
+        quantity the adaptive window must use, or queue wait would feed
+        back into a larger window which creates more queue wait.
+        """
+        a = self.alpha
+        self.total_flushes += 1
+        self._ewma_wall = wall_s if self._ewma_wall is None \
+            else a * wall_s + (1 - a) * self._ewma_wall
+        service = wall_s / max(1, depth)
+        self._ewma_service = service if self._ewma_service is None \
+            else a * service + (1 - a) * self._ewma_service
+        self._ewma_pack = pack_s if self._ewma_pack is None \
+            else a * pack_s + (1 - a) * self._ewma_pack
+        rec = self._per_bucket.get(bucket)
+        if rec is None:
+            rec = self._per_bucket[bucket] = {
+                "wall": deque(maxlen=self.window),
+                "pack": deque(maxlen=self.window),
+                "count": 0,
+                "ewma_wall": None,
+            }
+        rec["wall"].append(wall_s)
+        rec["pack"].append(pack_s)
+        rec["count"] += 1
+        rec["ewma_wall"] = wall_s if rec["ewma_wall"] is None \
+            else a * wall_s + (1 - a) * rec["ewma_wall"]
+
+    @property
+    def ewma_wall(self) -> Optional[float]:
+        """EWMA submit→fetch wall seconds across all buckets (None = no
+        flush recorded yet)."""
+        return self._ewma_wall
+
+    @property
+    def ewma_service(self) -> Optional[float]:
+        """EWMA per-flush service seconds (wall normalized by the in-flight
+        depth at submit) — the adaptive window's input."""
+        return self._ewma_service
+
+    @property
+    def ewma_pack(self) -> Optional[float]:
+        """EWMA host pack seconds across all buckets."""
+        return self._ewma_pack
+
+    def bucket_ewma_wall(self, bucket: BucketKey) -> Optional[float]:
+        rec = self._per_bucket.get(bucket)
+        return None if rec is None else rec["ewma_wall"]
+
+    def summary(self) -> Dict[str, dict]:
+        """Per-bucket-shape latency percentiles, JSON-ready (ms).
+
+        Keys are ``"RxW"`` strings; values carry flush counts, wall p50/p99,
+        pack p50/p99 and the wall EWMA — the fields the benchmarks emit so
+        scheduling quality is tracked across PRs.
+        """
+        out: Dict[str, dict] = {}
+        for (R, W), rec in sorted(self._per_bucket.items()):
+            wall = np.asarray(rec["wall"], dtype=np.float64)
+            pack = np.asarray(rec["pack"], dtype=np.float64)
+            out[f"{R}x{W}"] = {
+                "flushes": rec["count"],
+                "wall_p50_ms": float(np.percentile(wall, 50)) * 1e3,
+                "wall_p99_ms": float(np.percentile(wall, 99)) * 1e3,
+                "pack_p50_ms": float(np.percentile(pack, 50)) * 1e3,
+                "pack_p99_ms": float(np.percentile(pack, 99)) * 1e3,
+                "wall_ewma_ms": rec["ewma_wall"] * 1e3,
+            }
+        return out
+
+
+@runtime_checkable
+class SchedulerPolicy(Protocol):
+    """Structural protocol the batcher's decision layer is swapped by.
+
+    ``queues`` is always the batcher's live bucket → request-list mapping,
+    admission-ordered (oldest first); policies must treat it as read-only.
+    Requests expose at least ``admitted_at`` (engine-clock stamp).
+    """
+
+    name: str
+
+    def on_admit(self, queues, now: float,
+                 telemetry: FlushTelemetry) -> bool:
+        """Admission gate, called *before* a request is queued. Returning
+        False makes the engine raise ``AdmissionRejected`` (shed load)."""
+        ...
+
+    def select_flushes(self, queues, now: float,
+                       telemetry: FlushTelemetry) -> List[FlushDecision]:
+        """Decide which buckets flush now (called after every admit and on
+        every poll)."""
+        ...
+
+    def on_retire(self, bucket: BucketKey,
+                  telemetry: FlushTelemetry) -> None:
+        """Notification that a flush of shape ``bucket`` was harvested
+        (its latency is already recorded in ``telemetry``)."""
+        ...
+
+
+class FullBucketPolicy:
+    """Today's throughput default, extracted: flush only full buckets.
+
+    ``max_in_flight`` (optional) is the static admission window the
+    pre-scheduler engine exposed: while that many flushes are in flight,
+    ``on_admit`` refuses and the engine sheds load.
+    """
+
+    name = "full"
+
+    def __init__(self, max_batch: int, max_in_flight: Optional[int] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_in_flight is not None and max_in_flight < 1:
+            raise ValueError(
+                f"max_in_flight must be >= 1, got {max_in_flight}")
+        self.max_batch = max_batch
+        self.max_in_flight = max_in_flight
+
+    # -- admission ------------------------------------------------------
+
+    def admission_window(self, telemetry: FlushTelemetry) -> Optional[int]:
+        """Current in-flight bound (None = unbounded)."""
+        return self.max_in_flight
+
+    def on_admit(self, queues, now, telemetry) -> bool:
+        window = self.admission_window(telemetry)
+        return window is None or telemetry.in_flight < window
+
+    # -- flush selection ------------------------------------------------
+
+    def select_flushes(self, queues, now, telemetry) -> List[FlushDecision]:
+        out: List[FlushDecision] = []
+        for bucket, q in queues.items():
+            avail = len(q)
+            while avail >= self.max_batch:
+                out.append(FlushDecision(bucket=bucket, count=self.max_batch))
+                avail -= self.max_batch
+        return out
+
+    def on_retire(self, bucket, telemetry) -> None:
+        pass
+
+
+class DeadlinePolicy(FullBucketPolicy):
+    """Full buckets plus ``max_wait``-bounded tail latency, extracted.
+
+    Any bucket whose oldest *unconsumed* request has waited ``max_wait``
+    engine-clock seconds flushes partially (the packer pads the sub-batch
+    to a power of two, keeping compiles O(#buckets · log B)).
+    """
+
+    name = "deadline"
+
+    def __init__(self, max_batch: int, max_wait: Optional[float] = None,
+                 max_in_flight: Optional[int] = None):
+        super().__init__(max_batch, max_in_flight=max_in_flight)
+        if max_wait is not None and max_wait < 0:
+            raise ValueError(f"max_wait must be >= 0, got {max_wait}")
+        self.max_wait = max_wait
+
+    def select_flushes(self, queues, now, telemetry) -> List[FlushDecision]:
+        out = super().select_flushes(queues, now, telemetry)
+        if self.max_wait is None:
+            return out
+        consumed: Dict[BucketKey, int] = {}
+        for d in out:
+            consumed[d.bucket] = consumed.get(d.bucket, 0) + d.count
+        for bucket, q in queues.items():
+            used = consumed.get(bucket, 0)
+            rest = len(q) - used
+            if rest > 0 and now - q[used].admitted_at >= self.max_wait:
+                out.append(FlushDecision(bucket=bucket, count=rest,
+                                         deadline=True))
+        return out
+
+
+class AdaptivePolicy(DeadlinePolicy):
+    """Dynamic in-flight window from observed flush latency.
+
+    Replaces the static ``max_in_flight`` knob: the admission window is
+    ``clamp(ceil(EWMA(service) / EWMA(pack)), min_window, max_window)`` —
+    the pipeline depth at which the host (packing one flush in ``pack``
+    seconds) exactly keeps a device busy for ``service`` seconds per
+    flush. Fewer in flight and the device idles between flushes; more and
+    extra arrivals only queue *inside* the engine where the front-end
+    cannot see or shed them. ``service`` is the submit→fetch wall time
+    normalized by the in-flight depth at submit (queue-excluded) — raw
+    wall time grows with the very depth this window sets, a positive
+    feedback that would pin it at ``max_window``. Until telemetry exists
+    (cold engine) the window is ``max_window``, so a cold start is never
+    throttled by a guess.
+    """
+
+    name = "adaptive"
+
+    def __init__(self, max_batch: int, max_wait: Optional[float] = None,
+                 min_window: int = 1, max_window: int = 8):
+        super().__init__(max_batch, max_wait=max_wait, max_in_flight=None)
+        if not 1 <= min_window <= max_window:
+            raise ValueError(
+                f"need 1 <= min_window <= max_window, got "
+                f"{min_window}..{max_window}")
+        self.min_window = min_window
+        self.max_window = max_window
+
+    def admission_window(self, telemetry: FlushTelemetry) -> Optional[int]:
+        service, pack = telemetry.ewma_service, telemetry.ewma_pack
+        if service is None or pack is None or pack <= 0.0:
+            return self.max_window
+        depth = math.ceil(service / pack)
+        return max(self.min_window, min(self.max_window, depth))
+
+
+class CoalescingPolicy(DeadlinePolicy):
+    """Work-stealing across bucket queues via shape promotion.
+
+    Every flush decision (full or deadline) additionally *steals* requests
+    waiting in compatible smaller buckets — ``(R', W')`` with ``R' ≤ R``
+    and ``W' ≤ W`` — whose oldest request has waited at least
+    ``steal_wait`` (default: ``max_wait / 2`` when a deadline is set,
+    otherwise 0 = steal whenever there is room). Stolen requests are
+    promoted into the flushing ``(R, W)`` shape by the batcher
+    (:func:`repro.core.plan.promote_plan`), most-starved queue first, up
+    to the flush's ``max_batch`` capacity. A bucket whose arrival rate is
+    starved by a hot neighbour therefore retires at the hot bucket's flush
+    cadence instead of waiting for its own fill or the end-of-stream
+    drain. Promotion never changes an answer: clustering is per-entry and
+    padding rows/width is inert (the bit-exactness contract, asserted in
+    ``tests/test_scheduler.py``).
+
+    Pair it with ``max_wait``: steals only ride flushes with spare room,
+    and without a deadline the only flushes are *full* ones (``count ==
+    max_batch``, zero room) — the policy would silently degenerate to
+    full-bucket. :func:`make_policy` therefore requires ``max_wait`` for
+    ``'coalesce'``; constructing the class directly without one is allowed
+    for composition and tests.
+    """
+
+    name = "coalesce"
+
+    def __init__(self, max_batch: int, max_wait: Optional[float] = None,
+                 max_in_flight: Optional[int] = None,
+                 steal_wait: Optional[float] = None):
+        super().__init__(max_batch, max_wait=max_wait,
+                         max_in_flight=max_in_flight)
+        if steal_wait is None:
+            steal_wait = max_wait / 2 if max_wait is not None else 0.0
+        if steal_wait < 0:
+            raise ValueError(f"steal_wait must be >= 0, got {steal_wait}")
+        self.steal_wait = steal_wait
+
+    def select_flushes(self, queues, now, telemetry) -> List[FlushDecision]:
+        base = super().select_flushes(queues, now, telemetry)
+        consumed: Dict[BucketKey, int] = {}
+        for d in base:
+            consumed[d.bucket] = consumed.get(d.bucket, 0) + d.count
+        out: List[FlushDecision] = []
+        for d in base:
+            R, W = d.bucket
+            room = self.max_batch - d.count
+            steals: List[Tuple[BucketKey, int]] = []
+            if room > 0:
+                cands = []
+                for b2, q2 in queues.items():
+                    if b2 == d.bucket:
+                        continue
+                    R2, W2 = b2
+                    if R2 > R or W2 > W:
+                        continue        # would not fit the (R, W) budget
+                    used = consumed.get(b2, 0)
+                    rest = len(q2) - used
+                    if rest <= 0:
+                        continue
+                    oldest = q2[used].admitted_at
+                    if now - oldest < self.steal_wait:
+                        continue        # not starving yet
+                    cands.append((oldest, b2, rest))
+                cands.sort()            # most-starved queue first
+                for _, b2, rest in cands:
+                    if room <= 0:
+                        break
+                    take = min(rest, room)
+                    steals.append((b2, take))
+                    consumed[b2] = consumed.get(b2, 0) + take
+                    room -= take
+            out.append(dataclasses.replace(d, steal=tuple(steals))
+                       if steals else d)
+        return out
+
+
+POLICY_NAMES = ("full", "deadline", "adaptive", "coalesce")
+
+
+def make_policy(spec=None, *, max_batch: int,
+                max_wait: Optional[float] = None,
+                max_in_flight: Optional[int] = None) -> SchedulerPolicy:
+    """Resolve a policy argument: name, instance, or None (back-compat).
+
+    ``None`` reproduces the pre-scheduler engine exactly: the deadline
+    policy when ``max_wait`` is set, full-bucket otherwise, both carrying
+    the static ``max_in_flight`` admission bound. ``'adaptive'`` uses
+    ``max_in_flight`` (when given) as its ``max_window`` cap, since the
+    dynamic window replaces the static knob.
+    """
+    if spec is None:
+        spec = "deadline" if max_wait is not None else "full"
+    if isinstance(spec, str):
+        if spec == "full":
+            return FullBucketPolicy(max_batch, max_in_flight=max_in_flight)
+        if spec == "deadline":
+            if max_wait is None:
+                raise ValueError(
+                    "policy='deadline' needs max_wait (the wait budget)")
+            return DeadlinePolicy(max_batch, max_wait=max_wait,
+                                  max_in_flight=max_in_flight)
+        if spec == "adaptive":
+            kwargs = {} if max_in_flight is None \
+                else {"max_window": max_in_flight}
+            return AdaptivePolicy(max_batch, max_wait=max_wait, **kwargs)
+        if spec == "coalesce":
+            if max_wait is None:
+                raise ValueError(
+                    "policy='coalesce' needs max_wait: steals only ride "
+                    "flushes with spare room, and without a deadline every "
+                    "flush is full — the policy would silently act like "
+                    "'full'")
+            return CoalescingPolicy(max_batch, max_wait=max_wait,
+                                    max_in_flight=max_in_flight)
+        raise ValueError(f"unknown scheduling policy {spec!r}; expected one "
+                         f"of {sorted(POLICY_NAMES)}")
+    if isinstance(spec, SchedulerPolicy):
+        return spec
+    raise TypeError(f"policy must be a name or SchedulerPolicy, "
+                    f"got {type(spec).__name__}")
+
+
+__all__ = [
+    "BucketKey",
+    "FlushDecision",
+    "FlushTelemetry",
+    "SchedulerPolicy",
+    "FullBucketPolicy",
+    "DeadlinePolicy",
+    "AdaptivePolicy",
+    "CoalescingPolicy",
+    "POLICY_NAMES",
+    "make_policy",
+]

@@ -19,4 +19,26 @@ def next_pow2(x: int) -> int:
     return 1 << max(0, int(x) - 1).bit_length()
 
 
-__all__ = ["next_pow2"]
+class VirtualClock:
+    """Deterministic engine clock for tests, simulators and benchmarks.
+
+    Injected as ``ClusterBatcher(clock=...)`` (the engine clock is the only
+    time source scheduling decisions see), so deadline/steal behaviour can
+    be driven in virtual time and traces replay exactly. One definition for
+    every call site — tests and benchmarks must not fork their own copies
+    that could drift.
+    """
+
+    __slots__ = ("t",)
+
+    def __init__(self, start: float = 0.0):
+        self.t = start
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+__all__ = ["next_pow2", "VirtualClock"]

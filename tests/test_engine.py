@@ -31,7 +31,7 @@ from repro.core.graph import gnp, random_arboric, star
 from repro.serve.batching import ContinuousBatcher
 from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
 from repro.serve.engine import ClusterEngine, EngineStats, serve_all
-from repro.util import next_pow2
+from repro.util import VirtualClock, next_pow2
 
 
 def _rand_graph(n, lam, seed):
@@ -43,19 +43,6 @@ def _assert_matches(g, key, res_batch, **kwargs):
     res_single = correlation_cluster(g, key=key, **kwargs)
     assert (res_batch.labels == res_single.labels).all()
     assert res_batch.cost == res_single.cost
-
-
-class VirtualClock:
-    """Injectable engine clock for deterministic deadline tests."""
-
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-    def advance(self, dt):
-        self.t += dt
 
 
 # ---------------------------------------------------------------------------
@@ -249,7 +236,10 @@ def test_batcher_warmup_precompiles_subbatch_programs():
     rng = np.random.default_rng(21)
     graphs = [_rand_graph(int(rng.integers(5, 12)), 1, seed=i)
               for i in range(4)]
-    batcher = ClusterBatcher(max_batch=4)
+    # num_samples=7 keys program-cache entries no other test compiles, so
+    # the cold-warmup count below is robust to suite ordering (the LRU is
+    # process-global).
+    batcher = ClusterBatcher(max_batch=4, num_samples=7)
     compiled = batcher.warmup(graphs)
     assert compiled >= 1
     before = batch_mod.program_cache_size()

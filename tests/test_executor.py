@@ -48,6 +48,7 @@ from repro.serve.cluster_batcher import (
     ClusterBatcher,
     ClusterRequest,
 )
+from repro.util import VirtualClock
 
 
 def _rand_graph(n, lam, seed):
@@ -59,17 +60,6 @@ def _assert_matches(g, key, res_batch, **kwargs):
     res_single = correlation_cluster(g, key=key, **kwargs)
     assert (res_batch.labels == res_single.labels).all()
     assert res_batch.cost == res_single.cost
-
-
-class VirtualClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-    def advance(self, dt):
-        self.t += dt
 
 
 class _StallingExecutor(AsyncExecutor):

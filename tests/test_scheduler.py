@@ -1,0 +1,468 @@
+"""Scheduling-policy layer: decisions, promotion, bit-exactness, leases.
+
+The contracts under test (serve/scheduler.py, serve/cluster_batcher.py,
+core/plan.py promote_plan, core/executor.py telemetry):
+
+* policy unit behaviour — full-bucket/deadline/adaptive/coalescing
+  ``select_flushes``/``on_admit`` decisions are pure functions of the
+  queues, the injected engine clock and the telemetry (no wall-clock);
+* shape promotion (``promote_plan``) validates its target, and coalesced
+  flushes — requests running at a *promoted* ``(R, W)`` — stay
+  bit-identical to per-graph ``correlation_cluster``;
+* all four policies satisfy the bit-exactness contract under randomized
+  arrival traces (hypothesis-style), while ``BucketBufferPool`` never
+  hands out a staging buffer whose lease is outstanding;
+* executor telemetry (wall/pack per flush) reaches ``ClusterStats`` and
+  drives the adaptive admission window;
+* ``serve_all`` retries rejected admissions, so backpressure policies can
+  be driven by the reference outer loop.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BucketBufferPool,
+    build_graph,
+    correlation_cluster,
+    plan_graph,
+    promote_plan,
+)
+from repro.core.executor import AsyncExecutor
+from repro.core.graph import path, random_arboric
+from repro.serve.cluster_batcher import (
+    AdmissionRejected,
+    ClusterBatcher,
+    ClusterRequest,
+)
+from repro.serve.engine import serve_all
+from repro.serve.scheduler import (
+    AdaptivePolicy,
+    CoalescingPolicy,
+    DeadlinePolicy,
+    FlushDecision,
+    FlushTelemetry,
+    FullBucketPolicy,
+    SchedulerPolicy,
+    make_policy,
+)
+from repro.util import VirtualClock
+
+
+def _rand_graph(n, lam, seed):
+    edges, _ = random_arboric(n, lam, np.random.default_rng(seed))
+    return build_graph(n, edges)
+
+
+def _assert_matches(g, key, res_batch, **kwargs):
+    res_single = correlation_cluster(g, key=key, **kwargs)
+    assert (res_batch.labels == res_single.labels).all()
+    assert res_batch.cost == res_single.cost
+
+
+@dataclasses.dataclass
+class _Req:
+    """Queue stand-in: policies only read ``admitted_at``."""
+
+    admitted_at: float
+
+
+def _queues(spec):
+    """{bucket: [ages...]} → {bucket: [requests admitted at those times]}."""
+    return {b: [_Req(admitted_at=t) for t in ts] for b, ts in spec.items()}
+
+
+# ---------------------------------------------------------------------------
+# Policy unit behaviour (pure decisions over queues + clock + telemetry).
+# ---------------------------------------------------------------------------
+
+
+def test_full_bucket_policy_flushes_only_full_queues():
+    pol = FullBucketPolicy(max_batch=4)
+    tele = FlushTelemetry()
+    qs = _queues({(8, 4): [0.0, 0.1, 0.2], (16, 4): [0.0] * 4})
+    out = pol.select_flushes(qs, now=10.0, telemetry=tele)
+    assert out == [FlushDecision(bucket=(16, 4), count=4)]
+    # Oversized queue drains in max_batch chunks within one call.
+    qs = _queues({(8, 4): [0.0] * 9})
+    out = pol.select_flushes(qs, now=0.0, telemetry=tele)
+    assert [d.count for d in out] == [4, 4]
+
+
+def test_deadline_policy_flags_overdue_partial_flushes():
+    pol = DeadlinePolicy(max_batch=4, max_wait=1.0)
+    tele = FlushTelemetry()
+    qs = _queues({(8, 4): [0.0, 0.5], (16, 4): [4.5]})
+    out = pol.select_flushes(qs, now=5.0, telemetry=tele)
+    # (8, 4) is overdue and flushes its whole queue; (16, 4) aged only 0.5s.
+    assert out == [FlushDecision(bucket=(8, 4), count=2, deadline=True)]
+    assert pol.select_flushes(qs, now=0.9, telemetry=tele) == []
+
+
+def test_adaptive_policy_window_tracks_latency_ratio():
+    pol = AdaptivePolicy(max_batch=4, min_window=1, max_window=8)
+    tele = FlushTelemetry(alpha=1.0)    # alpha=1: window = last sample
+    assert pol.admission_window(tele) == 8      # cold: never throttle
+    tele.record((8, 4), wall_s=0.100, pack_s=0.010)
+    assert pol.admission_window(tele) == 8      # ceil(10) clamped to max
+    tele.record((8, 4), wall_s=0.030, pack_s=0.010)
+    assert pol.admission_window(tele) == 3      # device 3x the host
+    tele.record((8, 4), wall_s=0.001, pack_s=0.010)
+    assert pol.admission_window(tele) == 1      # host-bound: no pipelining
+    # Queue-inclusive wall is normalized by the in-flight depth at submit:
+    # 80ms of wall behind 7 other flushes is 10ms of service, not a signal
+    # to deepen the window (the feedback loop the normalization breaks).
+    tele.record((8, 4), wall_s=0.080, pack_s=0.010, depth=8)
+    assert pol.admission_window(tele) == 1
+    tele.in_flight = 1
+    assert not pol.on_admit({}, now=0.0, telemetry=tele)
+    tele.in_flight = 0
+    assert pol.on_admit({}, now=0.0, telemetry=tele)
+
+
+def test_static_backpressure_window_is_policy_driven():
+    pol = FullBucketPolicy(max_batch=2, max_in_flight=2)
+    tele = FlushTelemetry()
+    tele.in_flight = 1
+    assert pol.on_admit({}, now=0.0, telemetry=tele)
+    tele.in_flight = 2
+    assert not pol.on_admit({}, now=0.0, telemetry=tele)
+
+
+def test_coalescing_policy_steals_compatible_starving_buckets():
+    pol = CoalescingPolicy(max_batch=6, max_wait=2.0, steal_wait=1.0)
+    tele = FlushTelemetry()
+    qs = _queues({
+        (16, 8): [0.0, 0.1],    # overdue at now=3 → deadline flush, room 4
+        (8, 4): [1.5, 1.6],     # age ≥ steal_wait, < max_wait → stolen
+        (8, 16): [1.5],         # W too large to fit (16, 8) → never stolen
+        (32, 8): [1.5],         # R too large to fit (16, 8) → never stolen
+    })
+    (d,) = pol.select_flushes(qs, now=3.0, telemetry=tele)
+    assert d.bucket == (16, 8) and d.count == 2 and d.deadline
+    assert d.steal == (((8, 4), 2),)
+    # Below the steal threshold nothing is stolen.
+    (d,) = pol.select_flushes(qs, now=2.3, telemetry=tele)
+    assert d.steal == ()
+
+
+def test_full_flush_at_capacity_has_no_steal_room():
+    pol = CoalescingPolicy(max_batch=4, steal_wait=0.0)
+    qs = _queues({(16, 8): [0.0] * 4, (8, 4): [0.0]})
+    (d,) = pol.select_flushes(qs, now=5.0, telemetry=FlushTelemetry())
+    assert d.bucket == (16, 8) and d.count == 4 and d.steal == ()
+
+
+def test_coalescing_steal_capacity_and_starvation_order():
+    pol = CoalescingPolicy(max_batch=4, max_wait=10.0, steal_wait=0.0)
+    qs = _queues({
+        (32, 8): [0.0],             # overdue at now=11 → room for 3
+        (8, 4): [9.0, 9.1],         # older queue → stolen first
+        (16, 8): [9.5, 9.6],        # younger → only 1 of 2 fits
+    })
+    (d,) = pol.select_flushes(qs, now=11.0, telemetry=FlushTelemetry())
+    assert d.bucket == (32, 8) and d.count == 1 and d.deadline
+    assert d.steal == (((8, 4), 2), ((16, 8), 1))
+
+
+def test_make_policy_resolution_and_validation():
+    assert make_policy(None, max_batch=4).name == "full"
+    assert make_policy(None, max_batch=4, max_wait=0.1).name == "deadline"
+    assert make_policy("adaptive", max_batch=4,
+                       max_in_flight=3).max_window == 3
+    assert make_policy("coalesce", max_batch=4,
+                       max_wait=1.0).steal_wait == 0.5
+    pol = CoalescingPolicy(max_batch=2)
+    assert pol.steal_wait == 0.0    # direct construction: steal when room
+    assert make_policy(pol, max_batch=99) is pol
+    # ... but the name route requires a deadline, or the policy would
+    # silently degenerate to full-bucket (full flushes have no steal room).
+    with pytest.raises(ValueError, match="coalesce.*max_wait|max_wait"):
+        make_policy("coalesce", max_batch=4)
+    for impl in (FullBucketPolicy(2), DeadlinePolicy(2, 0.1),
+                 AdaptivePolicy(2), CoalescingPolicy(2)):
+        assert isinstance(impl, SchedulerPolicy)
+    with pytest.raises(ValueError, match="max_wait"):
+        make_policy("deadline", max_batch=4)
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_policy("turbo", max_batch=4)
+    with pytest.raises(TypeError, match="policy"):
+        make_policy(42, max_batch=4)
+    with pytest.raises(ValueError, match="min_window"):
+        AdaptivePolicy(4, min_window=0)
+    with pytest.raises(ValueError, match="steal_wait"):
+        CoalescingPolicy(4, steal_wait=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# promote_plan: validation + bit-exact coalesced flushes (tentpole contract).
+# ---------------------------------------------------------------------------
+
+
+def test_promote_plan_validates_and_is_identity_at_native_shape():
+    plan = plan_graph(build_graph(6, path(6)))          # (8, 4)
+    assert promote_plan(plan, 8, 4) is plan
+    bigger = promote_plan(plan, 32, 8)
+    assert bigger.bucket == (32, 8)
+    assert bigger.n == plan.n and bigger.wreq == plan.wreq
+    assert plan.bucket == (8, 4)                        # original untouched
+    with pytest.raises(ValueError, match="promote"):
+        promote_plan(plan, 4, 4)
+    with pytest.raises(ValueError, match="promote"):
+        promote_plan(bigger, 32, 4)
+    with pytest.raises(ValueError, match="largest supported"):
+        promote_plan(plan, 1 << 20, 4)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("executor", ["sync", "async", "sharded"])
+def test_coalesced_flush_promotes_and_stays_bit_exact(executor, use_kernel):
+    """Hot bucket goes overdue below capacity; the younger starving cold
+    request is stolen into its deadline flush at a promoted (R, W) shape,
+    and every result matches the per-graph engine bit-exactly."""
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=8, policy="coalesce", max_wait=0.1,
+                             clock=clock, executor=executor,
+                             use_kernel=use_kernel, num_samples=2)
+    hot = [build_graph(n, path(n)) for n in (17, 20, 24)]   # bucket (32, 4)
+    for i, g in enumerate(hot):
+        batcher.admit(ClusterRequest(uid=i, graph=g,
+                                     key=jax.random.PRNGKey(i)))
+        clock.advance(0.01)
+    cold = build_graph(6, path(6))                          # bucket (8, 4)
+    batcher.admit(ClusterRequest(uid=9, graph=cold,
+                                 key=jax.random.PRNGKey(9)))
+    # Hot oldest is now 0.03s old, cold 0.0s. Advance so the hot bucket is
+    # overdue (0.11 ≥ max_wait) while cold (0.08) is past steal_wait (0.05)
+    # but under its own deadline — the exact starvation-steal window.
+    clock.advance(0.08)
+    retired = batcher.poll()
+    retired += batcher.flush()
+    done = {r.uid: r for r in retired}
+    assert sorted(done) == [0, 1, 2, 9]
+    assert batcher.stats.flushes == 1       # one coalesced flush served all
+    assert batcher.stats.coalesced_flushes == 1
+    assert batcher.stats.stolen_requests == 1
+    for uid, g in [(0, hot[0]), (1, hot[1]), (2, hot[2]), (9, cold)]:
+        _assert_matches(g, jax.random.PRNGKey(uid), done[uid].result,
+                        num_samples=2)
+    # Promotion is transparent to the caller: the result still reports the
+    # request's native bucket.
+    assert done[9].result.info["bucket"] == (8, 4)
+
+
+def test_coalescing_full_flush_steals_when_room_remains():
+    """A full-bucket flush below max_batch capacity... cannot exist — but a
+    repeating hot stream with spare room shows steady-state stealing: the
+    cold request rides the first hot deadline flush, never the drain."""
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=4, policy="coalesce", max_wait=0.05,
+                             clock=clock)
+    cold = build_graph(5, path(5))
+    hot = [build_graph(n, path(n)) for n in (17, 18, 19)]
+    # Cold arrives first and would starve behind the hot stream under the
+    # full-bucket policy (its bucket never fills).
+    batcher.admit(ClusterRequest(uid=100, graph=cold,
+                                 key=jax.random.PRNGKey(100)))
+    clock.advance(0.04)     # cold nearly overdue
+    for i, g in enumerate(hot):
+        batcher.admit(ClusterRequest(uid=i, graph=g,
+                                     key=jax.random.PRNGKey(i)))
+    clock.advance(0.06)     # everyone overdue → cold's own deadline fires
+    retired = batcher.poll()
+    done = {r.uid: r for r in retired}
+    # Cold is overdue itself, so it flushes regardless of stealing — the
+    # guarantee that coalescing never *worsens* the deadline contract.
+    assert 100 in done
+    assert batcher.pending() == 0
+    _assert_matches(cold, jax.random.PRNGKey(100), done[100].result)
+    for i, g in enumerate(hot):
+        _assert_matches(g, jax.random.PRNGKey(i), done[i].result)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry plumbing: executor → ClusterStats → adaptive window.
+# ---------------------------------------------------------------------------
+
+
+def test_flush_latency_telemetry_reaches_stats():
+    batcher = ClusterBatcher(max_batch=2)
+    g = build_graph(6, path(6))
+    for i in range(4):
+        batcher.admit(ClusterRequest(uid=i, graph=g,
+                                     key=jax.random.PRNGKey(i)))
+    batcher.flush()
+    tele = batcher.stats.latency
+    assert tele.total_flushes == batcher.stats.flushes == 2
+    assert tele.ewma_wall is not None and tele.ewma_wall >= 0.0
+    assert tele.ewma_pack is not None and tele.ewma_pack >= 0.0
+    summary = tele.summary()
+    assert list(summary) == ["8x4"]
+    rec = summary["8x4"]
+    assert rec["flushes"] == 2
+    for field in ("wall_p50_ms", "wall_p99_ms", "pack_p50_ms",
+                  "pack_p99_ms", "wall_ewma_ms"):
+        assert rec[field] >= 0.0
+    assert batcher.stats.policy == "full"
+
+
+def test_adaptive_policy_serves_and_windows_from_real_telemetry():
+    batcher = ClusterBatcher(max_batch=2, policy="adaptive",
+                             executor="async")
+    assert batcher.stats.policy == "adaptive"
+    reqs = [ClusterRequest(uid=i, graph=_rand_graph(6 + (i % 3), 1, seed=i),
+                           key=jax.random.PRNGKey(i)) for i in range(8)]
+    retired = serve_all(batcher, reqs)
+    assert sorted(r.uid for r in retired) == list(range(8))
+    for r in retired:
+        _assert_matches(r.graph, jax.random.PRNGKey(r.uid), r.result)
+    # Telemetry accumulated, and the window is now latency-derived.
+    assert batcher.stats.latency.total_flushes >= 1
+    window = batcher.policy.admission_window(batcher.stats.latency)
+    assert 1 <= window <= batcher.policy.max_window
+
+
+class _ReleasingExecutor(AsyncExecutor):
+    """Stalls harvests for a fixed number of retire() calls, then releases
+    — deterministic backpressure that eventually clears."""
+
+    def __init__(self, stall_retires=2):
+        super().__init__()
+        self.stall_retires = stall_retires
+
+    def retire(self):
+        if self.stall_retires > 0:
+            self.stall_retires -= 1
+            return []
+        return super().retire()
+
+
+def test_serve_all_retries_rejected_admissions():
+    """The reference driver must survive AdmissionRejected (harvest +
+    retry) so backpressure/adaptive policies can be driven by it."""
+    ex = _ReleasingExecutor(stall_retires=8)
+    batcher = ClusterBatcher(max_batch=1, executor=ex, max_in_flight=1)
+    g = build_graph(6, path(6))
+    reqs = [ClusterRequest(uid=i, graph=g, key=jax.random.PRNGKey(i))
+            for i in range(4)]
+    retired = serve_all(batcher, reqs)
+    assert sorted(r.uid for r in retired) == list(range(4))
+    assert batcher.stats.rejected >= 1      # backpressure actually fired
+    for r in retired:
+        _assert_matches(r.graph, jax.random.PRNGKey(r.uid), r.result)
+
+
+# ---------------------------------------------------------------------------
+# Determinism: scheduling decisions only ever see the injected clock.
+# ---------------------------------------------------------------------------
+
+
+def test_no_wall_clock_on_any_scheduling_path(monkeypatch):
+    """With a virtual clock injected, admit/poll/oldest_wait/flush must
+    never fall back to time.monotonic — freeze it to a poisoned callable
+    and drive a full deadline + coalescing cycle."""
+    import sys
+    import time as _time
+
+    real_monotonic = _time.monotonic
+
+    def _guarded():
+        # JAX internals legitimately use time.monotonic; only calls from
+        # this repo's serving layer are a clock-injection violation.
+        caller = sys._getframe(1).f_globals.get("__name__", "")
+        if caller.startswith("repro.serve"):
+            raise AssertionError(
+                "bare time.monotonic() on a scheduling path")
+        return real_monotonic()
+
+    monkeypatch.setattr(_time, "monotonic", _guarded)
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=4, max_wait=0.5, policy="coalesce",
+                             clock=clock)
+    g_small, g_big = build_graph(6, path(6)), build_graph(20, path(20))
+    batcher.admit(ClusterRequest(uid=0, graph=g_small,
+                                 key=jax.random.PRNGKey(0)))
+    clock.advance(0.3)
+    batcher.admit(ClusterRequest(uid=1, graph=g_big,
+                                 key=jax.random.PRNGKey(1)))
+    assert batcher.oldest_wait() == pytest.approx(0.3)
+    clock.advance(0.3)
+    retired = batcher.poll()        # uid0 overdue → deadline flush
+    assert 0 in {r.uid for r in retired}
+    retired += batcher.flush()
+    assert sorted(r.uid for r in retired) == [0, 1]
+    # Default clock resolves to the real monotonic clock when not injected.
+    monkeypatch.undo()
+    assert ClusterBatcher(max_batch=2).clock is _time.monotonic
+
+
+# ---------------------------------------------------------------------------
+# Randomized arrival traces: lease invariant + bit-exactness per policy
+# (hypothesis-style satellite; runs under the conftest stub too).
+# ---------------------------------------------------------------------------
+
+
+class _LeaseAuditPool(BucketBufferPool):
+    """Asserts the lease invariant: acquire never hands out staging arrays
+    whose lease is still outstanding."""
+
+    def __init__(self):
+        super().__init__()
+        self.outstanding = set()
+
+    def acquire(self, b, r, w):
+        lease = super().acquire(b, r, w)
+        ident = id(lease.arrays["ell"])
+        assert ident not in self.outstanding, \
+            "BucketBufferPool refilled a staging buffer still in flight"
+        self.outstanding.add(ident)
+        return lease
+
+    def _release(self, lease):
+        self.outstanding.discard(id(lease.arrays["ell"]))
+        super()._release(lease)
+
+
+@settings(max_examples=12, deadline=None)
+@given(policy=st.sampled_from(["full", "deadline", "adaptive", "coalesce"]),
+       seed=st.integers(min_value=0, max_value=10_000),
+       gap_ms=st.floats(min_value=0.0, max_value=30.0),
+       wait_ms=st.floats(min_value=1.0, max_value=60.0))
+def test_random_traces_bit_exact_and_lease_safe(policy, seed, gap_ms,
+                                                wait_ms):
+    """Drive each policy over a random (n, arrival-gap, deadline) stream on
+    a virtual clock: every result must match the per-graph engine and the
+    pool must never refill an in-flight lease."""
+    rng = np.random.default_rng(seed)
+    clock = VirtualClock()
+    pool = _LeaseAuditPool()
+    max_wait = wait_ms / 1e3 if policy != "full" else None
+    batcher = ClusterBatcher(max_batch=4, policy=policy, max_wait=max_wait,
+                             clock=clock, pool=pool, executor="async")
+    n_reqs = int(rng.integers(6, 12))
+    reqs = []
+    retired = []
+    for uid in range(n_reqs):
+        clock.advance(gap_ms / 1e3 * float(rng.random()))
+        n = int(rng.integers(5, 15))
+        req = ClusterRequest(uid=uid,
+                             graph=_rand_graph(n, 1, seed * 31 + uid),
+                             key=jax.random.PRNGKey(uid))
+        reqs.append(req)
+        while True:
+            try:
+                retired += batcher.admit(req)
+                break
+            except AdmissionRejected:       # adaptive window can reject
+                retired += batcher.retire()
+        retired += batcher.poll()
+    retired += batcher.flush()
+    assert sorted(r.uid for r in retired) == list(range(n_reqs))
+    assert pool.leased == 0 and not pool.outstanding
+    for r in reqs:
+        _assert_matches(r.graph, jax.random.PRNGKey(r.uid), r.result)
