@@ -81,8 +81,9 @@ def bench_serve_policy(graphs, lams, policy: str, executor: str):
 
     Same graphs/keys as the one-shot passes (so results are asserted
     bit-identical to the per-graph loop), driven by ``serve_all``. Returns
-    (wall_seconds, {uid: request}, stats); the stats carry the per-bucket
-    flush-latency telemetry the JSON emits.
+    ``(wall_seconds, {uid: request}, batcher)`` — the batcher, not just
+    its stats, so the JSON can also emit the cost policy's steal-pricing
+    counters alongside the flush-latency telemetry.
     """
     max_wait = None if policy == "full" else 0.05
     batcher = ClusterBatcher(max_batch=32, policy=policy, max_wait=max_wait,
@@ -93,7 +94,7 @@ def bench_serve_policy(graphs, lams, policy: str, executor: str):
     t0 = time.perf_counter()
     retired = serve_all(batcher, reqs)
     dt = time.perf_counter() - t0
-    return dt, {r.uid: r for r in retired}, batcher.stats
+    return dt, {r.uid: r for r in retired}, batcher
 
 
 def main():
@@ -157,8 +158,9 @@ def main():
 
     # --- serving pass: same workload through the scheduler-driven engine ----
     bench_serve_policy(graphs, lams, args.policy, args.executor)  # warm
-    t_serve, served, serve_stats = bench_serve_policy(
+    t_serve, served, serve_batcher = bench_serve_policy(
         graphs, lams, args.policy, args.executor)
+    serve_stats = serve_batcher.stats
     for uid, a in enumerate(loop_res):
         b = served[uid].result
         assert (a.labels == b.labels).all() and a.cost == b.cost, \
@@ -191,17 +193,24 @@ def main():
                 "batch_s_p50": float(np.percentile(batch_times, 50)),
                 "batch_s_p99": float(np.percentile(batch_times, 99)),
             },
-            "serve": {
-                "policy": args.policy,
-                "gps": n_graphs / t_serve,
-                "flushes": serve_stats.flushes,
-                "deadline_flushes": serve_stats.deadline_flushes,
-                "coalesced_flushes": serve_stats.coalesced_flushes,
-                "stolen_requests": serve_stats.stolen_requests,
-                "flush_latency": serve_stats.latency.summary(),
-            },
-            "program_cache": program_cache_info(),
         }
+        serve_payload = {
+            "policy": args.policy,
+            "gps": n_graphs / t_serve,
+            "flushes": serve_stats.flushes,
+            "deadline_flushes": serve_stats.deadline_flushes,
+            "coalesced_flushes": serve_stats.coalesced_flushes,
+            "stolen_requests": serve_stats.stolen_requests,
+            "padded_slots": serve_stats.padded_slots,
+            "flush_latency": serve_stats.latency.summary(),
+        }
+        cost_stats = getattr(serve_batcher.policy, "cost_stats", None)
+        if cost_stats is not None:      # cost policy: steal pricing counters
+            serve_payload["cost"] = cost_stats()
+        payload["serve"] = serve_payload
+        # program_cache now also reports lifetime compiles and the pinned
+        # bucket shapes (the scheduler's eviction hints).
+        payload["program_cache"] = program_cache_info()
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")

@@ -15,8 +15,20 @@ Three questions answered, machine-readably (``BENCH_serve.json``):
   two-bucket arrival stream on a *virtual* clock: a hot bucket fills
   constantly while a cold bucket trickles. Under the full-bucket policy
   the cold requests wait for the end-of-stream drain; the coalescing
-  policy promotes them into hot flushes and bounds their p99 wait. The
-  comparison is deterministic (virtual time) and asserted.
+  policy promotes them into hot flushes and bounds their p99 wait; the
+  cost-aware policy may reject individual steals but must stay inside the
+  deadline bound. The comparison is deterministic (virtual time) and
+  asserted.
+* **Pad-hostile stream** (the cost-model acceptance scenario; runs on
+  ``--policy cost`` passes) — hot deadline flushes land exactly on a pow2
+  boundary, so every age-only steal doubles the sub-batch; the cost-aware
+  policy prices the inflation and rejects, producing strictly fewer
+  ``padded_slots`` at the same latency bound (virtual clock, asserted).
+* **Shape-churn eviction** (``--policy cost`` passes) — a parade of fresh
+  bucket shapes churns a deliberately small compiled-program cache while
+  one hot shape keeps flushing: the cost policy's ``on_retire`` shape
+  heat pins the hot shape, so hint-driven eviction recompiles no more
+  than blind LRU (asserted; compile/eviction counts emitted).
 * **Executor / adaptive window** — what does pipelined execution buy, and
   does the adaptive in-flight window match a hand-tuned static
   ``max_in_flight``? Closed-loop steady-state comparisons, interleaved so
@@ -141,7 +153,8 @@ def steady_throughput(reqs, engines, repeat: int = 5):
 
 def starvation_comparison(smoke: bool, max_batch: int = 16,
                           gap: float = 0.002):
-    """Skewed two-bucket stream on a virtual clock: full vs coalesce.
+    """Skewed two-bucket stream on a virtual clock: full vs coalesce vs
+    cost-aware coalesce.
 
     A hot ``(32, 4)`` bucket receives almost every arrival; a cold
     ``(8, 4)`` bucket gets one request every ``cold_every`` arrivals and
@@ -151,13 +164,18 @@ def starvation_comparison(smoke: bool, max_batch: int = 16,
     stream), under the coalescing policy (deadline ``10·gap``, aggressive
     ``steal_wait``) the hot bucket's partial deadline flushes have spare
     room and the cold requests are promoted into them — their p99 wait is
-    bounded by the hot flush cadence, not the stream length.
+    bounded by the hot flush cadence, not the stream length. The
+    cost-aware policy may *reject* individual steals (priced against real
+    flush telemetry), but a rejected request still flushes on its own
+    ``max_wait`` deadline, so its p99 must stay within the coalesce-style
+    bound — asserted against ``max_wait`` plus one poll tick.
     """
     n_hot = 64 if smoke else 240
     cold_every = 16
+    max_wait = 10 * gap
 
     def build_stream():
-        # Fresh rng per pass: both policies must see the *identical* stream
+        # Fresh rng per pass: all policies must see the *identical* stream
         # or the asserted A/B would compare two different workloads.
         rng = np.random.default_rng(7)
         stream = []
@@ -171,14 +189,20 @@ def starvation_comparison(smoke: bool, max_batch: int = 16,
             uid += 1
         return stream
 
-    from repro.serve.scheduler import CoalescingPolicy
+    from repro.serve.scheduler import (CoalescingPolicy,
+                                       CostAwareCoalescingPolicy)
 
     results = {}
-    for policy in ("full", "coalesce"):
+    for policy in ("full", "coalesce", "cost"):
         clock = VirtualClock()
-        pol = CoalescingPolicy(max_batch, max_wait=10 * gap,
-                               steal_wait=gap / 2) \
-            if policy == "coalesce" else policy
+        if policy == "coalesce":
+            pol = CoalescingPolicy(max_batch, max_wait=max_wait,
+                                   steal_wait=gap / 2)
+        elif policy == "cost":
+            pol = CostAwareCoalescingPolicy(max_batch, max_wait=max_wait,
+                                            steal_wait=gap / 2)
+        else:
+            pol = policy
         batcher = ClusterBatcher(max_batch=max_batch, policy=pol,
                                  clock=clock)
         waits, is_cold = {}, {}
@@ -206,6 +230,8 @@ def starvation_comparison(smoke: bool, max_batch: int = 16,
             "coalesced_flushes": batcher.stats.coalesced_flushes,
             "stolen_requests": batcher.stats.stolen_requests,
         }
+        if policy == "cost":
+            results[policy].update(batcher.policy.cost_stats())
         print(f"[starve:{policy:8s}] cold p99={results[policy]['cold_p99_ms']:8.1f}ms "
               f"max={results[policy]['cold_max_ms']:8.1f}ms   "
               f"hot p99={results[policy]['hot_p99_ms']:6.1f}ms   "
@@ -215,7 +241,204 @@ def starvation_comparison(smoke: bool, max_batch: int = 16,
     assert results["coalesce"]["cold_p99_ms"] < results["full"]["cold_p99_ms"], (
         "coalescing must bound the starved bucket's p99 wait below the "
         "full-bucket policy's end-of-stream drain")
+    # The cost-aware policy's rejections must never void the latency
+    # contract: every cold request is bounded by its own deadline (plus
+    # one poll tick, since polls ride the gap-spaced admit loop), while
+    # the end-of-stream drain under full-bucket grows with the stream.
+    cost_bound_ms = (max_wait + 2 * gap) * 1e3
+    assert results["cost"]["cold_max_ms"] <= cost_bound_ms + 1e-6, (
+        f"cost-aware coalescing exceeded the deadline bound: "
+        f"{results['cost']['cold_max_ms']:.1f}ms > {cost_bound_ms:.1f}ms")
+    assert results["cost"]["cold_p99_ms"] < results["full"]["cold_p99_ms"]
     return results
+
+
+def pad_hostile_comparison(smoke: bool, max_batch: int = 16,
+                           gap: float = 0.002):
+    """Pow2-boundary mixed stream on a virtual clock: age-only coalescing
+    vs the cost-aware policy (the tentpole acceptance scenario).
+
+    Each window admits exactly 8 hot ``(32, 4)`` requests (a deadline
+    flush of 8 packs into ``g_pad = 8`` with zero empty group slots) plus
+    one starving cold ``(8, 4)`` request. Age-only coalescing promotes the
+    cold request into every hot deadline flush — inflating the sub-batch
+    to ``g_pad = 16`` and paying 7 empty entries per flush. The cost-aware
+    policy prices that inflation (a pessimistic ``service_floor_s`` makes
+    the pricing independent of host timing noise: floor cost ≥ 50 ms of
+    device time vs ≤ ``max_wait`` = 20 ms of slack saved) and rejects the
+    steal; the cold request rides its *own* deadline at ``g_pad = 1`` with
+    zero padding. Asserted: strictly fewer ``padded_slots`` under the cost
+    policy, with the cold p99 still inside the deadline bound.
+    """
+    from repro.serve.costmodel import FlushCostModel
+    from repro.serve.scheduler import (CoalescingPolicy,
+                                       CostAwareCoalescingPolicy)
+
+    n_windows = 6 if smoke else 14
+    max_wait = 10 * gap
+    hot_per_window = 8
+
+    def build_window(rng, uid):
+        window = []
+        for j in range(hot_per_window):
+            n = int(rng.integers(17, 30))
+            window.append((uid, build_graph(n, path(n)), False))
+            uid += 1
+            if j == 3:          # cold trickles in mid-window
+                window.append((uid, build_graph(6, path(6)), True))
+                uid += 1
+        return window, uid
+
+    results = {}
+    for policy in ("coalesce", "cost"):
+        clock = VirtualClock()
+        if policy == "coalesce":
+            pol = CoalescingPolicy(max_batch, max_wait=max_wait,
+                                   steal_wait=gap / 2)
+        else:
+            pol = CostAwareCoalescingPolicy(
+                max_batch, max_wait=max_wait, steal_wait=gap / 2,
+                cost_model=FlushCostModel(service_floor_s=0.05))
+        batcher = ClusterBatcher(max_batch=max_batch, policy=pol,
+                                 clock=clock)
+        waits, is_cold = {}, {}
+        rng = np.random.default_rng(11)     # identical stream per arm
+        uid = 0
+
+        def account(done, now):
+            for r in done:
+                waits[r.uid] = now - r.admitted_at
+
+        for _ in range(n_windows):
+            window, uid = build_window(rng, uid)
+            for w_uid, g, cold in window:
+                is_cold[w_uid] = cold
+                clock.advance(gap)
+                account(batcher.admit(
+                    ClusterRequest(uid=w_uid, graph=g,
+                                   key=jax.random.PRNGKey(w_uid))), clock.t)
+                account(batcher.poll(), clock.t)
+            # Idle tail of the window: the oldest hot request crosses
+            # max_wait here, so the deadline flush carries exactly the 8
+            # hot requests — a pow2 boundary every steal would double.
+            clock.advance(3 * gap)
+            account(batcher.poll(), clock.t)
+        account(batcher.flush(), clock.t)
+        cold_waits = np.array([w for uid, w in waits.items() if is_cold[uid]])
+        results[policy] = {
+            "padded_slots": batcher.stats.padded_slots,
+            "stolen_requests": batcher.stats.stolen_requests,
+            "cold_p99_ms": pct(cold_waits, 99) * 1e3,
+            "cold_max_ms": float(cold_waits.max()) * 1e3,
+        }
+        if policy == "cost":
+            results[policy].update(batcher.policy.cost_stats())
+        print(f"[pad-hostile:{policy:8s}] padded_slots="
+              f"{results[policy]['padded_slots']:4d}  "
+              f"stolen={results[policy]['stolen_requests']:3d}  "
+              f"cold p99={results[policy]['cold_p99_ms']:6.1f}ms")
+    assert results["coalesce"]["stolen_requests"] > 0, \
+        "age-only coalescing never stole — the pad-hostile stream is broken"
+    assert results["cost"]["steals_rejected"] > 0, \
+        "cost model never rejected a steal on the pad-hostile stream"
+    assert results["cost"]["padded_slots"] < results["coalesce"]["padded_slots"], (
+        "cost-aware coalescing must produce strictly fewer padded slots "
+        f"than age-only on the pad-hostile stream "
+        f"({results['cost']['padded_slots']} vs "
+        f"{results['coalesce']['padded_slots']})")
+    cost_bound_ms = (max_wait + 2 * gap) * 1e3
+    assert results["cost"]["cold_max_ms"] <= cost_bound_ms + 1e-6, (
+        "rejected steals must still retire on their own deadline")
+    return results
+
+
+def eviction_churn_comparison(smoke: bool):
+    """Shape churn through a small program cache: blind LRU vs the
+    scheduler's heat-driven ``touch``/``pin`` eviction hints.
+
+    One hot bucket shape flushes three times per sweep while a parade of
+    *fresh* cold shapes (distinct ``(B, R, W)`` programs, never repeated)
+    churns through a deliberately small compiled-program cache. Under
+    blind LRU the cold parade evicts the hot shape's program between
+    visits, so the hot shape recompiles every sweep; the cost policy's
+    ``on_retire`` heat tracking pins the hot shape, which survives the
+    churn. First-time compiles are identical in both arms (same
+    workload), so the compile-count difference is exactly the recompiles
+    — asserted: hinted ≤ blind. The hinted arm runs *first* so any cache
+    residue between arms favours the blind baseline.
+    """
+    from repro.core.executor import (program_cache_info, program_cache_unpin,
+                                     set_program_cache_capacity)
+    from repro.serve.costmodel import ShapeHeat
+    from repro.serve.scheduler import (CostAwareCoalescingPolicy,
+                                       DeadlinePolicy)
+
+    capacity = 4
+    sweeps = 3 if smoke else 4
+    cold_ns = (9, 17, 33, 65)           # R = 16 / 32 / 64 / 128
+    max_wait = 0.01
+    prev = set_program_cache_capacity(capacity)
+
+    def reset_cache():
+        # Bounce the capacity to evict (almost) everything, so each arm
+        # starts from the same near-empty cache; drop any leftover pins.
+        for bucket in program_cache_info()["pinned"]:
+            program_cache_unpin(tuple(bucket))
+        set_program_cache_capacity(1)
+        set_program_cache_capacity(capacity)
+
+    def drive(policy) -> dict:
+        reset_cache()
+        clock = VirtualClock()
+        batcher = ClusterBatcher(max_batch=8, policy=policy, clock=clock)
+        hot = build_graph(6, path(6))                    # bucket (8, 4)
+        uid = 0
+        info0 = program_cache_info()
+        for sweep in range(sweeps):
+            for _ in range(3):                           # hot keeps coming
+                batcher.admit(ClusterRequest(uid=uid, graph=hot,
+                                             key=jax.random.PRNGKey(uid)))
+                uid += 1
+                clock.advance(2 * max_wait)
+                batcher.poll()
+            for n in cold_ns:                            # fresh cold shapes:
+                count = 1 << sweep                       # new pow2 B per sweep
+                for _ in range(count):
+                    batcher.admit(ClusterRequest(
+                        uid=uid, graph=build_graph(n, path(n)),
+                        key=jax.random.PRNGKey(uid)))
+                    uid += 1
+                clock.advance(2 * max_wait)
+                batcher.poll()
+        batcher.flush()
+        info1 = program_cache_info()
+        return {
+            "compiles": info1["compiles"] - info0["compiles"],
+            "evictions": info1["evictions"] - info0["evictions"],
+            "pinned": [list(b) for b in info1["pinned"]],
+        }
+
+    try:
+        hinted = drive(CostAwareCoalescingPolicy(
+            8, max_wait=max_wait, steal_wait=max_wait,
+            heat=ShapeHeat(window=32, max_pinned=1, min_heat=3)))
+        for bucket in program_cache_info()["pinned"]:
+            program_cache_unpin(tuple(bucket))
+        blind = drive(DeadlinePolicy(8, max_wait=max_wait))
+    finally:
+        for bucket in program_cache_info()["pinned"]:
+            program_cache_unpin(tuple(bucket))
+        set_program_cache_capacity(prev)
+    print(f"[churn:hinted ] compiles={hinted['compiles']:3d} "
+          f"evictions={hinted['evictions']:3d} pinned={hinted['pinned']}")
+    print(f"[churn:blind  ] compiles={blind['compiles']:3d} "
+          f"evictions={blind['evictions']:3d}")
+    assert blind["evictions"] > 0, \
+        "churn never evicted — the cache is not under pressure"
+    assert hinted["compiles"] <= blind["compiles"], (
+        "hint-driven eviction must not recompile more than blind LRU "
+        f"({hinted['compiles']} vs {blind['compiles']})")
+    return {"hinted": hinted, "blind": blind, "capacity": capacity}
 
 
 def pct(x, q):
@@ -297,8 +520,16 @@ def main():
                 "--max-wait")
 
     # Starvation: the coalescing acceptance scenario (virtual clock,
-    # deterministic, asserted).
+    # deterministic, asserted) — now three-armed with the cost policy.
     starvation = starvation_comparison(args.smoke)
+
+    # Pad-hostile stream: the cost-model acceptance scenario — strictly
+    # fewer padded slots than age-only coalescing, deadline bound intact.
+    # Both cost-model scenarios are policy-independent A/Bs that build
+    # their own engines, so run them only on the --policy cost passes
+    # instead of repeating them across the whole CI smoke matrix.
+    pad_hostile = pad_hostile_comparison(args.smoke) \
+        if args.policy == "cost" else None
 
     # Executor comparison: closed-loop steady state, sync vs pipelined
     # (vs the selected executor when it is neither). The async win is the
@@ -364,6 +595,13 @@ def main():
           f"per-graph engine under the {args.policy!r} policy "
           f"({args.executor} executor)")
 
+    # Shape-churn eviction: scheduler heat hints vs blind LRU (runs last —
+    # it squeezes the global program cache, which would otherwise force
+    # recompiles into the timed passes above; cost passes only, like the
+    # pad-hostile scenario).
+    eviction_churn = eviction_churn_comparison(args.smoke) \
+        if args.policy == "cost" else None
+
     dt_full, w_full, s_full = results["full"]
     dt_dead, w_dead, s_dead = results["deadline"]
     print(f"\nsummary: deadline policy holds p99 wait at "
@@ -412,6 +650,10 @@ def main():
             "adaptive_vs_static_ratio": adaptive_ratio,
             "program_cache": program_cache_info(),
         }
+        if pad_hostile is not None:
+            payload["pad_hostile"] = pad_hostile
+        if eviction_churn is not None:
+            payload["eviction_churn"] = eviction_churn
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"wrote {args.json}")

@@ -18,6 +18,12 @@ scheduling policies of the pluggable scheduler layer
 * **Coalescing** (work-stealing): requests starving in a small shape
   bucket are promoted into a compatible larger bucket's flush, so no
   queue waits unboundedly behind a hot one.
+* **Cost-aware coalescing** (priced work-stealing): every steal is priced
+  by ``repro.serve.costmodel.FlushCostModel`` — pow2 pad inflation and
+  promoted-row waste at the bucket's observed service time, plus any
+  compile the inflated sub-batch would pay — and taken only when the wait
+  it saves covers the bill. Its ``on_retire`` also feeds bucket-shape
+  heat to the compiled-program LRU (touch/pin eviction hints).
 
 The full-bucket/deadline drives also contrast the **async executor**
 (pipelined mode): flushes are dispatched without blocking, so the engine
@@ -129,6 +135,14 @@ def main():
     drive(ClusterBatcher(max_batch=16, num_samples=2, max_wait=0.05,
                          policy="coalesce"),
           n_requests, "coalescing policy (cross-bucket work-stealing)")
+    # Priced work-stealing: same steals, but only when the wait saved
+    # covers the pad/compile cost added; plus shape-heat eviction hints
+    # to the compiled-program cache.
+    cost_batcher = ClusterBatcher(max_batch=16, num_samples=2,
+                                  max_wait=0.05, policy="cost")
+    drive(cost_batcher, n_requests,
+          "cost-aware coalescing (priced steals + eviction hints)")
+    print(f"steal pricing: {cost_batcher.policy.cost_stats()}")
 
 
 if __name__ == "__main__":

@@ -34,10 +34,15 @@ from .executor import (
     ShardedExecutor,
     SyncExecutor,
     make_executor,
+    program_cache_contains,
     program_cache_info,
+    program_cache_pin,
     program_cache_size,
+    program_cache_touch,
+    program_cache_unpin,
     set_program_cache_capacity,
 )
+from .plan import estimate_pack_stats
 from .cliques import clique_clustering, connected_components
 from .cost import (
     brute_force_opt,
@@ -75,6 +80,7 @@ __all__ = [
     "BucketBufferPool",
     "plan_graph",
     "promote_plan",
+    "estimate_pack_stats",
     "BucketExecutor",
     "SyncExecutor",
     "AsyncExecutor",
@@ -83,6 +89,10 @@ __all__ = [
     "make_executor",
     "program_cache_size",
     "program_cache_info",
+    "program_cache_contains",
+    "program_cache_touch",
+    "program_cache_pin",
+    "program_cache_unpin",
     "set_program_cache_capacity",
     "Graph",
     "build_graph",

@@ -14,9 +14,17 @@ sharding semantics-preserving.
 **The compiled-program cache** — :func:`run_bucket_program` resolves each
 ``(shape, k, kernel, donation, mesh)`` request through a bounded LRU of jit
 instances. Long-lived servers seeing many bucket shapes therefore hold at
-most :func:`program_cache_capacity` compiled programs; evictions are
-counted (:func:`program_cache_info`) instead of growing memory without
-limit.
+most :func:`program_cache_capacity` compiled programs; evictions and
+compiles are counted (:func:`program_cache_info`) instead of growing
+memory without limit. The LRU takes *hints* from layers that know more
+than the access order: :func:`program_cache_contains` is a non-mutating
+probe (the serving cost model prices the compile a candidate flush shape
+would pay), :func:`program_cache_touch` refreshes a bucket shape's recency
+and :func:`program_cache_pin` / :func:`program_cache_unpin` protect a hot
+bucket shape's programs from eviction while cold shapes churn through the
+cache (the scheduler's ``on_retire`` heat tracking drives these). Pins are
+preferences, not leaks: capacity stays a hard bound — when every resident
+program is pinned the LRU victim is evicted anyway.
 
 **Bucket executors** — the :class:`BucketExecutor` protocol decouples the
 serving layer from *how* a packed bucket reaches the device:
@@ -184,10 +192,31 @@ _DEFAULT_CACHE_CAPACITY = 256
 _program_cache: "OrderedDict[tuple, Callable]" = OrderedDict()
 _program_cache_capacity = _DEFAULT_CACHE_CAPACITY
 _program_cache_evictions = 0
+_program_cache_compiles = 0
+# Pinned (R, W) bucket shapes → pin count. Refcounted because pins are
+# process-global while pinners (engines' heat trackers) are not: two
+# engines sharing a hot shape must not have one engine's teardown strip
+# the other's eviction protection.
+_program_cache_pins: dict = {}
 
 
 def _mesh_cache_key(mesh: Optional[Mesh]):
     return None if mesh is None else tuple(d.id for d in mesh.devices.flat)
+
+
+def _program_key(shape, k: int, use_kernel: bool, donate: bool,
+                 mesh: Optional[Mesh]) -> tuple:
+    """The cache key for one compiled bucket program — single definition so
+    :func:`run_bucket_program` and the :func:`program_cache_contains` probe
+    can never disagree about identity."""
+    return (tuple(int(s) for s in shape), k, use_kernel, donate,
+            _mesh_cache_key(mesh))
+
+
+def _key_bucket(key: tuple) -> Tuple[int, int]:
+    """(R, W) bucket shape of a cache key's packed (B, R, W) shape."""
+    shape = key[0]
+    return (shape[1], shape[2])
 
 
 def _build_program(k: int, use_kernel: bool, donate: bool,
@@ -209,7 +238,14 @@ def _build_program(k: int, use_kernel: bool, donate: bool,
 def _evict_to_capacity() -> None:
     global _program_cache_evictions
     while len(_program_cache) > _program_cache_capacity:
-        _, fn = _program_cache.popitem(last=False)
+        # LRU order, skipping pinned bucket shapes; capacity is a hard
+        # bound, so when everything left is pinned the LRU loses anyway.
+        victim = next((key for key in _program_cache
+                       if _key_bucket(key) not in _program_cache_pins),
+                      None)
+        if victim is None:
+            victim = next(iter(_program_cache))
+        fn = _program_cache.pop(victim)
         _program_cache_evictions += 1
         clear = getattr(fn, "clear_cache", None)
         if clear is not None:       # drop the compiled executable eagerly
@@ -243,12 +279,69 @@ def set_program_cache_capacity(capacity: int) -> int:
     return prev
 
 
+def program_cache_contains(shape, k: int, use_kernel: bool = False,
+                           donate: bool = False,
+                           mesh: Optional[Mesh] = None) -> bool:
+    """Non-mutating probe: is this exact bucket program compiled?
+
+    Unlike a real run this never touches the LRU order, so the serving
+    cost model can price the compile a candidate (coalesced) flush shape
+    would pay without distorting the recency the eviction decision reads.
+    """
+    return _program_key(shape, k, use_kernel, donate,
+                        mesh) in _program_cache
+
+
+def program_cache_touch(bucket: Tuple[int, int]) -> int:
+    """Refresh the LRU recency of every program of one ``(R, W)`` bucket
+    shape; returns how many were touched.
+
+    The cache's own order only updates when a program *runs* — the
+    scheduler, which sees the request stream, can know a shape is about to
+    be hot again before the next run does.
+    """
+    touched = 0
+    for key in [key for key in _program_cache if _key_bucket(key) == bucket]:
+        _program_cache.move_to_end(key)
+        touched += 1
+    return touched
+
+
+def program_cache_pin(bucket: Tuple[int, int]) -> int:
+    """Protect a bucket shape's programs from eviction (scheduler heat
+    hint); returns the number currently resident. Pinning is durable —
+    programs of this shape compiled later are protected too — and is a
+    preference, not a leak: capacity remains a hard bound (see
+    :func:`set_program_cache_capacity`). Pins are *refcounted*: each
+    ``pin`` needs a matching ``unpin``, so one engine releasing its pins
+    never strips a shape another live engine still pins."""
+    bucket = (int(bucket[0]), int(bucket[1]))
+    _program_cache_pins[bucket] = _program_cache_pins.get(bucket, 0) + 1
+    return sum(1 for key in _program_cache if _key_bucket(key) == bucket)
+
+
+def program_cache_unpin(bucket: Tuple[int, int]) -> bool:
+    """Drop one reference to a bucket shape's eviction protection; True if
+    the shape was pinned (it stays protected while other pinners remain)."""
+    bucket = (int(bucket[0]), int(bucket[1]))
+    count = _program_cache_pins.get(bucket, 0)
+    if count <= 0:
+        return False
+    if count == 1:
+        del _program_cache_pins[bucket]
+    else:
+        _program_cache_pins[bucket] = count - 1
+    return True
+
+
 def program_cache_info() -> dict:
     """Cache observability for serving stats / benchmarks."""
     return {
         "size": len(_program_cache),
         "capacity": _program_cache_capacity,
         "evictions": _program_cache_evictions,
+        "compiles": _program_cache_compiles,
+        "pinned": sorted(_program_cache_pins),
     }
 
 
@@ -276,9 +369,11 @@ def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
         from repro.kernels import ops  # noqa: F401
 
     ell = jnp.asarray(ell)
-    key = (ell.shape, k, use_kernel, donate, _mesh_cache_key(mesh))
+    key = _program_key(ell.shape, k, use_kernel, donate, mesh)
     fn = _program_cache.get(key)
     if fn is None:
+        global _program_cache_compiles
+        _program_cache_compiles += 1
         fn = _build_program(k, use_kernel, donate, mesh)
         _program_cache[key] = fn
         _evict_to_capacity()
@@ -554,7 +649,7 @@ def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
     the staging lease is released before re-raising — nothing was
     dispatched, so the buffers are genuinely free.
     """
-    from .plan import PackStats, _pack_bucket
+    from .plan import _pack_bucket, estimate_pack_stats
 
     R, W = plans[0].bucket
     g_pad = executor.group_pad(len(plans))
@@ -562,7 +657,7 @@ def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
     lease = pool.acquire(b_pad, R, W) if pool is not None else None
     try:
         t_pack = time.perf_counter()
-        ell, ranks, elig, m_edges, pad_groups = _pack_bucket(
+        ell, ranks, elig, m_edges, _ = _pack_bucket(
             plans, group_keys, k=k, g_pad=g_pad,
             staging=lease.arrays if lease is not None else None)
         pack_seconds = time.perf_counter() - t_pack
@@ -575,13 +670,9 @@ def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
         if lease is not None:
             lease.release()
         raise
-    stats = PackStats(
-        n_graphs=len(plans),
-        n_entries=len(plans) * k,
-        padded_entries=pad_groups * k,
-        pad_vertex_waste=sum(R - p.n for p in plans),
-        bucket_shapes=[(R, W, b_pad)],
-    )
+    # The same pure formula the serving cost model prices candidate
+    # flushes with, so priced pads and reported pads can never drift.
+    stats = estimate_pack_stats(plans, k, g_pad=g_pad)
     return handle, stats
 
 
@@ -625,4 +716,8 @@ __all__ = [
     "program_cache_capacity",
     "set_program_cache_capacity",
     "program_cache_info",
+    "program_cache_contains",
+    "program_cache_touch",
+    "program_cache_pin",
+    "program_cache_unpin",
 ]

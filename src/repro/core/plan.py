@@ -15,7 +15,9 @@ host:
   multiple for the sharded executor).
 * :class:`PackStats` is the packer's own padding accounting — the single
   source serving stats are derived from, so they cannot drift from what was
-  actually padded onto the device.
+  actually padded onto the device. :func:`estimate_pack_stats` is the pure
+  formula behind it, shared with the serving cost model so candidate
+  flushes are priced with exactly the math the real pack will report.
 * :class:`BucketBufferPool` owns the persistent host staging arrays.
   Staging is handed out as **leases**: an acquired buffer is not eligible
   for reuse until its lease is released, which the executor layer does only
@@ -181,6 +183,41 @@ class PackStats:
         self.padded_entries += other.padded_entries
         self.pad_vertex_waste += other.pad_vertex_waste
         self.bucket_shapes.extend(other.bucket_shapes)
+
+
+def estimate_pack_stats(plans: Sequence[GraphPlan], k: int,
+                        g_pad: Optional[int] = None) -> PackStats:
+    """Price a prospective flush's padding without packing it.
+
+    A pure function over :class:`GraphPlan`\\ s — the single
+    :class:`PackStats` formula. ``pack_and_submit`` builds its real
+    accounting from it, and the serving cost model
+    (:mod:`repro.serve.costmodel`) prices *candidate* coalesced flushes
+    with it before committing, so a priced decision and the pad stats the
+    flush later reports are the same numbers by construction. For a
+    promoted (coalesced) pack, pass plans already run through
+    :func:`promote_plan` — every plan must share one bucket shape.
+
+    ``g_pad`` is the padded group count (defaults to the plain pow2
+    padding; executors may require more, e.g. a device-count floor).
+    """
+    if not plans:
+        raise ValueError("estimate_pack_stats needs at least one plan")
+    R, W = plans[0].bucket
+    if any(p.bucket != (R, W) for p in plans):
+        raise ValueError("plans must share one (R, W) bucket shape — "
+                         "promote them first")
+    if g_pad is None:
+        g_pad = next_pow2(len(plans))
+    elif g_pad < len(plans):
+        raise ValueError(f"g_pad={g_pad} < {len(plans)} graphs in bucket")
+    return PackStats(
+        n_graphs=len(plans),
+        n_entries=len(plans) * k,
+        padded_entries=(g_pad - len(plans)) * k,
+        pad_vertex_waste=sum(R - p.n for p in plans),
+        bucket_shapes=[(R, W, g_pad * k)],
+    )
 
 
 def _pack_bucket(plans: Sequence[GraphPlan],
@@ -392,6 +429,7 @@ __all__ = [
     "BucketBufferPool",
     "plan_graph",
     "promote_plan",
+    "estimate_pack_stats",
     "result_for_plan",
     "MIN_ROWS",
     "MIN_WIDTH",

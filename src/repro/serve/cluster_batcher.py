@@ -20,10 +20,15 @@ Scheduling policies (see :mod:`repro.serve.scheduler` for the full story)
   latency, replacing the static ``max_in_flight`` knob), ``'coalesce'``
   (work-stealing: starving smaller-bucket requests are promoted into a
   compatible larger bucket's flush via
-  :func:`repro.core.plan.promote_plan`), any
+  :func:`repro.core.plan.promote_plan`), ``'cost'`` (coalescing with each
+  steal priced by :class:`~repro.serve.costmodel.FlushCostModel` — taken
+  only when the wait it saves covers the pad/compile cost it adds — plus
+  shape-heat eviction hints to the compiled-program LRU), any
   :class:`~repro.serve.scheduler.SchedulerPolicy` instance, or ``None`` —
   which reproduces the historical behaviour from ``max_wait`` /
-  ``max_in_flight`` alone.
+  ``max_in_flight`` alone. A policy *instance* carries its own knobs:
+  combining one with ``max_wait``/``max_in_flight`` raises ``ValueError``
+  instead of silently ignoring the knobs.
 
 Executor injection (how a flush reaches the device)
   ``ClusterBatcher(executor=...)`` takes ``'sync'`` (block per flush — the
@@ -151,9 +156,11 @@ class ClusterBatcher:
         :class:`AdmissionRejected` at the bound. ``None`` disables
         backpressure (one-shot / offline driving).
       policy: scheduling policy name (``'full'``/``'deadline'``/
-        ``'adaptive'``/``'coalesce'``) or
+        ``'adaptive'``/``'coalesce'``/``'cost'``) or
         :class:`~repro.serve.scheduler.SchedulerPolicy` instance; ``None``
         derives the historical behaviour from ``max_wait``/``max_in_flight``.
+        An instance must carry its own ``max_wait``/``max_in_flight`` —
+        passing those knobs alongside one raises ``ValueError``.
     """
 
     def __init__(self, max_batch: int = 64, method: str = "pivot",
@@ -185,6 +192,13 @@ class ClusterBatcher:
         self.policy = make_policy(policy, max_batch=max_batch,
                                   max_wait=max_wait,
                                   max_in_flight=max_in_flight)
+        # Policies that price decisions (the cost-aware coalescer) need the
+        # engine's execution profile — group padding rule, best-of-k count,
+        # compiled-program signature. Optional structural hook.
+        bind = getattr(self.policy, "bind_engine", None)
+        if bind is not None:
+            bind(executor=self.executor, num_samples=self.num_samples,
+                 use_kernel=self.use_kernel, donate=self.pool.donate)
         self.buckets: Dict[Tuple[int, int], List[ClusterRequest]] = {}
         self._bucket_keys_seen: set = set()
         self._retired: Deque[ClusterRequest] = deque()
@@ -203,6 +217,11 @@ class ClusterBatcher:
         admission window is full (:class:`AdmissionRejected`, counted in
         ``stats.rejected``). A request the engine cannot take fails at
         admission, not inside a later batched flush.
+
+        The leading harvest here raises immediately (unlike ``poll``'s,
+        which defers): it runs *before* the request is queued, so the
+        caller can safely retry the same ``admit`` — deferring would
+        admit the request and then raise, inviting a double admission.
         """
         self._harvest()
         now = self.clock() if now is None else now
@@ -227,11 +246,33 @@ class ClusterBatcher:
     def flush(self) -> List[ClusterRequest]:
         """Drain every bucket (end of stream), full or partial, and block
         for all in-flight work. End-of-stream draining is mechanics, not
-        policy — every queue flushes at its native shape."""
+        policy — every queue flushes at its native shape.
+
+        Errors are deferred until every bucket has been drained (same
+        discipline as the policy tick): one bad flush — a failed harvest
+        of an earlier dispatch *or* a pack/submit failure of one bucket —
+        must not strand the remaining queues undispatched or leave work
+        computing unharvested. The first error is re-raised after the
+        blocking harvest; the failed flush's requests are requeued, so a
+        retrying caller loses nothing.
+        """
+        first_err: Optional[BaseException] = None
         for bucket in list(self.buckets):
-            self._execute(FlushDecision(bucket=bucket,
-                                        count=len(self.buckets[bucket])))
-        self._harvest(block=True)
+            try:
+                err = self._execute(
+                    FlushDecision(bucket=bucket,
+                                  count=len(self.buckets[bucket])))
+            except Exception as dispatch_err:
+                # Pack/submit failed; _execute already requeued the popped
+                # requests (this bucket will be retried by a later flush).
+                err = dispatch_err
+            first_err = first_err or err
+        # Always block for the in-flight work, even on an earlier error —
+        # flush()'s contract is that nothing is left computing.
+        harvest_err = self._harvest(block=True, defer=True)
+        first_err = first_err or harvest_err
+        if first_err is not None:
+            raise first_err
         return self.retire()
 
     def retire(self) -> List[ClusterRequest]:
@@ -247,16 +288,31 @@ class ClusterBatcher:
         return sum(len(v) for v in self.buckets.values()) \
             + self._in_flight_reqs
 
+    def close(self) -> None:
+        """Release engine resources held in process-global state — today
+        that is the cost policy's program-cache pins (``ShapeHeat`` also
+        backstops this from ``__del__``, but a long-lived process swapping
+        engines should release deterministically). Idempotent; the engine
+        remains usable for draining afterwards."""
+        release = getattr(self.policy, "release", None)
+        if release is not None:
+            release()
+
     # -- Policy driving ----------------------------------------------------
 
     def poll(self, now: Optional[float] = None) -> List[ClusterRequest]:
         """Give the policy a time tick: harvest completed flushes, let the
         policy flush whatever its schedule says is due (overdue deadline
         buckets, coalesced steals, ...), and return the retired requests.
+
+        The tick's leading harvest defers its errors like the mid-tick
+        ones: a failed earlier flush surfacing here must not stop the due
+        decisions from dispatching (its requests are requeued first, so
+        the policy already sees them back in their buckets).
         """
         now = self.clock() if now is None else now
-        self._harvest()
-        self._run_policy(now)
+        first_err = self._harvest(defer=True)
+        self._run_policy(now, pending_err=first_err)
         return self.retire()
 
     def oldest_wait(self, now: Optional[float] = None) -> float:
@@ -318,11 +374,32 @@ class ClusterBatcher:
         telemetry.in_flight = self.executor.in_flight
         return telemetry
 
-    def _run_policy(self, now: float) -> None:
-        """Ask the policy what to flush and execute each decision."""
+    def _run_policy(self, now: float,
+                    pending_err: Optional[BaseException] = None) -> None:
+        """Ask the policy what to flush and execute each decision.
+
+        Every decision executes before any harvest error surfaces: a
+        failed *earlier* flush harvested opportunistically mid-tick must
+        not silently drop the remaining decisions (a due deadline flush
+        would be skipped past its budget — the regression in
+        ``tests/test_scheduler.py::test_harvest_error_does_not_drop_
+        remaining_decisions``). Dispatch (pack/submit) failures of one
+        decision are contained the same way — the popped requests are
+        already requeued, the rest of the schedule still runs.
+        ``pending_err`` lets a caller's leading harvest join the same
+        discipline (``poll``); the first error is re-raised once the
+        tick's schedule has been fully dispatched.
+        """
+        first_err = pending_err
         for decision in self.policy.select_flushes(self.buckets, now,
                                                    self._telemetry()):
-            self._execute(decision)
+            try:
+                err = self._execute(decision)
+            except Exception as dispatch_err:
+                err = dispatch_err
+            first_err = first_err or err
+        if first_err is not None:
+            raise first_err
 
     def _take(self, bucket: Tuple[int, int],
               count: int) -> List[ClusterRequest]:
@@ -347,17 +424,24 @@ class ClusterBatcher:
         for bucket, rs in by_bucket.items():
             self.buckets[bucket] = rs + self.buckets.get(bucket, [])
 
-    def _execute(self, decision: FlushDecision) -> None:
+    def _execute(self,
+                 decision: FlushDecision) -> Optional[BaseException]:
         """Carry out one policy decision: pop the requests it names
         (including steals from smaller buckets), promote plans to the
-        decision's ``(R, W)`` shape, pack, and hand to the executor."""
+        decision's ``(R, W)`` shape, pack, and hand to the executor.
+
+        Packing/dispatch errors raise (nothing was dispatched, the popped
+        requests are requeued); errors from the opportunistic trailing
+        harvest — they belong to a *previous* flush — are returned instead
+        of raised, so the caller can finish its tick before surfacing them.
+        """
         reqs = self._take(decision.bucket, decision.count)
         stolen: List[ClusterRequest] = []
         for src, cnt in decision.steal:
             stolen.extend(self._take(src, cnt))
         all_reqs = reqs + stolen
         if not all_reqs:
-            return
+            return None
         k = self.num_samples
         R, W = decision.bucket
         # Promotion is a no-op for native requests; for stolen ones it
@@ -386,9 +470,10 @@ class ClusterBatcher:
         self.stats.pad_vertex_waste += pack.pad_vertex_waste
         self.stats.in_flight_peak = max(self.stats.in_flight_peak,
                                         self.executor.in_flight)
-        self._harvest()
+        return self._harvest(defer=True)
 
-    def _harvest(self, block: bool = False) -> None:
+    def _harvest(self, block: bool = False,
+                 defer: bool = False) -> Optional[BaseException]:
         """Collect completed flushes from the executor into the retired
         queue (``block=True`` waits for everything in flight).
 
@@ -397,8 +482,11 @@ class ClusterBatcher:
         — ahead of newer arrivals, preserving deadline age order — and the
         first such error is re-raised after every other handle has been
         processed, so one bad flush can neither lose requests nor strand
-        the handles behind it. Successful harvests record the flush's
-        wall/pack latency into ``stats.latency`` and notify the policy.
+        the handles behind it. With ``defer=True`` the first error is
+        *returned* instead of raised — mid-tick callers (``_execute``,
+        ``flush``) finish dispatching their remaining decisions before
+        surfacing it. Successful harvests record the flush's wall/pack
+        latency into ``stats.latency`` and notify the policy.
         """
         handles = self.executor.drain() if block else self.executor.retire()
         first_err: Optional[BaseException] = None
@@ -429,8 +517,11 @@ class ClusterBatcher:
                                           handle.pack_seconds,
                                           depth=handle.inflight_at_submit)
                 self.policy.on_retire(bucket, self.stats.latency)
+        if defer:
+            return first_err
         if first_err is not None:
             raise first_err
+        return None
 
     # -- Back-compat aliases (pre-engine API) ------------------------------
 

@@ -36,6 +36,20 @@ every *decision* to a :class:`SchedulerPolicy`:
   small ``(R, W)`` memory budget trivially fits a larger one, and the
   clustering of each packed entry is independent of its neighbours in the
   batch (which is also why promotion is bit-exact).
+* :class:`CostAwareCoalescingPolicy` — coalescing with the steal *priced*
+  (:class:`~repro.serve.costmodel.FlushCostModel`): a steal is taken only
+  when the deadline slack it saves covers the pow2 pad inflation, the
+  promoted-row waste and any compile the inflated batch axis would pay —
+  otherwise it is trimmed to the slots that ride existing padding for
+  free. Its ``on_retire`` additionally feeds bucket-shape heat
+  (:class:`~repro.serve.costmodel.ShapeHeat`) to the compiled-program
+  LRU's ``touch``/``pin`` surface, so hot shapes outlive cold-shape
+  churn. MPC analogue: the paper's per-machine O(n^δ) budget accounting —
+  Cohen-Addad et al. and Behnezhad et al. get their constant round counts
+  precisely by pricing what each round carries; migrating an item into a
+  round is only sound when it does not blow the budget the round was
+  priced at. Cost only ever decides *whether* a steal happens, never what
+  a flush computes, so the bit-exactness contract is untouched.
 
 Policies see three read-only inputs: the bucket queues (admission-ordered
 request lists), the engine clock's ``now``, and a :class:`FlushTelemetry`
@@ -71,8 +85,10 @@ class FlushDecision:
     ``steal`` names extra ``(source_bucket, count)`` groups to promote into
     the same flush (their plans are re-targeted at ``bucket`` via
     :func:`repro.core.plan.promote_plan` — every source must satisfy
-    ``R' ≤ R and W' ≤ W``). ``deadline`` marks the flush as forced by a
-    wait budget, for stats accounting only.
+    ``R' ≤ R and W' ≤ W``). The batcher pops stolen requests from the
+    *front* of each source queue, so a steal always names that queue's
+    oldest unconsumed requests. ``deadline`` marks the flush as forced by
+    a wait budget, for stats accounting only.
     """
 
     bucket: BucketKey
@@ -168,14 +184,19 @@ class FlushTelemetry:
 
         Keys are ``"RxW"`` strings; values carry flush counts, wall p50/p99,
         pack p50/p99 and the wall EWMA — the fields the benchmarks emit so
-        scheduling quality is tracked across PRs.
+        scheduling quality is tracked across PRs. Counts are explicit about
+        scope: ``flushes_total`` is the lifetime count for the bucket shape
+        while ``window_samples`` is the number of retained samples the
+        percentiles are computed over (at most ``window``) — a long-lived
+        bucket's percentiles describe its recent flushes, not its lifetime.
         """
         out: Dict[str, dict] = {}
         for (R, W), rec in sorted(self._per_bucket.items()):
             wall = np.asarray(rec["wall"], dtype=np.float64)
             pack = np.asarray(rec["pack"], dtype=np.float64)
             out[f"{R}x{W}"] = {
-                "flushes": rec["count"],
+                "flushes_total": rec["count"],
+                "window_samples": int(len(wall)),
                 "wall_p50_ms": float(np.percentile(wall, 50)) * 1e3,
                 "wall_p99_ms": float(np.percentile(wall, 99)) * 1e3,
                 "pack_p50_ms": float(np.percentile(pack, 50)) * 1e3,
@@ -406,7 +427,137 @@ class CoalescingPolicy(DeadlinePolicy):
         return out
 
 
-POLICY_NAMES = ("full", "deadline", "adaptive", "coalesce")
+class CostAwareCoalescingPolicy(CoalescingPolicy):
+    """Coalescing with every steal priced by a :class:`FlushCostModel`.
+
+    The age-only parent steals whenever a starving compatible bucket
+    exists and the flush has room — even when promoting the stragglers
+    inflates the pow2 sub-batch (empty device entries), pads every stolen
+    row to a larger ``R``, or lands on a batch-axis shape whose program
+    was never compiled. This subclass asks the cost model whether the
+    deadline slack the steal saves covers that bill, and otherwise trims
+    the steal to the prefix that rides existing padding for free
+    (``group_pad(count) − count`` slots cost nothing). A rejected
+    candidate is never stranded: its own ``max_wait`` deadline still
+    fires, so the coalesce latency bound survives every rejection.
+
+    When telemetry is cold the model abstains and the policy degrades to
+    plain age-only coalescing — a cold engine is never throttled by a
+    guess (the same discipline as :class:`AdaptivePolicy`).
+
+    ``on_retire`` additionally feeds bucket-shape heat
+    (:class:`~repro.serve.costmodel.ShapeHeat`) to the compiled-program
+    LRU's ``touch``/``pin`` surface: the scheduler sees the retire stream,
+    so it knows which shapes keep coming back long before the cache's own
+    access order does — hot shapes outlive a churn of one-off cold shapes.
+
+    Counters (``steals_accepted`` / ``steals_rejected`` /
+    ``pad_entries_avoided``) are the policy's own observability surface,
+    emitted by the benchmarks.
+    """
+
+    name = "cost"
+
+    def __init__(self, max_batch: int, max_wait: Optional[float] = None,
+                 max_in_flight: Optional[int] = None,
+                 steal_wait: Optional[float] = None,
+                 cost_model=None, heat=None):
+        from .costmodel import FlushCostModel, ShapeHeat
+
+        super().__init__(max_batch, max_wait=max_wait,
+                         max_in_flight=max_in_flight, steal_wait=steal_wait)
+        self.cost_model = cost_model if cost_model is not None \
+            else FlushCostModel()
+        self.heat = heat if heat is not None else ShapeHeat()
+        self.steals_accepted = 0
+        self.steals_rejected = 0
+        self.pad_entries_avoided = 0
+
+    def bind_engine(self, **kwargs) -> None:
+        """Forwarded by the batcher at construction so pricing matches the
+        engine's real execution profile (group padding, k, program sig)."""
+        self.cost_model.bind_engine(**kwargs)
+
+    def cost_stats(self) -> Dict[str, int]:
+        """JSON-ready counters for benchmarks."""
+        return {
+            "steals_accepted": self.steals_accepted,
+            "steals_rejected": self.steals_rejected,
+            "pad_entries_avoided": self.pad_entries_avoided,
+        }
+
+    def select_flushes(self, queues, now, telemetry) -> List[FlushDecision]:
+        base = super().select_flushes(queues, now, telemetry)
+        # The parent plans steals assuming every earlier one executes, but
+        # the batcher pops stolen requests from each source queue's
+        # *front* — so once this policy trims a steal, later steals from
+        # the same queue shift toward older entries at execution. Price
+        # each steal group against the entries that will actually be
+        # popped: native consumption (the parent's opening assumption)
+        # plus the steals *kept* so far this tick.
+        native: Dict[BucketKey, int] = {}
+        for d in base:
+            native[d.bucket] = native.get(d.bucket, 0) + d.count
+        kept_from: Dict[BucketKey, int] = {}
+        out: List[FlushDecision] = []
+        for d in base:
+            if not d.steal:
+                out.append(d)
+                continue
+            flat: List[Tuple[BucketKey, float]] = []
+            for src, cnt in d.steal:
+                start = native.get(src, 0) + kept_from.get(src, 0)
+                flat.extend((src, now - q.admitted_at)
+                            for q in queues[src][start:start + cnt])
+            keep = self._evaluate(d.bucket, d.count, flat, telemetry)
+            self.steals_accepted += keep
+            self.steals_rejected += len(flat) - keep
+            # Keep the accepted prefix (most-starved first, the order the
+            # parent built the steal list in), tracking kept counts per
+            # source so later decisions re-anchor correctly.
+            steals: List[Tuple[BucketKey, int]] = []
+            kept = 0
+            for src, cnt in d.steal:
+                take = min(cnt, keep - kept)
+                if take <= 0:
+                    break
+                steals.append((src, take))
+                kept_from[src] = kept_from.get(src, 0) + take
+                kept += take
+            out.append(d if keep == len(flat)
+                       else dataclasses.replace(d, steal=tuple(steals)))
+        return out
+
+    def release(self) -> None:
+        """Drop this policy's program-cache pins (engine teardown)."""
+        self.heat.release()
+
+    def _evaluate(self, bucket, count, flat, telemetry) -> int:
+        """How many of the candidate steals (a most-starved-first list of
+        ``(source_bucket, age)``) to keep: the full set when it prices out,
+        else the free prefix when *that* prices out, else none."""
+        full = self.cost_model.price_steal(bucket, count, flat,
+                                           self.max_wait, telemetry)
+        if full.accepts(self.cost_model.hurdle):
+            return len(flat)
+        self.pad_entries_avoided += max(0, full.pad_entries_added)
+        # Slots inside the already-padded group count are free of pow2
+        # inflation; re-price just that prefix (promoted-row waste can
+        # still reject it).
+        free = max(0, self.cost_model.group_pad(count) - count)
+        if free > 0 and free < len(flat):
+            partial = self.cost_model.price_steal(bucket, count, flat[:free],
+                                                  self.max_wait, telemetry)
+            if partial.accepts(self.cost_model.hurdle):
+                return free
+        return 0
+
+    def on_retire(self, bucket, telemetry) -> None:
+        super().on_retire(bucket, telemetry)
+        self.heat.on_retire(bucket)
+
+
+POLICY_NAMES = ("full", "deadline", "adaptive", "coalesce", "cost")
 
 
 def make_policy(spec=None, *, max_batch: int,
@@ -419,6 +570,11 @@ def make_policy(spec=None, *, max_batch: int,
     the static ``max_in_flight`` admission bound. ``'adaptive'`` uses
     ``max_in_flight`` (when given) as its ``max_window`` cap, since the
     dynamic window replaces the static knob.
+
+    A :class:`SchedulerPolicy` *instance* carries its own knobs, so
+    passing ``max_wait`` / ``max_in_flight`` alongside one is a conflict
+    the instance would silently win — that raises ``ValueError`` instead
+    (set the knobs on the policy itself).
     """
     if spec is None:
         spec = "deadline" if max_wait is not None else "full"
@@ -435,18 +591,29 @@ def make_policy(spec=None, *, max_batch: int,
             kwargs = {} if max_in_flight is None \
                 else {"max_window": max_in_flight}
             return AdaptivePolicy(max_batch, max_wait=max_wait, **kwargs)
-        if spec == "coalesce":
+        if spec in ("coalesce", "cost"):
             if max_wait is None:
                 raise ValueError(
-                    "policy='coalesce' needs max_wait: steals only ride "
+                    f"policy={spec!r} needs max_wait: steals only ride "
                     "flushes with spare room, and without a deadline every "
                     "flush is full — the policy would silently act like "
                     "'full'")
-            return CoalescingPolicy(max_batch, max_wait=max_wait,
-                                    max_in_flight=max_in_flight)
+            cls = CoalescingPolicy if spec == "coalesce" \
+                else CostAwareCoalescingPolicy
+            return cls(max_batch, max_wait=max_wait,
+                       max_in_flight=max_in_flight)
         raise ValueError(f"unknown scheduling policy {spec!r}; expected one "
                          f"of {sorted(POLICY_NAMES)}")
     if isinstance(spec, SchedulerPolicy):
+        conflicts = [name for name, val in
+                     (("max_wait", max_wait), ("max_in_flight", max_in_flight))
+                     if val is not None]
+        if conflicts:
+            raise ValueError(
+                f"policy instance {type(spec).__name__} carries its own "
+                f"schedule knobs; also passing {' and '.join(conflicts)} "
+                "is a conflict the instance would silently ignore — set "
+                "them on the policy itself")
         return spec
     raise TypeError(f"policy must be a name or SchedulerPolicy, "
                     f"got {type(spec).__name__}")
@@ -461,6 +628,7 @@ __all__ = [
     "DeadlinePolicy",
     "AdaptivePolicy",
     "CoalescingPolicy",
+    "CostAwareCoalescingPolicy",
     "POLICY_NAMES",
     "make_policy",
 ]

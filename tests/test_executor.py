@@ -11,8 +11,11 @@ serve/cluster_batcher.py):
   fetched (the async-overlap regression);
 * ``max_in_flight`` admission backpressure rejects at admit time and
   counts the rejection;
-* the compiled-program cache is a bounded LRU with an eviction counter,
-  and eviction only costs a recompile, never correctness;
+* the compiled-program cache is a bounded LRU with eviction/compile
+  counters, and eviction only costs a recompile, never correctness; its
+  hint surface (``contains`` probe, ``touch`` recency refresh,
+  ``pin``/``unpin`` protection) never mutates order on probes and never
+  lets pins defeat the hard capacity bound;
 * the sharded executor raises group padding to its device count (8-device
   proof runs in a subprocess, mirroring tests/test_dist.py).
 """
@@ -41,6 +44,7 @@ from repro.core import (
 )
 from repro.core import executor as exec_mod
 from repro.core.api import sample_keys
+from repro.core.executor import run_bucket_program
 from repro.core.graph import path, random_arboric
 from repro.core.plan import _pack_bucket
 from repro.serve.cluster_batcher import (
@@ -327,6 +331,105 @@ def test_program_cache_capacity_validation():
         exec_mod.set_program_cache_capacity(0)
     info = exec_mod.program_cache_info()
     assert info["size"] <= info["capacity"]
+
+
+def _run_dummy(R, W, B=1, k=1, donate=False):
+    """Compile/run one tiny bucket program of shape (B, R, W)."""
+    ell = np.full((B, R, W), R, dtype=np.int32)
+    ranks = np.full((B, R + 1), np.iinfo(np.int32).max, dtype=np.int32)
+    elig = np.zeros((B, R + 1), dtype=bool)
+    m = np.zeros((B,), dtype=np.int32)
+    jax.block_until_ready(run_bucket_program(ell, ranks, elig, m, k=k,
+                                             donate=donate))
+
+
+def test_program_cache_contains_probe_is_non_mutating():
+    prev = exec_mod.set_program_cache_capacity(2)
+    try:
+        _run_dummy(8, 4)        # key A (the LRU after B runs)
+        _run_dummy(16, 4)       # key B
+        assert exec_mod.program_cache_contains((1, 8, 4), 1)
+        assert exec_mod.program_cache_contains((1, 16, 4), 1)
+        # Different signature, same shape: not resident.
+        assert not exec_mod.program_cache_contains((1, 8, 4), 2)
+        assert not exec_mod.program_cache_contains((2, 8, 4), 1)
+        # Probing A must NOT refresh it: a third shape evicts A (the true
+        # LRU), which a mutating probe would have protected.
+        assert exec_mod.program_cache_contains((1, 8, 4), 1)
+        _run_dummy(32, 4)       # key C → evicts A
+        assert not exec_mod.program_cache_contains((1, 8, 4), 1)
+        assert exec_mod.program_cache_contains((1, 16, 4), 1)
+    finally:
+        exec_mod.set_program_cache_capacity(prev)
+
+
+def test_program_cache_touch_refreshes_recency():
+    prev = exec_mod.set_program_cache_capacity(2)
+    try:
+        _run_dummy(8, 4)
+        _run_dummy(16, 4)
+        # Touch the LRU shape: the next insert must evict the other one.
+        assert exec_mod.program_cache_touch((8, 4)) >= 1
+        assert exec_mod.program_cache_touch((64, 64)) == 0   # no-op miss
+        _run_dummy(32, 4)
+        assert exec_mod.program_cache_contains((1, 8, 4), 1)
+        assert not exec_mod.program_cache_contains((1, 16, 4), 1)
+    finally:
+        exec_mod.set_program_cache_capacity(prev)
+
+
+def test_program_cache_pin_protects_until_unpin_with_hard_capacity():
+    prev = exec_mod.set_program_cache_capacity(2)
+    try:
+        _run_dummy(8, 4)
+        assert exec_mod.program_cache_pin((8, 4)) >= 1
+        assert (8, 4) in exec_mod.program_cache_info()["pinned"]
+        # Churn: two fresh shapes; the pinned LRU survives both inserts.
+        _run_dummy(16, 4)
+        _run_dummy(32, 4)
+        assert exec_mod.program_cache_contains((1, 8, 4), 1)
+        assert exec_mod.program_cache_info()["size"] <= 2
+        # Unpinned, the same churn evicts it.
+        assert exec_mod.program_cache_unpin((8, 4))
+        assert not exec_mod.program_cache_unpin((8, 4))      # idempotent
+        _run_dummy(16, 4)
+        _run_dummy(32, 4)
+        assert not exec_mod.program_cache_contains((1, 8, 4), 1)
+        # Pins are preferences, capacity is the law: with every resident
+        # shape pinned, inserts still evict (hard bound, no growth).
+        for bucket in [(16, 4), (32, 4), (64, 4)]:
+            exec_mod.program_cache_pin(bucket)
+        _run_dummy(64, 4)
+        assert exec_mod.program_cache_info()["size"] <= 2
+    finally:
+        for bucket in list(exec_mod.program_cache_info()["pinned"]):
+            exec_mod.program_cache_unpin(tuple(bucket))
+        exec_mod.set_program_cache_capacity(prev)
+
+
+def test_program_cache_pin_is_refcounted():
+    """Pins are process-global while pinners are per-engine: each pin
+    needs a matching unpin, and a shape stays protected while any pinner
+    remains."""
+    try:
+        exec_mod.program_cache_pin((8, 4))
+        exec_mod.program_cache_pin((8, 4))      # second pinner
+        assert exec_mod.program_cache_unpin((8, 4))
+        assert (8, 4) in exec_mod.program_cache_info()["pinned"]
+        assert exec_mod.program_cache_unpin((8, 4))
+        assert (8, 4) not in exec_mod.program_cache_info()["pinned"]
+        assert not exec_mod.program_cache_unpin((8, 4))
+    finally:
+        while exec_mod.program_cache_unpin((8, 4)):
+            pass
+
+
+def test_program_cache_counts_compiles():
+    info0 = exec_mod.program_cache_info()
+    _run_dummy(8, 8)            # width-8 shape: unused elsewhere
+    _run_dummy(8, 8)            # cache hit — no second compile
+    info1 = exec_mod.program_cache_info()
+    assert info1["compiles"] == info0["compiles"] + 1
 
 
 # ---------------------------------------------------------------------------

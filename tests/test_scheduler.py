@@ -30,6 +30,7 @@ from repro.core import (
     BucketBufferPool,
     build_graph,
     correlation_cluster,
+    estimate_pack_stats,
     plan_graph,
     promote_plan,
 )
@@ -41,9 +42,11 @@ from repro.serve.cluster_batcher import (
     ClusterRequest,
 )
 from repro.serve.engine import serve_all
+from repro.serve.costmodel import FlushCostModel, ShapeHeat
 from repro.serve.scheduler import (
     AdaptivePolicy,
     CoalescingPolicy,
+    CostAwareCoalescingPolicy,
     DeadlinePolicy,
     FlushDecision,
     FlushTelemetry,
@@ -57,6 +60,18 @@ from repro.util import VirtualClock
 def _rand_graph(n, lam, seed):
     edges, _ = random_arboric(n, lam, np.random.default_rng(seed))
     return build_graph(n, edges)
+
+
+@pytest.fixture(autouse=True)
+def _unpin_program_cache():
+    """Cost-policy heat tracking pins bucket shapes in the *global*
+    program cache; never let pins leak between tests."""
+    yield
+    from repro.core.executor import program_cache_info, program_cache_unpin
+
+    for bucket in program_cache_info()["pinned"]:
+        while program_cache_unpin(tuple(bucket)):   # drain all refs
+            pass
 
 
 def _assert_matches(g, key, res_batch, **kwargs):
@@ -177,6 +192,7 @@ def test_make_policy_resolution_and_validation():
                        max_in_flight=3).max_window == 3
     assert make_policy("coalesce", max_batch=4,
                        max_wait=1.0).steal_wait == 0.5
+    assert make_policy("cost", max_batch=4, max_wait=1.0).name == "cost"
     pol = CoalescingPolicy(max_batch=2)
     assert pol.steal_wait == 0.0    # direct construction: steal when room
     assert make_policy(pol, max_batch=99) is pol
@@ -184,8 +200,11 @@ def test_make_policy_resolution_and_validation():
     # silently degenerate to full-bucket (full flushes have no steal room).
     with pytest.raises(ValueError, match="coalesce.*max_wait|max_wait"):
         make_policy("coalesce", max_batch=4)
+    with pytest.raises(ValueError, match="max_wait"):
+        make_policy("cost", max_batch=4)
     for impl in (FullBucketPolicy(2), DeadlinePolicy(2, 0.1),
-                 AdaptivePolicy(2), CoalescingPolicy(2)):
+                 AdaptivePolicy(2), CoalescingPolicy(2),
+                 CostAwareCoalescingPolicy(2)):
         assert isinstance(impl, SchedulerPolicy)
     with pytest.raises(ValueError, match="max_wait"):
         make_policy("deadline", max_batch=4)
@@ -197,6 +216,34 @@ def test_make_policy_resolution_and_validation():
         AdaptivePolicy(4, min_window=0)
     with pytest.raises(ValueError, match="steal_wait"):
         CoalescingPolicy(4, steal_wait=-1.0)
+
+
+def test_make_policy_rejects_knobs_conflicting_with_instance():
+    """A policy instance carries its own max_wait/max_in_flight; silently
+    ignoring the engine-level knobs (the old behaviour) hid real
+    misconfigurations — ClusterBatcher(policy=AdaptivePolicy(...),
+    max_wait=0.05) got no deadline and no error."""
+    pol = AdaptivePolicy(4, max_wait=0.2)
+    with pytest.raises(ValueError, match="max_wait"):
+        make_policy(pol, max_batch=4, max_wait=0.05)
+    with pytest.raises(ValueError, match="max_in_flight"):
+        make_policy(DeadlinePolicy(4, 0.1), max_batch=4, max_in_flight=2)
+    with pytest.raises(ValueError, match="max_wait and max_in_flight"):
+        make_policy(pol, max_batch=4, max_wait=0.05, max_in_flight=2)
+    # Clean pass-through: knobs on the instance itself are fine.
+    assert make_policy(pol, max_batch=4) is pol
+    # The batcher-level surface: conflict raises, instance-only works and
+    # the instance's own deadline actually drives the engine.
+    with pytest.raises(ValueError, match="max_wait"):
+        ClusterBatcher(max_batch=4, policy=AdaptivePolicy(4, max_wait=0.2),
+                       max_wait=0.05)
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=4, clock=clock,
+                             policy=DeadlinePolicy(4, max_wait=0.1))
+    batcher.admit(ClusterRequest(uid=0, graph=build_graph(6, path(6)),
+                                 key=jax.random.PRNGKey(0)))
+    clock.advance(0.2)
+    assert {r.uid for r in batcher.poll()} == {0}   # the deadline fired
 
 
 # ---------------------------------------------------------------------------
@@ -220,13 +267,18 @@ def test_promote_plan_validates_and_is_identity_at_native_shape():
 
 
 @pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("policy", ["coalesce", "cost"])
 @pytest.mark.parametrize("executor", ["sync", "async", "sharded"])
-def test_coalesced_flush_promotes_and_stays_bit_exact(executor, use_kernel):
+def test_coalesced_flush_promotes_and_stays_bit_exact(executor, policy,
+                                                      use_kernel):
     """Hot bucket goes overdue below capacity; the younger starving cold
     request is stolen into its deadline flush at a promoted (R, W) shape,
-    and every result matches the per-graph engine bit-exactly."""
+    and every result matches the per-graph engine bit-exactly. The cost
+    policy takes the same steal here (cold telemetry → it degrades to
+    age-only coalescing), so both stealing policies run the promoted
+    path under every executor and kernel."""
     clock = VirtualClock()
-    batcher = ClusterBatcher(max_batch=8, policy="coalesce", max_wait=0.1,
+    batcher = ClusterBatcher(max_batch=8, policy=policy, max_wait=0.1,
                              clock=clock, executor=executor,
                              use_kernel=use_kernel, num_samples=2)
     hot = [build_graph(n, path(n)) for n in (17, 20, 24)]   # bucket (32, 4)
@@ -286,6 +338,494 @@ def test_coalescing_full_flush_steals_when_room_remains():
 
 
 # ---------------------------------------------------------------------------
+# Cost model: pricing arithmetic, abstention, cost-aware steal decisions.
+# ---------------------------------------------------------------------------
+
+
+def _warm_telemetry(bucket=(32, 4), wall_s=0.08, pack_s=0.001):
+    tele = FlushTelemetry(alpha=1.0)    # alpha=1: EWMA = last sample
+    tele.record(bucket, wall_s=wall_s, pack_s=pack_s)
+    return tele
+
+
+def test_cost_model_abstains_cold_and_prices_warm():
+    model = FlushCostModel()
+    cold = FlushTelemetry()
+    # Cold telemetry, no floor: the model abstains — callers degrade to
+    # plain age-only coalescing.
+    cost = model.price_steal((32, 4), 8, [((8, 4), 0.01)], 0.1, cold)
+    assert not cost.priced and cost.accepts()
+    # With a floor the same cold engine *can* price (a pessimistic prior).
+    floored = FlushCostModel(service_floor_s=0.05)
+    cost = floored.price_steal((32, 4), 8, [((8, 4), 0.01)], 0.1, cold)
+    assert cost.priced
+    # Warm pricing at a pow2 boundary: count 8 + 1 steal doubles g_pad, so
+    # the marginal pad entries are (16 − 8) − 1 = 7, priced at the per-entry
+    # service time 80ms/8 — far above the 10ms of slack the steal saves.
+    tele = _warm_telemetry(wall_s=0.08)
+    cost = model.price_steal((32, 4), 8, [((8, 4), 0.09)], 0.1, tele)
+    assert cost.pad_entries_added == 7
+    assert cost.vertex_waste_added == 32 - 8
+    assert cost.benefit_s == pytest.approx(0.1 - 0.09)
+    assert cost.pad_cost_s > 0.06       # ≥ 7 · 10ms of pad alone
+    assert not cost.accepts()
+    # Riding existing padding is (nearly) free: count 5 + 3 steals stays at
+    # g_pad 8 — no pad entries added, only the promoted-row fraction.
+    cost = model.price_steal((32, 4), 5, [((8, 4), 0.02)] * 3, 0.1, tele)
+    assert cost.pad_entries_added == -3
+    assert cost.pad_cost_s == pytest.approx(
+        3 * (32 - 8) / 32 * 0.08 / 8)
+    assert cost.accepts()               # 3 × 80ms slack ≫ 22.5ms
+
+
+def test_cost_model_hurdle_and_validation():
+    tele = _warm_telemetry(wall_s=0.08)
+    # benefit 60ms vs cost ≈ 22.5ms: accepted at hurdle 1, rejected at 10.
+    free = [((8, 4), 0.04)] * 3
+    assert FlushCostModel().price_steal((32, 4), 5, free, 0.1,
+                                        tele).accepts(1.0)
+    assert not FlushCostModel().price_steal((32, 4), 5, free, 0.1,
+                                            tele).accepts(10.0)
+    with pytest.raises(ValueError, match="hurdle"):
+        FlushCostModel(hurdle=0.0)
+    with pytest.raises(ValueError, match=">= 0"):
+        FlushCostModel(compile_cost_s=-1.0)
+    with pytest.raises(ValueError):
+        ShapeHeat(window=0)
+    with pytest.raises(ValueError):
+        ShapeHeat(min_heat=0)
+
+
+def test_cost_model_compile_charge_uses_cache_probe():
+    from repro.core.executor import run_bucket_program
+
+    import numpy as _np
+
+    model = FlushCostModel(compile_cost_s=0.5, service_floor_s=0.01)
+    model.bind_engine(num_samples=1, use_kernel=False, donate=False)
+    tele = _warm_telemetry(bucket=(8, 4), wall_s=0.001)
+    # Shape (2, 8, 4) not compiled with this exact signature → charged.
+    probe = model.price_steal((8, 4), 1, [((8, 4), 0.05)], 0.1, tele)
+    if probe.compile_cost_s == 0.0:
+        # Another test may have compiled it; force a fresh shape instead.
+        pytest.skip("shape already resident — probe covered elsewhere")
+    assert probe.compile_cost_s == 0.5
+    # Compile it for real; the charge disappears.
+    ell = _np.full((2, 8, 4), 8, dtype=_np.int32)
+    ranks = _np.full((2, 9), _np.iinfo(_np.int32).max, dtype=_np.int32)
+    elig = _np.zeros((2, 9), dtype=bool)
+    m = _np.zeros((2,), dtype=_np.int32)
+    run_bucket_program(ell, ranks, elig, m, k=1)
+    after = model.price_steal((8, 4), 1, [((8, 4), 0.05)], 0.1, tele)
+    assert after.compile_cost_s == 0.0
+
+
+def test_cost_aware_policy_rejects_boundary_steal_and_trims_to_free_room():
+    """Unit decisions: at a pow2 boundary the steal is dropped entirely;
+    below it the free prefix is kept and the inflating tail rejected."""
+    tele = _warm_telemetry(wall_s=0.08)
+    # Boundary: 8 native hot requests overdue, one starving cold — the
+    # age-only parent steals it, the cost policy refuses (7 pad entries
+    # at ~10ms each vs 10ms slack).
+    pol = CostAwareCoalescingPolicy(16, max_wait=0.1, steal_wait=0.01)
+    qs = _queues({(32, 4): [0.0] * 8, (8, 4): [0.02]})
+    (d,) = pol.select_flushes(qs, now=0.11, telemetry=tele)
+    assert d.bucket == (32, 4) and d.count == 8 and d.steal == ()
+    assert pol.steals_rejected == 1 and pol.steals_accepted == 0
+    assert pol.pad_entries_avoided == 7
+    # Same queues, cold telemetry: degrades to the parent's age-only steal.
+    pol2 = CostAwareCoalescingPolicy(16, max_wait=0.1, steal_wait=0.01)
+    (d2,) = pol2.select_flushes(qs, now=0.11, telemetry=FlushTelemetry())
+    assert d2.steal == (((8, 4), 1),)
+    assert pol2.steals_accepted == 1 and pol2.steals_rejected == 0
+    # Trim: 6 native (g_pad 8 → 2 free slots) + 4 starving cold. Taking
+    # all 4 inflates to g_pad 16; the free 2 ride existing padding.
+    pol3 = CostAwareCoalescingPolicy(16, max_wait=0.1, steal_wait=0.01)
+    qs3 = _queues({(32, 4): [0.0] * 6, (8, 4): [0.02, 0.02, 0.03, 0.03]})
+    (d3,) = pol3.select_flushes(qs3, now=0.11, telemetry=tele)
+    assert d3.count == 6 and d3.steal == (((8, 4), 2),)
+    assert pol3.steals_accepted == 2 and pol3.steals_rejected == 2
+
+
+def test_trimmed_steal_reanchors_later_decisions_at_queue_front():
+    """Cross-decision pricing: when an earlier decision's steal is
+    rejected, a later decision stealing from the same queue must be
+    priced against the queue *front* entries execution will actually pop
+    (the oldest, with the least deadline slack) — not the younger offsets
+    the parent planned assuming the first steal happened. Here the
+    re-anchored benefit (0.05s of slack) falls below the promoted-row
+    cost (~0.066s at the 0.3s service floor) while the stale offsets'
+    benefit (0.09s) would have cleared it — so the steal must be
+    rejected."""
+    pol = CostAwareCoalescingPolicy(
+        10, max_wait=0.1, steal_wait=0.01,
+        cost_model=FlushCostModel(service_floor_s=0.3))
+    qs = _queues({
+        (32, 4): [0.0] * 8,             # boundary: stealing into it inflates
+        (64, 4): [0.005] * 6,           # g_pad 8: two free steal slots
+        (8, 4): [0.03, 0.04, 0.05, 0.06],
+    })
+    d_a, d_b = pol.select_flushes(qs, now=0.11, telemetry=FlushTelemetry())
+    # First decision's steal rejected on the pow2 inflation...
+    assert d_a.bucket == (32, 4) and d_a.steal == ()
+    # ...and the second decision's steal — re-anchored at the queue front
+    # — is priced too expensive as well (stale offsets would accept it).
+    assert d_b.bucket == (64, 4)
+    assert d_b.steal == ()
+    assert pol.steals_rejected == 4 and pol.steals_accepted == 0
+
+
+def test_shape_heat_release_does_not_strip_other_trackers():
+    """Pins are refcounted process-globally: one engine's teardown must
+    not strip a shape another live engine still pins."""
+    from repro.core.executor import program_cache_info
+
+    heat_a = ShapeHeat(window=8, max_pinned=1, min_heat=1)
+    heat_b = ShapeHeat(window=8, max_pinned=1, min_heat=1)
+    heat_a.on_retire((8, 4))
+    heat_b.on_retire((8, 4))
+    try:
+        assert (8, 4) in program_cache_info()["pinned"]
+        heat_a.release()
+        # B's pin survives A's teardown.
+        assert (8, 4) in program_cache_info()["pinned"]
+    finally:
+        heat_b.release()
+        heat_a.release()
+    assert (8, 4) not in program_cache_info()["pinned"]
+
+
+def test_shape_heat_pins_hot_bucket_and_releases_cold():
+    pins, unpins, touches = [], [], []
+    heat = ShapeHeat(window=8, max_pinned=1, min_heat=3,
+                     pin=pins.append, unpin=unpins.append,
+                     touch=touches.append)
+    hot, cold = (8, 4), (32, 4)
+    for _ in range(3):
+        heat.on_retire(hot)
+    assert pins == [hot] and heat.pinned == {hot}
+    assert touches == [hot] * 3
+    # A different shape taking over the window displaces the pin.
+    for _ in range(8):
+        heat.on_retire(cold)
+    assert hot in unpins and heat.pinned == {cold}
+    heat.release()
+    assert heat.pinned == set() and cold in unpins
+
+
+def test_cost_policy_pins_hot_shape_through_batcher_retires():
+    """End-to-end heat: serving a hot shape through the cost policy pins
+    it in the real program cache; teardown unpins."""
+    from repro.core.executor import program_cache_info, program_cache_unpin
+
+    batcher = ClusterBatcher(max_batch=1, policy="cost", max_wait=0.05)
+    g = build_graph(6, path(6))
+    try:
+        for i in range(4):
+            batcher.admit(ClusterRequest(uid=i, graph=g,
+                                         key=jax.random.PRNGKey(i)))
+            batcher.flush()
+        assert (8, 4) in batcher.policy.heat.pinned
+        assert (8, 4) in program_cache_info()["pinned"]
+    finally:
+        batcher.close()         # engine teardown releases the global pins
+    assert (8, 4) not in program_cache_info()["pinned"]
+    batcher.close()             # idempotent
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("executor", ["sync", "async", "sharded"])
+def test_cost_rejected_steal_stays_bit_exact(executor, use_kernel):
+    """The acceptance-criteria path: a steal *rejected* on cost. The cold
+    request must still retire (its own deadline) and every result must
+    match the per-graph engine bit-exactly — pricing can only ever decide
+    whether a steal happens, never what a flush computes."""
+    clock = VirtualClock()
+    model = FlushCostModel(service_floor_s=10.0)    # poison: reject all
+    pol = CostAwareCoalescingPolicy(8, max_wait=0.1, steal_wait=0.05,
+                                    cost_model=model)
+    batcher = ClusterBatcher(max_batch=8, policy=pol, clock=clock,
+                             executor=executor, use_kernel=use_kernel,
+                             num_samples=2)
+    hot = [build_graph(n, path(n)) for n in (17, 20, 24)]   # bucket (32, 4)
+    for i, g in enumerate(hot):
+        batcher.admit(ClusterRequest(uid=i, graph=g,
+                                     key=jax.random.PRNGKey(i)))
+        clock.advance(0.01)
+    cold = build_graph(6, path(6))                          # bucket (8, 4)
+    batcher.admit(ClusterRequest(uid=9, graph=cold,
+                                 key=jax.random.PRNGKey(9)))
+    clock.advance(0.08)
+    retired = batcher.poll()        # hot deadline flush; steal refused
+    assert pol.steals_rejected >= 1
+    assert batcher.stats.stolen_requests == 0
+    assert 9 not in {r.uid for r in retired}
+    clock.advance(0.05)             # cold crosses its own deadline
+    retired += batcher.poll()
+    retired += batcher.flush()
+    done = {r.uid: r for r in retired}
+    assert sorted(done) == [0, 1, 2, 9]
+    assert batcher.stats.coalesced_flushes == 0
+    for uid, g in [(0, hot[0]), (1, hot[1]), (2, hot[2]), (9, cold)]:
+        _assert_matches(g, jax.random.PRNGKey(uid), done[uid].result,
+                        num_samples=2)
+
+
+# ---------------------------------------------------------------------------
+# Steal-induced pad accounting (satellite): serving stats must equal the
+# promoted pack's own numbers — the quantity the cost model prices.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor", ["sync", "async"])
+def test_steal_pad_accounting_matches_promoted_pack(executor):
+    clock = VirtualClock()
+    k = 2
+    batcher = ClusterBatcher(max_batch=8, policy="coalesce", max_wait=0.1,
+                             clock=clock, executor=executor, num_samples=k)
+    hot = [build_graph(n, path(n)) for n in (17, 20, 24)]   # bucket (32, 4)
+    cold = [build_graph(5, path(5)), build_graph(6, path(6))]  # (8, 4)
+    for i, g in enumerate(hot):
+        batcher.admit(ClusterRequest(uid=i, graph=g,
+                                     key=jax.random.PRNGKey(i)))
+        clock.advance(0.01)
+    for j, g in enumerate(cold):
+        batcher.admit(ClusterRequest(uid=10 + j, graph=g,
+                                     key=jax.random.PRNGKey(10 + j)))
+    clock.advance(0.08)
+    batcher.poll()                  # one coalesced flush: 3 hot + 2 stolen
+    assert batcher.stats.flushes == 1
+    assert batcher.stats.stolen_requests == 2
+    # Independent ground truth: the promoted pack priced by the pure
+    # PackStats formula — 5 graphs at (32, 4), g_pad = 8.
+    expected = estimate_pack_stats(
+        [promote_plan(plan_graph(g), 32, 4) for g in hot + cold], k=k)
+    assert expected.padded_entries == (8 - 5) * k
+    assert expected.pad_vertex_waste == sum(
+        32 - g.n for g in hot + cold)
+    assert batcher.stats.padded_slots == expected.padded_entries
+    assert batcher.stats.pad_vertex_waste == expected.pad_vertex_waste
+    retired = batcher.flush()
+    for r in retired:
+        _assert_matches(r.graph, jax.random.PRNGKey(r.uid), r.result,
+                        num_samples=k)
+
+
+# ---------------------------------------------------------------------------
+# Harvest-error deferral (satellite): one failed earlier flush must not
+# drop the rest of a tick's decisions.
+# ---------------------------------------------------------------------------
+
+
+class _ExplodingOutput:
+    """Device-output stand-in: reports ready, then fails the fetch."""
+
+    def is_ready(self):
+        return True
+
+    def __array__(self, *args, **kwargs):
+        raise RuntimeError("device fetch exploded")
+
+
+class _MidTickFailureExecutor(AsyncExecutor):
+    """Poisons one flush's outputs so its fetch fails, and withholds the
+    handle from ``retire()`` until armed + one extra call — landing the
+    failure exactly in ``_execute``'s trailing harvest, mid-tick, between
+    two policy decisions."""
+
+    def __init__(self):
+        super().__init__()
+        self.poison_next = False
+        self.released = False
+        self._skip = 0
+        self._held = None
+
+    def _post_submit(self, handle):
+        if self.poison_next:
+            handle._outputs = (_ExplodingOutput(),) * 4
+            self._held = handle
+            self.poison_next = False
+
+    def arm(self):
+        """Deliver the poisoned handle on the *second* retire() from now
+        (skipping a tick's initial harvest)."""
+        self.released = True
+        self._skip = 1
+
+    def retire(self):
+        out = super().retire()
+        if self._held is not None and self._held in out:
+            if not self.released or self._skip > 0:
+                if self.released:
+                    self._skip -= 1
+                out.remove(self._held)
+                self._pending.append(self._held)
+        return out
+
+
+def test_harvest_error_does_not_drop_remaining_decisions():
+    """Regression: a harvest error from a previous flush surfaced between
+    two FlushDecisions used to abort the tick — the second (due!) deadline
+    flush was silently skipped past its budget. Now every decision
+    executes, the error is re-raised afterwards, and the failed flush's
+    requests are requeued and succeed on retry."""
+    ex = _MidTickFailureExecutor()
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=2, max_wait=0.05, clock=clock,
+                             executor=ex)
+    g_a = build_graph(6, path(6))           # bucket (8, 4)
+    g_b = build_graph(20, path(20))         # bucket (32, 4)
+    ex.poison_next = True                   # the first flush will fail
+    batcher.admit(ClusterRequest(uid=0, graph=g_a,
+                                 key=jax.random.PRNGKey(0)))
+    batcher.admit(ClusterRequest(uid=1, graph=g_a,
+                                 key=jax.random.PRNGKey(1)))   # full → flush
+    assert batcher.stats.flushes == 1
+    # Two more buckets go due together.
+    batcher.admit(ClusterRequest(uid=2, graph=g_a,
+                                 key=jax.random.PRNGKey(2)))
+    batcher.admit(ClusterRequest(uid=3, graph=g_b,
+                                 key=jax.random.PRNGKey(3)))
+    clock.advance(0.1)
+    ex.arm()
+    with pytest.raises(RuntimeError, match="exploded"):
+        batcher.poll()
+    # BOTH due deadline flushes were dispatched before the error surfaced
+    # (the old behaviour stopped at 2: the first deadline flush's trailing
+    # harvest raised and dropped the second decision).
+    assert batcher.stats.flushes == 3
+    # The failed flush's requests are back in their native bucket, oldest
+    # first; nothing was lost.
+    assert [r.uid for r in batcher.buckets.get((8, 4), [])] == [0, 1]
+    retired = batcher.flush()               # failing-then-succeeding retry
+    done = {r.uid: r for r in retired}
+    assert sorted(done) == [0, 1, 2, 3]
+    for uid, g in [(0, g_a), (1, g_a), (2, g_a), (3, g_b)]:
+        _assert_matches(g, jax.random.PRNGKey(uid), done[uid].result)
+
+
+class _FailOnceSubmitExecutor(AsyncExecutor):
+    """Raises on the first submit of one bucket shape (a dispatch-time
+    failure, e.g. device OOM), then behaves normally."""
+
+    def __init__(self, fail_bucket):
+        super().__init__()
+        self.fail_bucket = fail_bucket
+        self.failed = False
+
+    def submit(self, ell, *args, **kwargs):
+        shape = np.shape(ell)
+        if (shape[1], shape[2]) == self.fail_bucket and not self.failed:
+            self.failed = True
+            raise RuntimeError("submit boom")
+        return super().submit(ell, *args, **kwargs)
+
+
+def test_flush_drains_remaining_buckets_past_dispatch_error():
+    """flush()'s deferral covers dispatch failures too: one bucket's
+    pack/submit blowing up must not strand the other queued buckets
+    undispatched or skip the blocking harvest."""
+    ex = _FailOnceSubmitExecutor(fail_bucket=(8, 4))
+    batcher = ClusterBatcher(max_batch=4, executor=ex)
+    g_a, g_b = build_graph(6, path(6)), build_graph(20, path(20))
+    batcher.admit(ClusterRequest(uid=0, graph=g_a,
+                                 key=jax.random.PRNGKey(0)))
+    batcher.admit(ClusterRequest(uid=1, graph=g_b,
+                                 key=jax.random.PRNGKey(1)))
+    with pytest.raises(RuntimeError, match="submit boom"):
+        batcher.flush()
+    assert batcher.stats.flushes == 1               # (32,4) still drained
+    assert [r.uid for r in batcher.buckets.get((8, 4), [])] == [0]
+    done = {r.uid: r for r in batcher.flush()}      # retry succeeds
+    assert sorted(done) == [0, 1]
+    for uid, g in [(0, g_a), (1, g_b)]:
+        _assert_matches(g, jax.random.PRNGKey(uid), done[uid].result)
+
+
+def test_poll_dispatch_error_does_not_drop_remaining_decisions():
+    """The policy tick contains dispatch failures like flush() does: one
+    decision's pack/submit blowing up must not skip the tick's other due
+    deadline flushes past their budget."""
+    ex = _FailOnceSubmitExecutor(fail_bucket=(8, 4))
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=4, max_wait=0.05, clock=clock,
+                             executor=ex)
+    g_a, g_b = build_graph(6, path(6)), build_graph(20, path(20))
+    batcher.admit(ClusterRequest(uid=0, graph=g_a,
+                                 key=jax.random.PRNGKey(0)))
+    batcher.admit(ClusterRequest(uid=1, graph=g_b,
+                                 key=jax.random.PRNGKey(1)))
+    clock.advance(0.1)                      # both buckets due
+    with pytest.raises(RuntimeError, match="submit boom"):
+        batcher.poll()
+    assert batcher.stats.flushes == 1       # the second decision ran
+    assert [r.uid for r in batcher.buckets.get((8, 4), [])] == [0]
+    done = {r.uid: r for r in batcher.flush()}
+    assert sorted(done) == [0, 1]
+    for uid, g in [(0, g_a), (1, g_b)]:
+        _assert_matches(g, jax.random.PRNGKey(uid), done[uid].result)
+
+
+def test_poll_leading_harvest_error_does_not_drop_decisions():
+    """The tick's *leading* harvest joins the deferral discipline too: an
+    error surfacing there (failed flush already ready when poll starts)
+    must not stop the due deadline flushes from dispatching."""
+    ex = _MidTickFailureExecutor()
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=2, max_wait=0.05, clock=clock,
+                             executor=ex)
+    g_a, g_b = build_graph(6, path(6)), build_graph(20, path(20))
+    ex.poison_next = True
+    batcher.admit(ClusterRequest(uid=0, graph=g_a,
+                                 key=jax.random.PRNGKey(0)))
+    batcher.admit(ClusterRequest(uid=1, graph=g_a,
+                                 key=jax.random.PRNGKey(1)))   # poisoned
+    batcher.admit(ClusterRequest(uid=2, graph=g_b,
+                                 key=jax.random.PRNGKey(2)))
+    clock.advance(0.1)                      # uid2 due
+    ex.released = True                      # poison lands at poll's start
+    with pytest.raises(RuntimeError, match="exploded"):
+        batcher.poll()
+    # The tick still dispatched everything due: uid2's deadline flush AND
+    # the requeued uid0/uid1 (their bucket refilled by the requeue, so it
+    # re-flushed in the same tick) — 1 poisoned + 2 live flushes.
+    assert batcher.stats.flushes == 3
+    done = {r.uid: r for r in batcher.flush()}
+    assert sorted(done) == [0, 1, 2]
+
+
+def test_flush_drains_remaining_buckets_past_harvest_error():
+    """Same deferral discipline at end-of-stream: flush() must dispatch
+    every queued bucket even when an earlier flush's harvest fails
+    mid-drain (the old behaviour stranded the later buckets undispatched)."""
+    ex = _MidTickFailureExecutor()
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=2, clock=clock, executor=ex)
+    g_a = build_graph(6, path(6))           # bucket (8, 4)
+    g_b = build_graph(20, path(20))         # bucket (32, 4)
+    g_c = build_graph(40, path(40))         # bucket (64, 4)
+    ex.poison_next = True
+    batcher.admit(ClusterRequest(uid=0, graph=g_a,
+                                 key=jax.random.PRNGKey(0)))
+    batcher.admit(ClusterRequest(uid=1, graph=g_a,
+                                 key=jax.random.PRNGKey(1)))   # poisoned
+    batcher.admit(ClusterRequest(uid=2, graph=g_b,
+                                 key=jax.random.PRNGKey(2)))
+    batcher.admit(ClusterRequest(uid=3, graph=g_c,
+                                 key=jax.random.PRNGKey(3)))
+    ex.released = True                      # deliver on the next retire
+    with pytest.raises(RuntimeError, match="exploded"):
+        batcher.flush()
+    # The poison surfaced inside the first bucket's trailing harvest, yet
+    # the second queued bucket was still dispatched: 1 poisoned + 2 drains.
+    assert batcher.stats.flushes == 3
+    done = {r.uid: r for r in batcher.flush()}
+    assert sorted(done) == [0, 1, 2, 3]
+    for uid, g in [(0, g_a), (1, g_a), (2, g_b), (3, g_c)]:
+        _assert_matches(g, jax.random.PRNGKey(uid), done[uid].result)
+
+
+# ---------------------------------------------------------------------------
 # Telemetry plumbing: executor → ClusterStats → adaptive window.
 # ---------------------------------------------------------------------------
 
@@ -304,11 +844,27 @@ def test_flush_latency_telemetry_reaches_stats():
     summary = tele.summary()
     assert list(summary) == ["8x4"]
     rec = summary["8x4"]
-    assert rec["flushes"] == 2
+    assert rec["flushes_total"] == 2
+    assert rec["window_samples"] == 2
     for field in ("wall_p50_ms", "wall_p99_ms", "pack_p50_ms",
                   "pack_p99_ms", "wall_ewma_ms"):
         assert rec[field] >= 0.0
     assert batcher.stats.policy == "full"
+
+
+def test_telemetry_summary_separates_lifetime_from_window_counts():
+    """Past the retention window, lifetime flush counts and the sample
+    count percentiles are computed over must diverge — and the summary
+    must say so explicitly (the old single 'flushes' field silently mixed
+    a lifetime count with windowed percentiles)."""
+    tele = FlushTelemetry(window=4)
+    for i in range(10):
+        tele.record((8, 4), wall_s=0.001 * (i + 1), pack_s=0.0005)
+    rec = tele.summary()["8x4"]
+    assert rec["flushes_total"] == 10
+    assert rec["window_samples"] == 4
+    # Percentiles really are windowed: all retained walls are the last 4.
+    assert rec["wall_p50_ms"] >= 0.001 * 7 * 1e3 - 1e-9
 
 
 def test_adaptive_policy_serves_and_windows_from_real_telemetry():
@@ -429,7 +985,8 @@ class _LeaseAuditPool(BucketBufferPool):
 
 
 @settings(max_examples=12, deadline=None)
-@given(policy=st.sampled_from(["full", "deadline", "adaptive", "coalesce"]),
+@given(policy=st.sampled_from(["full", "deadline", "adaptive", "coalesce",
+                               "cost"]),
        seed=st.integers(min_value=0, max_value=10_000),
        gap_ms=st.floats(min_value=0.0, max_value=30.0),
        wait_ms=st.floats(min_value=1.0, max_value=60.0))
