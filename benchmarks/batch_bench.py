@@ -203,7 +203,20 @@ def main():
             "stolen_requests": serve_stats.stolen_requests,
             "padded_slots": serve_stats.padded_slots,
             "flush_latency": serve_stats.latency.summary(),
+            # Result-cache counters ride along for cross-PR tracking even
+            # though this workload is all-unique (hits stay 0 here; the
+            # repeat-traffic scenario in serve_bench exercises them).
+            "cache_hits": serve_stats.cache_hits,
+            "subscribed": serve_stats.subscribed,
         }
+        if serve_stats.result_cache is not None:
+            rc = serve_stats.result_cache
+            serve_payload["result_cache"] = {
+                "hits": rc.hits, "misses": rc.misses,
+                "evictions": rc.evictions, "collisions": rc.collisions,
+                "insertions": rc.insertions, "entries": rc.entries,
+                "bytes": rc.bytes,
+            }
         cost_stats = getattr(serve_batcher.policy, "cost_stats", None)
         if cost_stats is not None:      # cost policy: steal pricing counters
             serve_payload["cost"] = cost_stats()

@@ -29,10 +29,21 @@ Three questions answered, machine-readably (``BENCH_serve.json``):
   one hot shape keeps flushing: the cost policy's ``on_retire`` shape
   heat pins the hot shape, so hint-driven eviction recompiles no more
   than blind LRU (asserted; compile/eviction counts emitted).
+* **Repeat traffic** (the result-cache acceptance scenario) — a
+  zipf-skewed stream over a small unique pool, same engine with the
+  content-addressed result cache on vs off. Every repeat of an already
+  clustered (graph, key) retires at admission (or rides an identical
+  in-flight request as a single-flight subscriber); hit rate and
+  graphs/s speedup are asserted, and every served result — hit,
+  subscriber, or cold — is checked bit-identical to the per-graph
+  engine.
 * **Executor / adaptive window** — what does pipelined execution buy, and
   does the adaptive in-flight window match a hand-tuned static
   ``max_in_flight``? Closed-loop steady-state comparisons, interleaved so
   background-load drift hits every engine equally; best-of-N reported.
+  These engines run with the result cache *off*: the closed loop replays
+  one request set, which a content-addressed cache would short-circuit,
+  measuring the cache instead of the executor.
 
 Per-request latency = admit → retire on the engine clock. Policy passes run
 twice: the first warms the jit caches (the serving steady state), the
@@ -441,6 +452,103 @@ def eviction_churn_comparison(smoke: bool):
     return {"hinted": hinted, "blind": blind, "capacity": capacity}
 
 
+def repeat_traffic_comparison(smoke: bool, max_batch: int = 16,
+                              executor: str = "sync"):
+    """Zipf repeat traffic: content-addressed result cache + single-flight
+    coalescing vs the identical engine with the cache off.
+
+    A stream of ``n_stream`` requests drawn zipf-skewed (``p ∝ 1/rank^s``,
+    explicit bounded pmf — ``rng.zipf`` has an unbounded tail) from
+    ``n_unique`` (graph, key) pairs. Deduplicated serving traffic looks
+    exactly like this: a few hot similarity shards dominate the stream.
+    With the cache on, the first occurrence of each pair flushes cold and
+    every later one either retires at admission (cache hit) or subscribes
+    to the in-flight primary; with it off, every request packs and
+    flushes. Both arms run the deadline policy on the real clock — full
+    buckets never fill under duplicate-heavy traffic (the duplicates
+    subscribe instead of queueing), so primaries must flush on a deadline
+    for repeats to find a *completed* winner.
+
+    The cache-off arm runs first, so any residual warmth (jit programs,
+    allocator state) favours the baseline. Asserted: zero hits with the
+    cache off, hit rate > 0.5 and ≥ 1.5× graphs/s with it on, and every
+    retired result — hit, subscriber, or cold — bit-identical to the
+    per-graph engine.
+    """
+    n_unique = 24 if smoke else 48
+    n_stream = 192 if smoke else 768
+    zipf_s = 1.2
+    max_wait = 0.002
+
+    pool = make_requests(n_unique, seed=17, n_lo=24, n_hi=64)
+    ranks = np.arange(1, n_unique + 1, dtype=np.float64)
+    pmf = ranks ** -zipf_s
+    pmf /= pmf.sum()
+    stream = np.random.default_rng(23).choice(n_unique, size=n_stream,
+                                              p=pmf)
+    refs = {int(idx): correlation_cluster(
+                pool[idx][1], key=jax.random.PRNGKey(1000 + int(idx)),
+                lam=pool[idx][2])
+            for idx in set(stream.tolist())}
+
+    # Shared jit warmup: bucket programs live in the process-global cache,
+    # so one warm engine covers both arms identically.
+    ClusterBatcher(max_batch=max_batch,
+                   executor=executor).warmup(g for _, g, _ in pool)
+
+    results = {}
+    for arm, cache_on in (("no_cache", False), ("cache", True)):
+        batcher = ClusterBatcher(max_batch=max_batch, max_wait=max_wait,
+                                 executor=executor, result_cache=cache_on)
+        reqs = [ClusterRequest(uid=pos, graph=pool[idx][1],
+                               key=jax.random.PRNGKey(1000 + int(idx)),
+                               lam=pool[idx][2])
+                for pos, idx in enumerate(stream)]
+        t0 = time.perf_counter()
+        done = {r.uid: r for r in serve_all(batcher, reqs)}
+        dt = time.perf_counter() - t0
+        assert len(done) == n_stream, "requests lost in the engine"
+        for pos, idx in enumerate(stream):
+            ref = refs[int(idx)]
+            assert (done[pos].result.labels == ref.labels).all(), \
+                "cached/subscribed result diverged from the cold engine"
+            assert done[pos].result.cost == ref.cost
+        stats = batcher.stats
+        results[arm] = {
+            "gps": n_stream / dt,
+            "wall_s": dt,
+            "flushes": stats.flushes,
+            "cache_hits": stats.cache_hits,
+            "subscribed": stats.subscribed,
+            "hit_rate": stats.cache_hits / n_stream,
+        }
+        if stats.result_cache is not None:
+            rc = stats.result_cache
+            results[arm]["result_cache"] = {
+                "hits": rc.hits, "misses": rc.misses,
+                "evictions": rc.evictions, "collisions": rc.collisions,
+                "entries": rc.entries, "bytes": rc.bytes,
+            }
+        print(f"[repeat:{arm:9s}] {results[arm]['gps']:8.1f} graphs/s   "
+              f"flushes={stats.flushes:4d}  hits={stats.cache_hits:4d}  "
+              f"subscribed={stats.subscribed:3d}")
+    hit_rate = results["cache"]["hit_rate"]
+    speedup = results["cache"]["gps"] / results["no_cache"]["gps"]
+    results.update(speedup=speedup, zipf_s=zipf_s,
+                   n_unique=n_unique, n_stream=n_stream)
+    assert results["no_cache"]["cache_hits"] == 0, \
+        "cache-off arm recorded hits — the baseline is not cache-free"
+    assert hit_rate > 0.5, (
+        f"repeat-traffic hit rate {hit_rate:.2f} <= 0.5 — primaries are "
+        "not completing before their repeats arrive (deadline too long?)")
+    assert speedup >= 1.5, (
+        f"result cache bought only {speedup:.2f}x over the cache-off arm "
+        "on zipf repeat traffic (expected >= 1.5x)")
+    print(f"[repeat] hit rate={hit_rate:.2f}  "
+          f"cache speedup={speedup:.2f}x over cache-off")
+    return results
+
+
 def pct(x, q):
     return float(np.percentile(x, q))
 
@@ -544,9 +652,12 @@ def main():
     exec_names = ["sync", "async"]
     if args.executor not in exec_names:
         exec_names.append(args.executor)
+    # Cache off: the closed loop replays the same request set, which the
+    # content-addressed cache would short-circuit after the first pass —
+    # the comparison would measure the cache, not the executor.
     engines = {name: ClusterBatcher(max_batch=args.max_batch,
                                     num_samples=args.num_samples,
-                                    executor=name)
+                                    executor=name, result_cache=False)
                for name in exec_names}
     comparison = steady_throughput(comp_reqs, engines,
                                    repeat=3 if args.smoke else 6)
@@ -563,10 +674,12 @@ def main():
     window_engines = {
         "static": ClusterBatcher(max_batch=args.max_batch,
                                  num_samples=args.num_samples,
-                                 executor="async", max_in_flight=4),
+                                 executor="async", max_in_flight=4,
+                                 result_cache=False),
         "adaptive": ClusterBatcher(max_batch=args.max_batch,
                                    num_samples=args.num_samples,
-                                   executor="async", policy="adaptive"),
+                                   executor="async", policy="adaptive",
+                                   result_cache=False),
     }
     window_cmp = steady_throughput(comp_reqs, window_engines,
                                    repeat=3 if args.smoke else 6)
@@ -574,6 +687,12 @@ def main():
     print(f"[in-flight] static(4)={window_cmp['static']:8.1f} g/s   "
           f"adaptive={window_cmp['adaptive']:8.1f} g/s   "
           f"ratio={adaptive_ratio:.2f}x")
+
+    # Repeat traffic: the result-cache acceptance scenario (real clock,
+    # asserted hit rate + speedup + bit-exactness).
+    repeat_traffic = repeat_traffic_comparison(args.smoke,
+                                               max_batch=args.max_batch,
+                                               executor=args.executor)
 
     # Bit-exactness spot check against the per-graph engine, under the
     # selected policy.
@@ -648,6 +767,7 @@ def main():
             "async_speedup_vs_sync": async_speedup,
             "inflight_window_gps": window_cmp,
             "adaptive_vs_static_ratio": adaptive_ratio,
+            "repeat_traffic": repeat_traffic,
             "program_cache": program_cache_info(),
         }
         if pad_hostile is not None:

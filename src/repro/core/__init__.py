@@ -42,7 +42,7 @@ from .executor import (
     program_cache_unpin,
     set_program_cache_capacity,
 )
-from .plan import estimate_pack_stats
+from .plan import GraphFingerprint, estimate_pack_stats, graph_fingerprint
 from .cliques import clique_clustering, connected_components
 from .cost import (
     brute_force_opt,
@@ -81,6 +81,8 @@ __all__ = [
     "plan_graph",
     "promote_plan",
     "estimate_pack_stats",
+    "GraphFingerprint",
+    "graph_fingerprint",
     "BucketExecutor",
     "SyncExecutor",
     "AsyncExecutor",

@@ -34,6 +34,8 @@ partial deadline flushes, sharded flushes — yields identical results.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import struct
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -159,6 +161,100 @@ def promote_plan(plan: GraphPlan, R: int, W: int) -> GraphPlan:
     if (R, W) == plan.bucket:
         return plan
     return dataclasses.replace(plan, R=R, W=W)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphFingerprint:
+    """Content address of one planned clustering request.
+
+    ``digest`` is a 128-bit blake2b over ``payload``, the canonical byte
+    encoding of everything that determines the device result bit-for-bit
+    (see :func:`graph_fingerprint`). The payload rides along so a cache
+    keyed by ``digest`` can *verify* equality on every hit instead of
+    trusting the hash — a digest collision is detected, counted, and
+    treated as a miss rather than silently serving another graph's labels.
+    """
+
+    digest: str
+    payload: bytes
+
+    @property
+    def nbytes(self) -> int:
+        """Size of the retained canonical payload (cache byte accounting)."""
+        return len(self.payload)
+
+
+def _key_payload(key: jax.Array) -> bytes:
+    """Canonical bytes of a PRNG key — dtype, size, and raw key data.
+
+    Handles both legacy ``uint32`` key arrays and new-style typed key
+    arrays (``jax.random.key``); the encoding distinguishes them, which is
+    correct — they can drive different bit streams.
+    """
+    try:
+        arr = np.asarray(key)
+    except TypeError:
+        # Typed key arrays refuse np.asarray; unwrap to the raw key data.
+        arr = np.asarray(jax.random.key_data(key))
+    arr = np.ascontiguousarray(arr)
+    return (str(arr.dtype).encode("utf-8") + b"\0"
+            + struct.pack("<q", arr.size) + arr.tobytes())
+
+
+def graph_fingerprint(plan: GraphPlan, key: jax.Array, *,
+                      method: str = "pivot", num_samples: int = 1,
+                      eps: float = 2.0) -> GraphFingerprint:
+    """Canonical, collision-checked content hash of one planned request.
+
+    Two requests with equal fingerprints produce bit-identical device
+    inputs, hence bit-identical ``(labels, cost, picked)`` — the invariant
+    the serving-layer result cache and single-flight coalescing rest on.
+    The payload canonicalises exactly what :func:`_pack_bucket` puts on
+    the device for this graph at its native bucket (bucket-shape-stable:
+    promotion to a larger flush shape is bit-exact, so it does not enter
+    the fingerprint):
+
+    * the eligible-induced edge set in a canonical (lexsorted) order, the
+      eligibility mask, ``n``, and ``m`` (the cost identity reads the full
+      edge count) — together these determine the ELL rows and the
+      eligibility state;
+    * the **exact PRNG key bytes** plus ``num_samples`` — ranks are a
+      function of ``(n, key)`` only, and best-of-k sample keys are derived
+      by ``fold_in`` from the base key, so key + k pins every permutation.
+      Caching is keyed on the exact key precisely because the contract is
+      bit-exactness *per key*, not statistical equivalence;
+    * ``method`` / ``eps`` / the resolved ``lam`` — they resolve the
+      degree cap (eligibility, threshold) and the result's info schema.
+
+    Only post-selection winners (the argmin-of-k labels/cost/picked the
+    engine returns) are cached against this fingerprint: intermediate
+    per-sample outputs never leave the device program, so the cached value
+    is exactly what a cold flush would have returned.
+    """
+    g = plan.g
+    und = g.undirected_edges()
+    if len(und):
+        keep = plan.eligible[und[:, 0]] & plan.eligible[und[:, 1]]
+        kept = und[keep]
+        if len(kept):
+            kept = kept[np.lexsort((kept[:, 1], kept[:, 0]))]
+    else:
+        kept = np.zeros((0, 2), dtype=np.int64)
+    kept = np.ascontiguousarray(kept, dtype=np.int64)
+    elig = np.ascontiguousarray(np.asarray(plan.eligible, dtype=bool))
+    payload = b"".join([
+        b"cc-graph-fp1\0",
+        method.encode("utf-8") + b"\0",
+        struct.pack("<d", float(eps)),
+        struct.pack("<q", -1 if plan.lam is None else int(plan.lam)),
+        struct.pack("<qqq", max(1, int(num_samples)), int(plan.n), int(g.m)),
+        _key_payload(key),
+        np.packbits(elig).tobytes() if plan.n else b"",
+        kept.tobytes(),
+    ])
+    return GraphFingerprint(
+        digest=hashlib.blake2b(payload, digest_size=16).hexdigest(),
+        payload=payload)
 
 
 @dataclasses.dataclass
@@ -424,6 +520,8 @@ class BucketBufferPool:
 
 __all__ = [
     "GraphPlan",
+    "GraphFingerprint",
+    "graph_fingerprint",
     "PackStats",
     "StagingLease",
     "BucketBufferPool",

@@ -264,7 +264,11 @@ def dedup_corpus_streaming(corpus: Corpus, threshold: float = 0.5,
             raise ValueError(
                 f"reused batcher config {got} does not match the requested "
                 f"dedup parameters {want}")
-    stats0 = dataclasses.replace(batcher.stats)  # delta vs engine lifetime
+    # Delta baseline vs engine lifetime. Must be a *deep* snapshot:
+    # dataclasses.replace copies shallowly, so the mutable nested fields
+    # (latency telemetry, live result-cache counters) would alias the live
+    # stats object and every delta computed from them would read 0.
+    stats0 = batcher.stats.snapshot()
 
     labels = np.arange(n, dtype=np.int32)   # isolated docs: singletons
     total_cost = 0
@@ -293,17 +297,24 @@ def dedup_corpus_streaming(corpus: Corpus, threshold: float = 0.5,
         if labels[i] not in seen:
             seen.add(labels[i])
             keep[i] = True
+    stats1 = batcher.stats
+    info = {"n_shards": len(shards), "n_buckets": len(buckets),
+            "buckets": sorted(buckets), "num_samples": num_samples,
+            # deltas, so a long-lived reused batcher reports this call's
+            # serving work rather than its lifetime totals
+            "flushes": stats1.flushes - stats0.flushes,
+            "deadline_flushes": (stats1.deadline_flushes
+                                 - stats0.deadline_flushes),
+            "padded_slots": stats1.padded_slots - stats0.padded_slots,
+            # nested-telemetry delta — reads 0 under a shallow snapshot
+            "flush_samples": (stats1.latency.total_flushes
+                              - stats0.latency.total_flushes),
+            # repeat shards (same content, same fold_in key) served from
+            # the result cache — nonzero when a reused batcher sees the
+            # same corpus again
+            "cache_hits": stats1.cache_hits - stats0.cache_hits}
     clustering = ClusterResult(
-        labels=labels, cost=total_cost, method="pivot_stream",
-        info={"n_shards": len(shards), "n_buckets": len(buckets),
-              "buckets": sorted(buckets), "num_samples": num_samples,
-              # deltas, so a long-lived reused batcher reports this call's
-              # serving work rather than its lifetime totals
-              "flushes": batcher.stats.flushes - stats0.flushes,
-              "deadline_flushes": (batcher.stats.deadline_flushes
-                                   - stats0.deadline_flushes),
-              "padded_slots": batcher.stats.padded_slots
-              - stats0.padded_slots})
+        labels=labels, cost=total_cost, method="pivot_stream", info=info)
     return DedupResult(keep=keep, labels=labels, clustering=clustering,
                        n_edges=len(edges))
 

@@ -66,6 +66,21 @@ Buffer reuse
   the same bucket shape get distinct buffer generations — a buffer feeding
   an in-flight program is never refilled.
 
+Result cache + single-flight coalescing (repeat traffic)
+  ``ClusterBatcher(result_cache=...)`` content-addresses every admission
+  by :func:`repro.core.plan.graph_fingerprint` — the canonical hash of
+  the planned request's ELL content, exact PRNG key, and
+  ``method``/``num_samples``/``eps``. A fingerprint found in the
+  :class:`~repro.serve.resultcache.ResultCache` retires at admission,
+  bit-identical to a cold flush (only post-selection winners are cached,
+  keyed on the exact key). A fingerprint matching a *queued or in-flight*
+  request subscribes to that flush's harvest instead of packing a
+  duplicate row; subscribers stay attached to their primary through the
+  requeue-on-error path, so a failed flush retries them. Subscribers
+  never appear in the bucket queues and neither cached nor subscribed
+  admissions consult the policy's ``on_admit`` gate — they add no device
+  work, so policies see exactly the queue depths/ages that will pack.
+
 Clocks
   The engine clock (``clock=``, monotonic seconds, injectable) is the
   *only* time source scheduling decisions see: ``admitted_at`` stamps,
@@ -91,10 +106,12 @@ from repro.core import BucketBufferPool, make_executor, plan_graph
 from repro.core.api import ClusterResult, sample_keys
 from repro.core.executor import pack_and_submit
 from repro.core.graph import Graph
-from repro.core.plan import GraphPlan, promote_plan, result_for_plan
+from repro.core.plan import (GraphFingerprint, GraphPlan, graph_fingerprint,
+                             promote_plan, result_for_plan)
 from repro.util import next_pow2
 
 from .engine import AdmissionRejected, EngineStats
+from .resultcache import ResultCacheStats, make_result_cache
 from .scheduler import FlushDecision, FlushTelemetry, make_policy
 
 
@@ -108,6 +125,11 @@ class ClusterRequest:
     done: bool = False
     admitted_at: Optional[float] = None     # engine clock time of admission
     plan: Optional[GraphPlan] = None        # resolved once at admission
+    fingerprint: Optional[GraphFingerprint] = None  # content address (cache)
+    # Single-flight: identical requests admitted while this one is queued
+    # or in flight ride its harvest instead of packing duplicate rows.
+    subscribers: List["ClusterRequest"] = dataclasses.field(
+        default_factory=list)
 
 
 @dataclasses.dataclass
@@ -122,8 +144,16 @@ class ClusterStats(EngineStats):
     buckets_seen: int = 0        # distinct (R, W) buckets admitted
     rejected: int = 0            # admissions refused by backpressure
     in_flight_peak: int = 0      # max concurrent in-flight flushes seen
+    cache_misses: int = 0        # admissions that went the cold path
+    subscribed: int = 0          # single-flight riders on identical requests
     latency: FlushTelemetry = dataclasses.field(
         default_factory=FlushTelemetry)  # per-bucket flush wall/pack times
+    # Live counters of the engine's result cache (None = caching off).
+    # Cache-lifetime, not engine-lifetime, when the cache is shared
+    # between engines; the scalar cache_hits/cache_misses above are this
+    # engine's own. Mutable and aliased to the cache — delta accounting
+    # must go through EngineStats.snapshot(), not dataclasses.replace.
+    result_cache: Optional[ResultCacheStats] = None
 
 
 class ClusterBatcher:
@@ -161,6 +191,15 @@ class ClusterBatcher:
         derives the historical behaviour from ``max_wait``/``max_in_flight``.
         An instance must carry its own ``max_wait``/``max_in_flight`` —
         passing those knobs alongside one raises ``ValueError``.
+      result_cache: content-addressed result cache + single-flight
+        coalescing. ``True`` (default) creates a default-sized
+        :class:`~repro.serve.resultcache.ResultCache`; ``False``/``None``
+        disables both (every admission packs and flushes); an ``int``
+        sets the entry capacity; a :class:`ResultCache` instance is
+        shared as-is (e.g. one cache across engines/corpora). A cache
+        hit retires at admission, bit-identical to a cold flush — the
+        fingerprint covers the exact PRNG key, so caching never trades
+        determinism for speed.
     """
 
     def __init__(self, max_batch: int = 64, method: str = "pivot",
@@ -171,7 +210,8 @@ class ClusterBatcher:
                  pool: Optional[BucketBufferPool] = None,
                  executor="sync",
                  max_in_flight: Optional[int] = None,
-                 policy=None):
+                 policy=None,
+                 result_cache=True):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait is not None and max_wait < 0:
@@ -199,11 +239,21 @@ class ClusterBatcher:
         if bind is not None:
             bind(executor=self.executor, num_samples=self.num_samples,
                  use_kernel=self.use_kernel, donate=self.pool.donate)
+        self.result_cache = make_result_cache(result_cache)
         self.buckets: Dict[Tuple[int, int], List[ClusterRequest]] = {}
         self._bucket_keys_seen: set = set()
         self._retired: Deque[ClusterRequest] = deque()
         self._in_flight_reqs = 0
-        self.stats = ClusterStats(policy=self.policy.name)
+        self._subscribed_pending = 0
+        # Single-flight registry: fingerprint digest → the primary request
+        # currently queued or in flight for that content. Entries live
+        # until the primary's result is delivered (a requeued-on-error
+        # primary stays registered, so its subscribers retry with it).
+        self._single_flight: Dict[str, ClusterRequest] = {}
+        self.stats = ClusterStats(
+            policy=self.policy.name,
+            result_cache=self.result_cache.stats
+            if self.result_cache is not None else None)
 
     # -- ClusterEngine protocol ------------------------------------------
 
@@ -222,21 +272,61 @@ class ClusterBatcher:
         which defers): it runs *before* the request is queued, so the
         caller can safely retry the same ``admit`` — deferring would
         admit the request and then raise, inviting a double admission.
+
+        With a result cache enabled, admission is content-addressed
+        first: a fingerprint hit retires the request immediately —
+        bit-identical to a cold flush, no queueing, no device work — and
+        a fingerprint matching a *queued or in-flight* request subscribes
+        to that flush's harvest (single-flight) instead of packing a
+        duplicate row. Neither path consults the policy's ``on_admit``
+        backpressure gate: they add no device work to the window the gate
+        protects. Subscribers never appear in the bucket queues, so
+        policies cannot double-count them in queue depth or ages.
         """
         self._harvest()
         now = self.clock() if now is None else now
+        if req.plan is None:
+            # Resolved once; a retry after AdmissionRejected (and the
+            # flush itself) reuses the plan verbatim.
+            req.plan = plan_graph(req.graph, method=self.method,
+                                  eps=self.eps, lam=req.lam)
+            req.lam = req.plan.lam
+        plan = req.plan
+        if self.result_cache is not None:
+            if req.fingerprint is None:
+                req.fingerprint = graph_fingerprint(
+                    plan, req.key, method=self.method,
+                    num_samples=self.num_samples, eps=self.eps)
+            cached = self.result_cache.get(req.fingerprint)
+            if cached is not None:
+                req.admitted_at = now
+                self.stats.submitted += 1
+                self.stats.cache_hits += 1
+                self._deliver(req, *cached)
+                self._run_policy(now)
+                return self.retire()
+            primary = self._single_flight.get(req.fingerprint.digest)
+            if primary is not None:
+                req.admitted_at = now
+                primary.subscribers.append(req)
+                self._subscribed_pending += 1
+                self.stats.submitted += 1
+                self.stats.subscribed += 1
+                self._run_policy(now)
+                return self.retire()
         if not self.policy.on_admit(self.buckets, now, self._telemetry()):
             self.stats.rejected += 1
             raise AdmissionRejected(
                 f"policy {self.policy.name!r} refused admission with "
                 f"{self.executor.in_flight} flushes in flight; retry after "
                 "retiring")
-        plan = plan_graph(req.graph, method=self.method, eps=self.eps,
-                          lam=req.lam)
-        req.plan = plan         # resolved once; the flush reuses it verbatim
-        req.lam = plan.lam
         req.admitted_at = now
         self.buckets.setdefault(plan.bucket, []).append(req)
+        if req.fingerprint is not None:
+            self._single_flight[req.fingerprint.digest] = req
+            # Counted here (not at the probe) so a rejected-then-retried
+            # admission registers one miss, not one per retry.
+            self.stats.cache_misses += 1
         self.stats.submitted += 1
         self._bucket_keys_seen.add(plan.bucket)
         self.stats.buckets_seen = len(self._bucket_keys_seen)
@@ -284,19 +374,31 @@ class ClusterBatcher:
         return out
 
     def pending(self) -> int:
-        """Admitted-but-unfinished requests: bucketed + in flight."""
+        """Admitted-but-unfinished requests: bucketed + in flight +
+        single-flight subscribers riding a queued/in-flight primary."""
         return sum(len(v) for v in self.buckets.values()) \
-            + self._in_flight_reqs
+            + self._in_flight_reqs + self._subscribed_pending
 
     def close(self) -> None:
         """Release engine resources held in process-global state — today
         that is the cost policy's program-cache pins (``ShapeHeat`` also
         backstops this from ``__del__``, but a long-lived process swapping
-        engines should release deterministically). Idempotent; the engine
-        remains usable for draining afterwards."""
+        engines should release deterministically). Idempotent **at the
+        pin-refcount level**: closing twice, or ``__del__`` after an
+        explicit ``close()``, never decrements a pin refcount a second
+        time — so it can never strip a shape another live engine still
+        pins (asserted in ``tests/test_executor.py``). The engine remains
+        usable for draining afterwards; draining may re-pin, which the
+        ``__del__`` backstop releases again."""
         release = getattr(self.policy, "release", None)
         if release is not None:
             release()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:       # interpreter teardown: modules may be gone
+            pass
 
     # -- Policy driving ----------------------------------------------------
 
@@ -472,6 +574,15 @@ class ClusterBatcher:
                                         self.executor.in_flight)
         return self._harvest(defer=True)
 
+    def _deliver(self, req: ClusterRequest, labels_row: np.ndarray,
+                 cost: int, picked: int, rounds: int) -> None:
+        """Attach one result (device row or cache entry) and retire it."""
+        req.result = result_for_plan(req.plan, labels_row, cost, picked,
+                                     rounds, self.num_samples, self.method)
+        req.done = True
+        self.stats.retired += 1
+        self._retired.append(req)
+
     def _harvest(self, block: bool = False,
                  defer: bool = False) -> Optional[BaseException]:
         """Collect completed flushes from the executor into the retired
@@ -482,11 +593,15 @@ class ClusterBatcher:
         — ahead of newer arrivals, preserving deadline age order — and the
         first such error is re-raised after every other handle has been
         processed, so one bad flush can neither lose requests nor strand
-        the handles behind it. With ``defer=True`` the first error is
+        the handles behind it. Single-flight subscribers stay attached to
+        their requeued primary, so a failed flush *retries* them rather
+        than dropping them. With ``defer=True`` the first error is
         *returned* instead of raised — mid-tick callers (``_execute``,
         ``flush``) finish dispatching their remaining decisions before
-        surfacing it. Successful harvests record the flush's wall/pack
-        latency into ``stats.latency`` and notify the policy.
+        surfacing it. Successful harvests fan each primary's device row
+        out to its subscribers, insert the post-selection winner into the
+        result cache, record the flush's wall/pack latency into
+        ``stats.latency``, and notify the policy.
         """
         handles = self.executor.drain() if block else self.executor.retire()
         first_err: Optional[BaseException] = None
@@ -502,14 +617,26 @@ class ClusterBatcher:
                     first_err = err
                 continue
             for slot, req in enumerate(reqs):
-                req.result = result_for_plan(
-                    req.plan, labels[slot], int(costs[slot]),
-                    int(picked[slot]), int(rounds[slot]),
-                    self.num_samples, self.method)
-                req.done = True
+                row = labels[slot]
+                cost, pick = int(costs[slot]), int(picked[slot])
+                depth = int(rounds[slot])
+                self._deliver(req, row, cost, pick, depth)
                 self.stats.clustered += 1
-                self.stats.retired += 1
-                self._retired.append(req)
+                if req.subscribers:
+                    subs, req.subscribers = req.subscribers, []
+                    for sub in subs:
+                        # Same device row, the subscriber's own plan —
+                        # identical content by fingerprint equality, so
+                        # the result is bit-identical to a cold flush.
+                        self._deliver(sub, row, cost, pick, depth)
+                        self.stats.clustered += 1
+                        self._subscribed_pending -= 1
+                if req.fingerprint is not None:
+                    self._single_flight.pop(req.fingerprint.digest, None)
+                    if self.result_cache is not None:
+                        self.result_cache.put(
+                            req.fingerprint, row[: req.plan.n],
+                            cost, pick, depth)
             self._in_flight_reqs -= len(reqs)
             if handle.shape is not None and handle.wall_seconds is not None:
                 bucket = (handle.shape[1], handle.shape[2])

@@ -277,11 +277,20 @@ class ShapeHeat:
         self._touch(bucket)
         hot = {b for b, c in self._counts.most_common(self.max_pinned)
                if c >= self.min_heat}
-        for b in self.pinned - hot:
+        # Pins are refcounted process-global state, so bookkeeping must
+        # stay consistent even if a pin/unpin call fails partway: drop a
+        # shape from `pinned` *before* unpinning (a retry can then never
+        # decrement the same refcount twice and strip another engine's
+        # pin) and record a pin only *after* it succeeded. The failure
+        # bias is deliberate — an interrupted update can at worst leak a
+        # pin (released by `release`/`__del__` eventually), never steal
+        # one.
+        for b in list(self.pinned - hot):
+            self.pinned.discard(b)
             self._unpin(b)
-        for b in hot - self.pinned:
+        for b in list(hot - self.pinned):
             self._pin(b)
-        self.pinned = hot
+            self.pinned.add(b)
 
     def release(self) -> None:
         """Unpin everything this tracker pinned (engine teardown).
@@ -290,10 +299,15 @@ class ShapeHeat:
         dies without releasing would shield its shapes from eviction
         forever — ``__del__`` backstops that, but engines should call
         this (via ``ClusterBatcher.close()``) deterministically.
+
+        Idempotent at the refcount level: each shape is popped from
+        ``pinned`` before its single ``unpin``, so calling ``release``
+        twice — or ``__del__`` after an explicit ``close()`` — cannot
+        double-decrement a refcount and strip a shape another live
+        engine still pins.
         """
-        for b in self.pinned:
-            self._unpin(b)
-        self.pinned = set()
+        while self.pinned:
+            self._unpin(self.pinned.pop())
 
     def __del__(self):
         try:

@@ -34,6 +34,7 @@ reference outer loop — admit a stream, poll deadlines, drain at the end.
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 import time
 from typing import Any, Iterable, List, Protocol, runtime_checkable
@@ -51,11 +52,26 @@ class EngineStats:
     fields (padding accounting, decode-step counts, ...). ``policy`` names
     the scheduling policy driving the engine's flush/admission decisions —
     part of the protocol's stats surface so outer loops and benchmarks can
-    report which scheduler produced the numbers."""
+    report which scheduler produced the numbers. ``cache_hits`` counts
+    requests retired straight from a content-addressed result cache
+    without device work (engines without one leave it 0)."""
 
     submitted: int = 0
     retired: int = 0
     policy: str = ""
+    cache_hits: int = 0
+
+    def snapshot(self) -> "EngineStats":
+        """Deep copy for delta accounting against a long-lived engine.
+
+        ``dataclasses.replace(stats)`` is a *shallow* copy: mutable nested
+        fields (flush-latency telemetry, live result-cache counters) alias
+        the live object, so a delta computed from the "snapshot" later
+        reads the current value and comes out zero. Callers that report
+        per-call deltas (streaming dedup over a reused batcher) must
+        snapshot through this instead.
+        """
+        return copy.deepcopy(self)
 
 
 @runtime_checkable
@@ -82,7 +98,8 @@ class ClusterEngine(Protocol):
 
 
 def serve_all(engine: ClusterEngine, requests: Iterable[Any],
-              reject_backoff: float = 0.0005) -> List[Any]:
+              reject_backoff: float = 0.0005,
+              max_stalled_rounds: int = 100_000) -> List[Any]:
     """Reference outer loop: admit a request stream, then drain the engine.
 
     Engines with a deadline policy are polled after every admit (so a
@@ -90,18 +107,31 @@ def serve_all(engine: ClusterEngine, requests: Iterable[Any],
     — this is what lets the driver exercise deadline/adaptive scheduling
     policies instead of only full-bucket flushes. Engines with admission
     control are retried: on :class:`AdmissionRejected` the loop harvests
-    finished work (``retire`` + ``poll``) and re-admits, sleeping
+    finished work (``retire`` + ``poll``) and re-admits, backing off
     ``reject_backoff`` seconds only when no progress was made — a stand-in
     for a front-end that would 429/shed instead. Time is always the
     *engine's own* clock — inject a virtual clock into the engine
     (``ClusterBatcher(clock=...)``) for simulations; a second clock here
     could disagree with the ``admitted_at`` stamps and silently disable
-    the deadline. Returns every retired request, in retirement order —
-    each request exactly once.
+    the deadline. The backoff follows the same rule: when the engine
+    carries an injected clock with an ``advance`` method (a
+    ``VirtualClock``), the loop advances *that* clock by
+    ``reject_backoff`` instead of sleeping — wall-clock sleep does not
+    move virtual time, so under a virtual clock a rejection loop would
+    otherwise spin forever with the deadline frozen. ``max_stalled_rounds``
+    consecutive no-progress rejections raise ``RuntimeError`` (loudly)
+    rather than spinning unbounded — that many fruitless retries means a
+    stalled flush or a policy that can never admit, on any clock. Returns
+    every retired request, in retirement order — each request exactly
+    once.
     """
     retired: List[Any] = []
     poll = getattr(engine, "poll", None)
+    clock = getattr(engine, "clock", None)
+    advance = getattr(clock, "advance", None) \
+        if clock is not None and clock is not time.monotonic else None
     for req in requests:
+        stalled = 0
         while True:
             try:
                 retired.extend(engine.admit(req))
@@ -111,8 +141,22 @@ def serve_all(engine: ClusterEngine, requests: Iterable[Any],
                 if poll is not None:
                     progressed.extend(poll())
                 retired.extend(progressed)
-                if not progressed and reject_backoff:
-                    time.sleep(reject_backoff)  # let in-flight work finish
+                if progressed:
+                    stalled = 0
+                    continue
+                stalled += 1
+                if stalled >= max_stalled_rounds:
+                    pending = getattr(engine, "pending", lambda: "?")()
+                    raise RuntimeError(
+                        f"serve_all made no progress across {stalled} "
+                        f"consecutive rejected admissions ({pending} "
+                        "requests pending) — a flush is stalled or the "
+                        "admission policy can never open")
+                if reject_backoff:
+                    if advance is not None:
+                        advance(reject_backoff)   # engine time, not wall time
+                    else:
+                        time.sleep(reject_backoff)  # let in-flight work finish
         if poll is not None:
             retired.extend(poll())
     retired.extend(engine.flush())

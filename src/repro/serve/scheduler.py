@@ -58,6 +58,15 @@ plus the current in-flight count). They return :class:`FlushDecision`
 values — bucket key, sub-batch size, and optionally which queues to steal
 from — and the batcher executes them without second-guessing.
 
+The queues contain only *primary* requests — work that will actually pack
+a device row. Admissions the batcher's result cache retires immediately,
+and single-flight subscribers riding an identical queued/in-flight
+request, never enter a queue (and skip the ``on_admit`` gate: they add no
+device work to the window it protects). A policy can therefore trust
+``len(queue)`` as the exact row count a flush of that queue packs, and
+queue ages as the ages of real pending device work — subscribed
+duplicates are never double-counted in depth or age.
+
 Determinism: policies only ever read the injected engine clock (``now``)
 and telemetry; they never touch wall-clock time themselves, so tests and
 simulators drive them with virtual clocks and fabricated telemetry.

@@ -391,3 +391,101 @@ def test_streaming_dedup_matches_batched():
     assert rs.clustering.cost == rb.clustering.cost
     assert (rs.keep == rb.keep).all()
     assert rs.clustering.info["flushes"] >= 1
+
+
+def test_streaming_dedup_reused_batcher_deltas_are_per_call():
+    """A reused engine carries lifetime stats; each streaming call's
+    ``info`` must report only *its own* flush/sample activity. The
+    shallow ``dataclasses.replace`` snapshot this guards against aliased
+    the nested telemetry, so ``flush_samples`` read 0 for every call."""
+    from repro.data.dedup import dedup_corpus_batched, dedup_corpus_streaming
+    from repro.data.synthetic import synthetic_corpus
+
+    batcher = ClusterBatcher(max_batch=4, max_wait=0.0, num_samples=4)
+    c1 = synthetic_corpus(n_docs=30, dup_fraction=0.5, mutate_p=0.05, seed=3)
+    c2 = synthetic_corpus(n_docs=40, dup_fraction=0.4, mutate_p=0.05, seed=4)
+    r1 = dedup_corpus_streaming(c1, threshold=0.45, seed=3, max_batch=4,
+                                max_wait=0.0, batcher=batcher)
+    r2 = dedup_corpus_streaming(c2, threshold=0.45, seed=4, max_batch=4,
+                                max_wait=0.0, batcher=batcher)
+    for res in (r1, r2):
+        info = res.clustering.info
+        # Per-call deltas, not engine-lifetime totals: the nested-telemetry
+        # sample count must agree with the top-level flush delta, and both
+        # must be this call's own (>= 1, not the running sum).
+        assert info["flushes"] >= 1
+        assert info["flush_samples"] == info["flushes"]
+    total = batcher.stats.latency.total_flushes
+    assert (r1.clustering.info["flush_samples"]
+            + r2.clustering.info["flush_samples"]) == total
+    # And reuse did not bend the bit-exactness contract.
+    rb2 = dedup_corpus_batched(c2, threshold=0.45, seed=4, num_samples=4)
+    assert (r2.labels == rb2.labels).all()
+    assert r2.clustering.cost == rb2.clustering.cost
+
+
+class _GatedDeadlinePolicy:
+    """One request in the system at a time: refuse admission while any
+    queue is non-empty, flush only once the oldest request is ``max_wait``
+    old. Progress therefore *requires* engine-clock time to advance while
+    serve_all retries a rejected admission."""
+
+    name = "gated-deadline"
+
+    def __init__(self, max_wait: float):
+        self.max_wait = max_wait
+
+    def on_admit(self, queues, now, telemetry) -> bool:
+        return not any(queues.values())
+
+    def select_flushes(self, queues, now, telemetry):
+        from repro.serve.scheduler import FlushDecision
+
+        return [FlushDecision(bucket=b, count=len(q))
+                for b, q in queues.items()
+                if q and now - q[0].admitted_at >= self.max_wait]
+
+    def on_retire(self, bucket, telemetry) -> None:
+        pass
+
+
+def test_serve_all_advances_virtual_clock_on_rejection():
+    """Regression: serve_all backed off with a wall-clock ``time.sleep``
+    even when the engine ran on a virtual clock, so a rejection loop spun
+    with the deadline frozen — virtual time never moved, the gated bucket
+    never flushed, and the loop never terminated. The backoff must advance
+    the *engine's* clock when it is injectable."""
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=8, clock=clock,
+                             policy=_GatedDeadlinePolicy(max_wait=0.01))
+    graphs = [_rand_graph(10, 2, seed=s) for s in range(3)]
+    reqs = [ClusterRequest(uid=i, graph=g, key=jax.random.PRNGKey(i))
+            for i, g in enumerate(graphs)]
+    retired = serve_all(batcher, reqs, reject_backoff=0.005)
+    assert sorted(r.uid for r in retired) == [0, 1, 2]
+    for g, r in zip(graphs, sorted(retired, key=lambda r: r.uid)):
+        _assert_matches(g, jax.random.PRNGKey(r.uid), r.result)
+    # Each gated admission needed >= max_wait of engine time to open.
+    assert clock.t >= 0.02
+    assert batcher.stats.rejected >= 2
+    assert batcher.pending() == 0
+
+
+def test_serve_all_fails_loudly_when_stalled():
+    """An admission gate that can never open must surface as a loud
+    RuntimeError after ``max_stalled_rounds`` no-progress retries, not an
+    unbounded spin."""
+
+    class _NeverAdmitPolicy(_GatedDeadlinePolicy):
+        name = "never"
+
+        def on_admit(self, queues, now, telemetry) -> bool:
+            return False
+
+    batcher = ClusterBatcher(max_batch=8, clock=VirtualClock(),
+                             policy=_NeverAdmitPolicy(max_wait=1.0))
+    req = ClusterRequest(uid=0, graph=_rand_graph(8, 2, seed=0),
+                         key=jax.random.PRNGKey(0))
+    with pytest.raises(RuntimeError, match="no progress"):
+        serve_all(batcher, [req], reject_backoff=0.001,
+                  max_stalled_rounds=25)

@@ -524,3 +524,36 @@ def test_sharded_executor_eight_devices_subprocess():
                           cwd=os.path.dirname(os.path.dirname(__file__)))
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "OK" in proc.stdout
+
+
+def test_engine_close_is_pin_refcount_idempotent():
+    """Double-close / close-then-__del__ must release an engine's pin
+    refs exactly once: with two live engines pinning the same shape, one
+    engine's sloppy teardown can never strip the other's pin."""
+    from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
+    from repro.serve.costmodel import ShapeHeat
+    from repro.serve.scheduler import CostAwareCoalescingPolicy
+
+    def make_engine():
+        policy = CostAwareCoalescingPolicy(
+            2, max_wait=10.0,
+            heat=ShapeHeat(window=8, max_pinned=1, min_heat=1))
+        return ClusterBatcher(policy=policy)
+
+    engines = [make_engine(), make_engine()]
+    for i, eng in enumerate(engines):
+        for j in range(2):       # fill the (8, 4) bucket → flush → retire
+            eng.admit(ClusterRequest(uid=j, graph=build_graph(6, path(6)),
+                                     key=jax.random.PRNGKey(10 * i + j)))
+        eng.flush()
+    assert (8, 4) in exec_mod.program_cache_info()["pinned"]   # refcount 2
+
+    a, b = engines
+    a.close()
+    a.close()                    # double close: second must be a no-op
+    del a                        # __del__ after close: also a no-op
+    assert (8, 4) in exec_mod.program_cache_info()["pinned"], \
+        "engine A's teardown stole engine B's pin ref"
+    b.close()
+    assert (8, 4) not in exec_mod.program_cache_info()["pinned"]
+    b.close()                    # close after the pin is gone: still safe

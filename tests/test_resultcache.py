@@ -1,0 +1,439 @@
+"""Content-addressed result cache + single-flight coalescing.
+
+The contracts under test (core/plan.py graph_fingerprint,
+serve/resultcache.py, serve/cluster_batcher.py):
+
+* fingerprint sensitivity — equal content + exact key ⇒ equal digest;
+  differing key, eps, num_samples, method, or graph content ⇒ miss;
+* a cache hit retires at admission with labels/cost/picked bit-identical
+  to a cold flush (and to the per-graph engine), across sync/async/sharded
+  executors and deadline/coalesce/cost policies;
+* a single-flight subscriber rides an identical queued/in-flight request's
+  harvest — never a duplicate packed row, never visible to policies in
+  queue depth/age — and rides the requeue-on-error path when the flush's
+  handle is poisoned, retrying rather than dropping;
+* the LRU store enforces capacity/byte bounds with hit/miss/eviction/
+  collision counters, and hits are payload-verified (a digest collision
+  can never serve another graph's labels).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_graph,
+    correlation_cluster,
+    graph_fingerprint,
+    plan_graph,
+)
+from repro.core.executor import AsyncExecutor
+from repro.core.graph import path, random_arboric
+from repro.core.plan import GraphFingerprint
+from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
+from repro.serve.resultcache import ResultCache, make_result_cache
+
+
+def _rand_graph(n, lam, seed):
+    edges, _ = random_arboric(n, lam, np.random.default_rng(seed))
+    return build_graph(n, edges)
+
+
+def _assert_matches(g, key, res, **kwargs):
+    ref = correlation_cluster(g, key=key, **kwargs)
+    assert (res.labels == ref.labels).all()
+    assert res.cost == ref.cost
+
+
+@pytest.fixture(autouse=True)
+def _unpin_program_cache():
+    """Cost-policy heat tracking pins bucket shapes in the *global*
+    program cache; never let pins leak between tests."""
+    yield
+    from repro.core.executor import program_cache_info, program_cache_unpin
+
+    for bucket in program_cache_info()["pinned"]:
+        while program_cache_unpin(tuple(bucket)):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint: canonical, collision-checked, sensitive to what matters.
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_stable_across_equal_content():
+    g1 = build_graph(10, path(10))
+    g2 = build_graph(10, path(10))          # distinct object, same content
+    key = jax.random.PRNGKey(3)
+    fp1 = graph_fingerprint(plan_graph(g1), key)
+    fp2 = graph_fingerprint(plan_graph(g2), key)
+    assert fp1 == fp2
+    assert fp1.digest == fp2.digest and fp1.payload == fp2.payload
+
+
+def test_fingerprint_sensitivity():
+    """Differing key, eps, num_samples, method, lam, or content must miss."""
+    g = _rand_graph(20, 2, seed=0)
+    plan = plan_graph(g)
+    key = jax.random.PRNGKey(0)
+    base = graph_fingerprint(plan, key)
+    variants = [
+        graph_fingerprint(plan, jax.random.PRNGKey(1)),
+        graph_fingerprint(plan, jax.random.fold_in(key, 0)),
+        graph_fingerprint(plan, key, num_samples=4),
+        graph_fingerprint(plan, key, eps=1.0),
+        graph_fingerprint(plan_graph(g, method="pivot_raw"), key,
+                          method="pivot_raw"),
+        graph_fingerprint(plan_graph(g, lam=7), key),       # resolved λ
+        graph_fingerprint(plan_graph(_rand_graph(20, 2, seed=1)), key),
+    ]
+    digests = {fp.digest for fp in variants}
+    assert base.digest not in digests
+    assert len(digests) == len(variants), "variant fingerprints collided"
+
+
+def test_fingerprint_distinguishes_same_bucket_different_graphs():
+    """Two graphs landing in the same (R, W) bucket must not alias."""
+    a = build_graph(6, path(6))
+    b = build_graph(7, path(7))             # same (8, 4) bucket
+    key = jax.random.PRNGKey(0)
+    pa, pb = plan_graph(a), plan_graph(b)
+    assert pa.bucket == pb.bucket
+    assert graph_fingerprint(pa, key).digest != \
+        graph_fingerprint(pb, key).digest
+
+
+# ---------------------------------------------------------------------------
+# ResultCache store: LRU bounds, counters, collision verification.
+# ---------------------------------------------------------------------------
+
+
+def _fp(tag: str) -> GraphFingerprint:
+    import hashlib
+
+    payload = tag.encode()
+    return GraphFingerprint(
+        digest=hashlib.blake2b(payload, digest_size=16).hexdigest(),
+        payload=payload)
+
+
+def test_result_cache_lru_eviction_and_counters():
+    cache = ResultCache(capacity=2)
+    labels = np.arange(4, dtype=np.int32)
+    cache.put(_fp("a"), labels, 1, 0, 2)
+    cache.put(_fp("b"), labels, 2, 0, 2)
+    assert cache.get(_fp("a")) is not None      # refreshes a's recency
+    cache.put(_fp("c"), labels, 3, 0, 2)        # evicts b (LRU)
+    assert cache.get(_fp("b")) is None
+    assert cache.get(_fp("a")) is not None
+    assert cache.get(_fp("c")) is not None
+    s = cache.stats
+    assert (s.hits, s.misses, s.evictions, s.insertions) == (3, 1, 1, 3)
+    assert s.entries == 2 and len(cache) == 2
+    assert s.bytes > 0
+
+
+def test_result_cache_byte_bound_and_owned_labels():
+    cache = ResultCache(capacity=100, max_bytes=1200)
+    src = np.arange(64, dtype=np.int32)
+    cache.put(_fp("a"), src, 1, 0, 2)
+    src[:] = -1                                  # cache must own a copy
+    labels, cost, picked, rounds = cache.get(_fp("a"))
+    assert (labels == np.arange(64)).all()
+    assert (cost, picked, rounds) == (1, 0, 2)
+    cache.put(_fp("b"), np.arange(64, dtype=np.int32), 2, 1, 3)
+    cache.put(_fp("c"), np.arange(64, dtype=np.int32), 3, 1, 3)
+    assert cache.stats.evictions >= 1            # byte bound enforced
+    assert cache.stats.bytes <= 1200
+
+
+def test_result_cache_collision_is_detected_not_served():
+    """Same digest, different canonical payload ⇒ counted collision, miss."""
+    cache = ResultCache(capacity=4)
+    real = _fp("real")
+    forged = GraphFingerprint(digest=real.digest, payload=b"forged")
+    cache.put(real, np.zeros(3, np.int32), 0, 0, 1)
+    assert cache.get(forged) is None
+    assert cache.stats.collisions == 1
+    assert cache.get(real) is not None           # resident entry untouched
+
+
+def test_result_cache_put_is_idempotent():
+    cache = ResultCache(capacity=4)
+    cache.put(_fp("a"), np.zeros(3, np.int32), 0, 0, 1)
+    bytes0 = cache.stats.bytes
+    cache.put(_fp("a"), np.zeros(3, np.int32), 0, 0, 1)
+    assert cache.stats.insertions == 1 and cache.stats.bytes == bytes0
+
+
+def test_make_result_cache_specs():
+    assert make_result_cache(None) is None
+    assert make_result_cache(False) is None
+    assert make_result_cache(True).capacity == ResultCache().capacity
+    assert make_result_cache(17).capacity == 17
+    shared = ResultCache(capacity=3)
+    assert make_result_cache(shared) is shared
+    with pytest.raises(ValueError, match="result_cache"):
+        make_result_cache("yes")
+
+
+# ---------------------------------------------------------------------------
+# Cache hits: bit-exact with the cold flush, across executors × policies.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("executor", ["sync", "async", "sharded"])
+@pytest.mark.parametrize("policy", ["deadline", "coalesce", "cost"])
+def test_cache_hit_bit_exact_across_executors_and_policies(executor, policy):
+    """Cold flush, then identical repeat admissions: every hit must return
+    labels/cost/picked bit-identical to the cold result and the per-graph
+    engine, under every executor and policy combination."""
+    graphs = [build_graph(6, path(6)), _rand_graph(12, 2, seed=2),
+              _rand_graph(20, 2, seed=3)]
+    batcher = ClusterBatcher(max_batch=4, max_wait=0.01, executor=executor,
+                             policy=policy, num_samples=2)
+    cold = {}
+    for uid, g in enumerate(graphs):
+        for r in batcher.admit(ClusterRequest(uid=uid, graph=g,
+                                              key=jax.random.PRNGKey(uid))):
+            cold[r.uid] = r
+    for r in batcher.flush():
+        cold[r.uid] = r
+    assert sorted(cold) == [0, 1, 2]
+    assert batcher.stats.cache_hits == 0
+
+    for uid, g in enumerate(graphs):
+        # Fresh objects, same content + key: must hit, retiring at admit.
+        out = batcher.admit(ClusterRequest(
+            uid=100 + uid, graph=build_graph(g.n, _edges_of(g)),
+            key=jax.random.PRNGKey(uid)))
+        assert [r.uid for r in out] == [100 + uid]
+        hit = out[0]
+        assert (hit.result.labels == cold[uid].result.labels).all()
+        assert hit.result.cost == cold[uid].result.cost
+        assert hit.result.info == cold[uid].result.info
+        _assert_matches(g, jax.random.PRNGKey(uid), hit.result,
+                        num_samples=2)
+    assert batcher.stats.cache_hits == 3
+    assert batcher.stats.flushes == batcher.stats.cache_misses >= 1 \
+        or batcher.stats.flushes >= 1   # hits added no flushes
+    assert batcher.pending() == 0
+    batcher.close()
+
+
+def _edges_of(g):
+    und = g.undirected_edges()
+    return [(int(u), int(v)) for u, v in und]
+
+
+# ---------------------------------------------------------------------------
+# Single-flight: subscribers ride the primary's flush, invisibly to the
+# scheduler, and survive a poisoned flush via the requeue path.
+# ---------------------------------------------------------------------------
+
+
+def test_single_flight_subscriber_rides_primary_flush():
+    g = build_graph(10, path(10))
+    batcher = ClusterBatcher(max_batch=2)
+    key = jax.random.PRNGKey(5)
+    r_primary = ClusterRequest(uid=0, graph=g, key=key)
+    r_dup = ClusterRequest(uid=1, graph=build_graph(10, path(10)), key=key)
+    batcher.admit(r_primary)
+    batcher.admit(r_dup)
+    # The duplicate subscribed: not queued, bucket depth stays 1, so the
+    # full-bucket policy correctly did not flush a "full" 2-bucket.
+    bucket = r_primary.plan.bucket
+    assert [r.uid for r in batcher.buckets[bucket]] == [0]
+    assert batcher.stats.subscribed == 1 and batcher.stats.flushes == 0
+    assert batcher.pending() == 2
+
+    done = {r.uid: r for r in batcher.flush()}
+    assert sorted(done) == [0, 1]
+    assert (done[0].result.labels == done[1].result.labels).all()
+    assert done[0].result.cost == done[1].result.cost
+    _assert_matches(g, key, done[1].result)
+    assert batcher.stats.clustered == 2         # one row, two results
+    assert batcher.pending() == 0
+    # The winner was cached: a third identical admit is a pure hit.
+    out = batcher.admit(ClusterRequest(uid=2, graph=build_graph(10, path(10)),
+                                       key=key))
+    assert [r.uid for r in out] == [2] and batcher.stats.cache_hits == 1
+
+
+class _WithholdingExecutor(AsyncExecutor):
+    """Refuses to retire handles while ``withhold`` is set, keeping
+    submitted flushes pinned in flight from the batcher's point of view."""
+
+    def __init__(self):
+        super().__init__()
+        self.withhold = False
+
+    def retire(self):
+        if self.withhold:
+            return []
+        return super().retire()
+
+
+def test_subscriber_to_in_flight_request():
+    """A duplicate arriving while the primary is already *in flight* (not
+    queued) must still subscribe, not pack a new row."""
+    ex = _WithholdingExecutor()
+    g = build_graph(8, path(8))
+    key = jax.random.PRNGKey(9)
+    batcher = ClusterBatcher(max_batch=2, executor=ex)
+    ex.withhold = True
+    batcher.admit(ClusterRequest(uid=0, graph=g, key=key))
+    batcher.admit(ClusterRequest(uid=1, graph=build_graph(6, path(6)),
+                                 key=jax.random.PRNGKey(1)))
+    batcher.admit(ClusterRequest(uid=2, graph=build_graph(8, path(8)),
+                                 key=jax.random.PRNGKey(2)))   # fills (8,4)
+    # (8, 4) flushed but withheld from harvest; admit a duplicate of uid=0
+    # while its primary is in flight.
+    assert batcher.stats.flushes == 1
+    dup = ClusterRequest(uid=3, graph=build_graph(8, path(8)), key=key)
+    batcher.admit(dup)
+    assert batcher.stats.subscribed == 1 and batcher.stats.cache_hits == 0
+    ex.withhold = False
+    done = {r.uid: r for r in batcher.flush()}
+    assert sorted(done) == [0, 1, 2, 3]
+    assert (done[3].result.labels == done[0].result.labels).all()
+    assert done[3].result.cost == done[0].result.cost
+    _assert_matches(g, key, done[3].result)
+
+
+class _ExplodingOutput:
+    """Device-output stand-in: reports ready, then fails the fetch."""
+
+    def is_ready(self):
+        return True
+
+    def __array__(self, *args, **kwargs):
+        raise RuntimeError("device fetch exploded")
+
+
+class _PoisonOnceExecutor(AsyncExecutor):
+    """Poisons the next submitted flush's outputs so its fetch fails —
+    the poisoned-handle path of the harvest."""
+
+    def __init__(self):
+        super().__init__()
+        self.poison_next = False
+
+    def _post_submit(self, handle):
+        if self.poison_next:
+            handle._outputs = (_ExplodingOutput(),) * 4
+            self.poison_next = False
+
+
+def test_subscribers_requeue_and_retry_on_poisoned_flush():
+    """A failed flush requeues its primaries with subscribers attached —
+    the retry serves both, bit-exactly; nobody is dropped."""
+    ex = _PoisonOnceExecutor()
+    batcher = ClusterBatcher(max_batch=4, executor=ex)
+    g = build_graph(10, path(10))
+    key = jax.random.PRNGKey(4)
+    primary = ClusterRequest(uid=0, graph=g, key=key)
+    batcher.admit(primary)
+    dup = ClusterRequest(uid=1, graph=build_graph(10, path(10)), key=key)
+    batcher.admit(dup)                           # subscribes to primary
+    assert batcher.stats.subscribed == 1
+    other = ClusterRequest(uid=2, graph=build_graph(6, path(6)),
+                           key=jax.random.PRNGKey(2))  # different bucket
+    batcher.admit(other)
+    # Poison the next submitted flush — buckets drain in insertion order,
+    # so the primary's bucket gets the bad handle; ``other``'s is clean.
+    ex.poison_next = True
+    with pytest.raises(RuntimeError, match="exploded"):
+        batcher.flush()                          # poisoned fetch surfaces
+    # Primary is back in its native bucket, subscriber still attached.
+    bucket = primary.plan.bucket
+    assert primary in batcher.buckets.get(bucket, [])
+    assert dup in primary.subscribers and not dup.done
+    assert batcher.pending() == 2                # other already harvested
+    done = {r.uid: r for r in batcher.flush()}   # clean retry
+    assert sorted(done) == [0, 1, 2]
+    assert (done[1].result.labels == done[0].result.labels).all()
+    _assert_matches(g, key, done[1].result)
+    _assert_matches(other.graph, jax.random.PRNGKey(2), done[2].result)
+    assert batcher.pending() == 0
+
+
+def test_cache_disabled_means_no_fingerprints_no_coalescing():
+    g = build_graph(10, path(10))
+    key = jax.random.PRNGKey(0)
+    batcher = ClusterBatcher(max_batch=4, result_cache=False)
+    r1 = ClusterRequest(uid=0, graph=g, key=key)
+    r2 = ClusterRequest(uid=1, graph=build_graph(10, path(10)), key=key)
+    batcher.admit(r1)
+    batcher.admit(r2)
+    assert r1.fingerprint is None and r2.fingerprint is None
+    assert [r.uid for r in batcher.buckets[r1.plan.bucket]] == [0, 1]
+    assert batcher.stats.subscribed == 0 and batcher.stats.cache_hits == 0
+    assert batcher.stats.result_cache is None
+    done = {r.uid: r for r in batcher.flush()}
+    assert (done[0].result.labels == done[1].result.labels).all()
+
+
+def test_shared_cache_across_engines():
+    """A ResultCache instance passed to two engines shares winners: the
+    second engine's first admission of known content is a pure hit."""
+    shared = ResultCache(capacity=64)
+    g = build_graph(12, path(12))
+    key = jax.random.PRNGKey(6)
+    a = ClusterBatcher(max_batch=1, result_cache=shared)
+    done_a = {r.uid: r
+              for r in a.admit(ClusterRequest(uid=0, graph=g, key=key))}
+    done_a.update((r.uid, r) for r in a.flush())
+    b = ClusterBatcher(max_batch=1, result_cache=shared)
+    out = b.admit(ClusterRequest(uid=0, graph=build_graph(12, path(12)),
+                                 key=key))
+    assert len(out) == 1 and b.stats.cache_hits == 1
+    assert b.stats.flushes == 0
+    assert (out[0].result.labels == done_a[0].result.labels).all()
+    assert shared.stats.hits == 1
+    # Engine-level misses are per engine; the shared stats object is the
+    # cache's own lifetime view, surfaced on both engines' stats.
+    assert a.stats.result_cache is shared.stats
+    assert b.stats.result_cache is shared.stats
+
+
+def test_eviction_causes_refetch_not_wrong_result():
+    """A capacity-1 cache alternating two graphs always re-flushes the
+    evicted one — never serves the wrong entry."""
+    cache = ResultCache(capacity=1)
+    batcher = ClusterBatcher(max_batch=1, result_cache=cache)
+    g_a, g_b = build_graph(6, path(6)), build_graph(7, path(7))
+    for rep in range(2):
+        for uid, g in ((0, g_a), (1, g_b)):
+            out = batcher.admit(ClusterRequest(
+                uid=10 * rep + uid, graph=build_graph(g.n, _edges_of(g)),
+                key=jax.random.PRNGKey(uid)))
+            out.extend(batcher.flush())
+            _assert_matches(g, jax.random.PRNGKey(uid), out[0].result)
+    assert cache.stats.evictions >= 2
+    assert batcher.stats.cache_hits == 0         # always evicted in between
+    assert batcher.stats.clustered == 4
+
+
+# ---------------------------------------------------------------------------
+# Stats: snapshot() deep-copies the nested mutable fields.
+# ---------------------------------------------------------------------------
+
+
+def test_stats_snapshot_is_deep():
+    batcher = ClusterBatcher(max_batch=1)
+    snap = batcher.stats.snapshot()
+    batcher.admit(ClusterRequest(uid=0, graph=build_graph(6, path(6)),
+                                 key=jax.random.PRNGKey(0)))
+    batcher.flush()
+    live = batcher.stats
+    assert live.latency.total_flushes - snap.latency.total_flushes == 1
+    assert live.result_cache.insertions - snap.result_cache.insertions == 1
+    # The shallow copy this replaces would alias both nested objects and
+    # read deltas of zero.
+    import dataclasses as dc
+
+    shallow = dc.replace(live)
+    assert shallow.latency is live.latency
+    assert batcher.stats.snapshot().latency is not live.latency
