@@ -106,6 +106,10 @@ def main():
                     default="sync")
     ap.add_argument("--policy", choices=list(POLICY_NAMES), default="full",
                     help="scheduling policy for the serving-style pass")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep kernel block shapes per bucket tier "
+                         "(after the cold/steady passes, so those stay "
+                         "cold) and emit the tuning block")
     ap.add_argument("--json", default="BENCH_batch.json",
                     help="machine-readable results path ('' to skip)")
     args = ap.parse_args()
@@ -155,6 +159,25 @@ def main():
 
     assert batch_compiles <= len(buckets) + 1, (
         "bucket contract violated: compiles must track buckets, not graphs")
+
+    # --- autotune pass: sweep kernel block shapes over the real buckets ----
+    # Runs after the cold/steady passes so those numbers stay untuned and
+    # comparable across PRs; the tuning block reports the per-tier winners
+    # and the measured default-vs-tuned kernel speedup.
+    tuning_block = {"enabled": bool(args.autotune)}
+    if args.autotune:
+        t0 = time.perf_counter()
+        warmer = ClusterBatcher(max_batch=32, executor=args.executor)
+        warmer.warmup(graphs, autotune=True)
+        tuning_block.update(warmer.stats.tuning or {})
+        tuning_block["sweep_wall_s"] = time.perf_counter() - t0
+        for rec in tuning_block.get("sweep_log", []):
+            print(f"[tuning] {rec['kernel']:12s} "
+                  f"{rec['R']}x{rec['W']} B={rec['batch']:4d} "
+                  f"winner={rec['winner']:4d} "
+                  f"default={rec['default_ms']:7.2f}ms "
+                  f"tuned={rec['winner_ms']:7.2f}ms "
+                  f"speedup={rec['speedup_vs_default']:.2f}x")
 
     # --- serving pass: same workload through the scheduler-driven engine ----
     bench_serve_policy(graphs, lams, args.policy, args.executor)  # warm
@@ -221,6 +244,11 @@ def main():
         if cost_stats is not None:      # cost policy: steal pricing counters
             serve_payload["cost"] = cost_stats()
         payload["serve"] = serve_payload
+        payload["tuning"] = tuning_block
+        # Host metadata + tuning-cache state: makes the perf trajectory
+        # comparable across machines.
+        from repro.kernels.autotune import host_provenance
+        payload["provenance"] = host_provenance()
         # program_cache now also reports lifetime compiles and the pinned
         # bucket shapes (the scheduler's eviction hints).
         payload["program_cache"] = program_cache_info()

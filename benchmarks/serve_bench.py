@@ -572,6 +572,9 @@ def main():
                     help="machine-readable results path ('' to skip)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: fewer graphs, correctness focus")
+    ap.add_argument("--autotune", action="store_true",
+                    help="sweep kernel block shapes per bucket tier during "
+                         "warmup and emit the tuning block")
     args = ap.parse_args()
     n_graphs = 32 if args.smoke else args.graphs
     # Keep the arrival gap in smoke mode: without it the stream outruns
@@ -592,9 +595,17 @@ def main():
                             num_samples=args.num_samples,
                             executor=args.executor)
     t0 = time.perf_counter()
-    compiled = warmer.warmup(g for _, g, _ in reqs)
+    compiled = warmer.warmup((g for _, g, _ in reqs),
+                             autotune=args.autotune,
+                             repeats=2 if args.smoke else 3)
     print(f"warmup: {compiled} bucket programs compiled in "
           f"{time.perf_counter() - t0:.1f}s")
+    tuning_block = {"enabled": bool(args.autotune)}
+    if args.autotune:
+        tuning_block.update(warmer.stats.tuning or {})
+        cache_info = tuning_block.get("sweeps"), tuning_block.get("hits")
+        print(f"autotune: sweeps={cache_info[0]} cache hits={cache_info[1]} "
+              f"({len(tuning_block.get('sweep_log', []))} sweep records)")
 
     # Policy comparison: full-bucket and deadline always (the cross-PR
     # baseline pair), plus the selected --policy when it is neither.
@@ -768,8 +779,13 @@ def main():
             "inflight_window_gps": window_cmp,
             "adaptive_vs_static_ratio": adaptive_ratio,
             "repeat_traffic": repeat_traffic,
+            "tuning": tuning_block,
             "program_cache": program_cache_info(),
         }
+        # Host metadata + tuning-cache state: makes the perf trajectory
+        # comparable across machines.
+        from repro.kernels.autotune import host_provenance
+        payload["provenance"] = host_provenance()
         if pad_hostile is not None:
             payload["pad_hostile"] = pad_hostile
         if eviction_churn is not None:

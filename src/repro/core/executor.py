@@ -84,7 +84,8 @@ def _gather_rows(table: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
 
 
 def _batch_pivot_cost_impl(ell, ranks_p, elig_p, m_edges, k: int,
-                           use_kernel: bool):
+                           use_kernel: bool,
+                           block_rows: Optional[Tuple[int, int]] = None):
     """Cluster + cost + select every graph of one shape bucket on device.
 
     Args:
@@ -94,10 +95,14 @@ def _batch_pivot_cost_impl(ell, ranks_p, elig_p, m_edges, k: int,
       elig_p: (B, R+1) bool degree-cap eligibility, slot R False.
       m_edges: (B,) int32 full-graph undirected edge counts.
       k: best-of-k replica count (static).
+      block_rows: tuned (neighbor_min, label_agree) kernel row tiles
+        (static; None → kernel defaults). Only affects timing — every
+        block shape produces bit-identical labels/costs/picked.
     Returns per *group* (graph) arrays:
       (labels (G, R), costs (G,), picked (G,), rounds (G,)).
     """
     B, R, W = ell.shape
+    nm_rows, la_rows = block_rows if block_rows is not None else (None, None)
     ranks = ranks_p[:, :R]
     elig = elig_p[:, :R]
     # Rank gather is loop-invariant on the jnp path — hoisted out of the
@@ -110,6 +115,9 @@ def _batch_pivot_cost_impl(ell, ranks_p, elig_p, m_edges, k: int,
         if use_kernel:
             from repro.kernels import ops as _kops  # kernels stay optional
 
+            if nm_rows is not None:
+                return _kops.neighbor_min_ell_batch(ell, ranks_p, active_p,
+                                                    block_rows=nm_rows)
             return _kops.neighbor_min_ell_batch(ell, ranks_p, active_p)
         act = _gather_rows(active_p, ell)
         return jnp.min(jnp.where(act, nbr_ranks, INF_RANK), axis=2)
@@ -159,7 +167,11 @@ def _batch_pivot_cost_impl(ell, ranks_p, elig_p, m_edges, k: int,
     if use_kernel:
         from repro.kernels import ops as _kops
 
-        agree = _kops.label_agree_ell_batch(ell, labels_p)
+        if la_rows is not None:
+            agree = _kops.label_agree_ell_batch(ell, labels_p,
+                                                block_rows=la_rows)
+        else:
+            agree = _kops.label_agree_ell_batch(ell, labels_p)
         intra_pos2 = jnp.sum(agree, axis=1)
     else:
         nbr_lab = _gather_rows(labels_p, ell)
@@ -205,12 +217,34 @@ def _mesh_cache_key(mesh: Optional[Mesh]):
 
 
 def _program_key(shape, k: int, use_kernel: bool, donate: bool,
-                 mesh: Optional[Mesh]) -> tuple:
+                 mesh: Optional[Mesh],
+                 block_rows: Optional[Tuple[int, int]] = None) -> tuple:
     """The cache key for one compiled bucket program — single definition so
     :func:`run_bucket_program` and the :func:`program_cache_contains` probe
-    can never disagree about identity."""
+    can never disagree about identity. ``block_rows`` is the *resolved*
+    tuned kernel block pair (None on the jnp path and for untuned
+    buckets), so a tuning-cache update yields a new program at the new
+    shape instead of mutating a compiled one."""
     return (tuple(int(s) for s in shape), k, use_kernel, donate,
-            _mesh_cache_key(mesh))
+            _mesh_cache_key(mesh), block_rows)
+
+
+def _resolve_block_rows(shape, use_kernel: bool,
+                        block_rows=None) -> Optional[Tuple[int, int]]:
+    """Static kernel block shapes a bucket program of ``shape`` will bake
+    in: the caller's explicit pair, else the tuning-cache winners, else
+    None (kernel default — the legacy key, so untuned buckets never
+    fragment the program cache). Normalized to None when the kernels are
+    not in play at all."""
+    if not use_kernel:
+        return None
+    if block_rows is not None:
+        if isinstance(block_rows, (tuple, list)):
+            return (int(block_rows[0]), int(block_rows[1]))
+        return (int(block_rows), int(block_rows))
+    from repro.kernels.autotune import resolve_block_rows
+
+    return resolve_block_rows(shape)
 
 
 def _key_bucket(key: tuple) -> Tuple[int, int]:
@@ -220,8 +254,10 @@ def _key_bucket(key: tuple) -> Tuple[int, int]:
 
 
 def _build_program(k: int, use_kernel: bool, donate: bool,
-                   mesh: Optional[Mesh]) -> Callable:
-    impl = partial(_batch_pivot_cost_impl, k=k, use_kernel=use_kernel)
+                   mesh: Optional[Mesh],
+                   block_rows: Optional[Tuple[int, int]] = None) -> Callable:
+    impl = partial(_batch_pivot_cost_impl, k=k, use_kernel=use_kernel,
+                   block_rows=block_rows)
     if mesh is not None:
         axis = mesh.axis_names[0]
         spec = P(axis)
@@ -281,15 +317,20 @@ def set_program_cache_capacity(capacity: int) -> int:
 
 def program_cache_contains(shape, k: int, use_kernel: bool = False,
                            donate: bool = False,
-                           mesh: Optional[Mesh] = None) -> bool:
+                           mesh: Optional[Mesh] = None,
+                           block_rows=None) -> bool:
     """Non-mutating probe: is this exact bucket program compiled?
 
     Unlike a real run this never touches the LRU order, so the serving
     cost model can price the compile a candidate (coalesced) flush shape
     would pay without distorting the recency the eviction decision reads.
+    ``block_rows`` resolves exactly as :func:`run_bucket_program` does
+    (explicit pair > tuning-cache winners > None), so probe and run can
+    never disagree about which program a flush would use.
     """
+    resolved = _resolve_block_rows(shape, use_kernel, block_rows)
     return _program_key(shape, k, use_kernel, donate,
-                        mesh) in _program_cache
+                        mesh, resolved) in _program_cache
 
 
 def program_cache_touch(bucket: Tuple[int, int]) -> int:
@@ -336,18 +377,42 @@ def program_cache_unpin(bucket: Tuple[int, int]) -> bool:
 
 def program_cache_info() -> dict:
     """Cache observability for serving stats / benchmarks."""
+    resident = {_key_bucket(key) for key in _program_cache}
     return {
         "size": len(_program_cache),
         "capacity": _program_cache_capacity,
         "evictions": _program_cache_evictions,
         "compiles": _program_cache_compiles,
         "pinned": sorted(_program_cache_pins),
+        # Learned compile walls per resident (R, W) shape — the measured
+        # priors the serving cost model's compile_charge consumes.
+        "compile_wall_ewma_ms": {
+            f"{r}x{w}": _compile_walls[(r, w)] * 1e3
+            for (r, w) in sorted(resident) if (r, w) in _compile_walls},
     }
+
+
+# Observed compile walls per (R, W) bucket shape: EWMA over every program
+# compiled at that shape (any B/k/kernel variant — the serving cost model
+# prices per bucket shape, so that is the learning granularity too).
+_compile_walls: dict = {}
+_COMPILE_EWMA_ALPHA = 0.3
+_last_compile_wall: Optional[float] = None
+
+
+def consume_compile_wall() -> Optional[float]:
+    """Compile wall (seconds) paid by the immediately preceding
+    :func:`run_bucket_program` call, or None when it hit a resident
+    program. Reading clears the stamp — executors consume it onto the
+    in-flight handle so the serving telemetry sees each compile once."""
+    global _last_compile_wall
+    wall, _last_compile_wall = _last_compile_wall, None
+    return wall
 
 
 def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
                        use_kernel: bool = False, donate: bool = False,
-                       mesh: Optional[Mesh] = None):
+                       mesh: Optional[Mesh] = None, block_rows=None):
     """Invoke the fused bucket program through the bounded program cache.
 
     The single entry point for every executor and the serving-layer warmup,
@@ -357,10 +422,25 @@ def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
     releases the inputs eagerly instead of holding two generations live,
     and the "not usable" warning is expected, not actionable.
 
+    ``block_rows`` picks the kernel row tiles baked into the program: an
+    explicit ``(neighbor_min, label_agree)`` pair, or (default) the tuning
+    cache's winners for this packed shape (:mod:`repro.kernels.autotune`),
+    or the kernel defaults when untuned. The resolved pair extends the
+    program key, so re-tuning compiles a fresh program rather than
+    repurposing an old one.
+
+    On a cache miss the first invocation is timed: jit's first call blocks
+    through trace + compile, so its wall is the compile wall. The sample
+    feeds a per-bucket-shape EWMA (surfaced via ``program_cache_info`` and
+    :func:`consume_compile_wall`) that the serving cost model learns
+    ``compile_cost_s`` from.
+
     With JAX's async dispatch this returns device arrays that may still be
     computing; callers that need the values block via ``np.asarray`` (which
     is what :class:`InFlightBucket` does on harvest).
     """
+    global _last_compile_wall
+    _last_compile_wall = None
     if use_kernel:
         # First import must happen OUTSIDE any trace: the kernels modules
         # create module-level jnp constants, and a first import from inside
@@ -369,24 +449,40 @@ def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
         from repro.kernels import ops  # noqa: F401
 
     ell = jnp.asarray(ell)
-    key = _program_key(ell.shape, k, use_kernel, donate, mesh)
+    resolved = _resolve_block_rows(ell.shape, use_kernel, block_rows)
+    key = _program_key(ell.shape, k, use_kernel, donate, mesh, resolved)
     fn = _program_cache.get(key)
-    if fn is None:
+    fresh = fn is None
+    if fresh:
         global _program_cache_compiles
         _program_cache_compiles += 1
-        fn = _build_program(k, use_kernel, donate, mesh)
+        fn = _build_program(k, use_kernel, donate, mesh, resolved)
         _program_cache[key] = fn
         _evict_to_capacity()
     else:
         _program_cache.move_to_end(key)
     args = (ell, jnp.asarray(ranks_p), jnp.asarray(elig_p),
             jnp.asarray(m_edges))
-    if donate:
-        with warnings.catch_warnings():
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable")
-            return fn(*args)
-    return fn(*args)
+
+    def _invoke():
+        if donate:
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                return fn(*args)
+        return fn(*args)
+
+    if not fresh:
+        return _invoke()
+    t0 = time.perf_counter()
+    out = _invoke()
+    wall = time.perf_counter() - t0
+    bucket = _key_bucket(key)
+    prev = _compile_walls.get(bucket)
+    _compile_walls[bucket] = wall if prev is None else (
+        _COMPILE_EWMA_ALPHA * wall + (1.0 - _COMPILE_EWMA_ALPHA) * prev)
+    _last_compile_wall = wall
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -414,13 +510,14 @@ class InFlightBucket:
 
     __slots__ = ("payload", "_outputs", "_fetched", "_lease",
                  "shape", "pack_seconds", "submitted_at", "wall_seconds",
-                 "inflight_at_submit")
+                 "inflight_at_submit", "compile_seconds")
 
     def __init__(self, outputs, payload: Any = None, lease=None,
                  shape: Optional[Tuple[int, ...]] = None,
                  pack_seconds: float = 0.0,
                  submitted_at: Optional[float] = None,
-                 inflight_at_submit: int = 1):
+                 inflight_at_submit: int = 1,
+                 compile_seconds: Optional[float] = None):
         self._outputs = outputs
         self._fetched: Optional[Tuple[np.ndarray, ...]] = None
         self.payload = payload
@@ -433,6 +530,9 @@ class InFlightBucket:
         # behind the depth−1 earlier flushes, so telemetry divides by this
         # to estimate per-flush service time.
         self.inflight_at_submit = inflight_at_submit
+        # Compile wall this flush paid (None on program-cache hits) — the
+        # serving layer feeds these into the learned compile-cost stream.
+        self.compile_seconds = compile_seconds
 
     @property
     def harvested(self) -> bool:
@@ -541,7 +641,8 @@ class _QueueExecutor:
         handle = InFlightBucket(outputs, payload=payload, lease=lease,
                                 shape=shape, pack_seconds=pack_seconds,
                                 submitted_at=submitted_at,
-                                inflight_at_submit=len(self._pending) + 1)
+                                inflight_at_submit=len(self._pending) + 1,
+                                compile_seconds=consume_compile_wall())
         self._post_submit(handle)
         if track:
             self._pending.append(handle)
@@ -712,6 +813,7 @@ __all__ = [
     "make_executor",
     "pack_and_submit",
     "run_bucket_program",
+    "consume_compile_wall",
     "program_cache_size",
     "program_cache_capacity",
     "set_program_cache_capacity",

@@ -17,8 +17,26 @@ from . import neighbor_min as _nm
 from . import ref as _ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+# Resolved ONCE at import: ``interpret`` is a jit static arg on every
+# kernel below, so re-probing the backend per call would let a mid-process
+# backend flip silently retrace the hot path. A process's backend is fixed
+# after jax initializes; tests override explicitly via set_interpret_mode.
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def interpret_mode() -> bool:
+    """The interpret flag every kernel wrapper passes (import-time fixed)."""
+    return _INTERPRET
+
+
+def set_interpret_mode(interpret: bool | None) -> bool:
+    """Override the import-time interpret resolution (tests only); returns
+    the previous value. ``None`` re-resolves from the current backend."""
+    global _INTERPRET
+    prev = _INTERPRET
+    _INTERPRET = (jax.default_backend() != "tpu") if interpret is None \
+        else bool(interpret)
+    return prev
 
 
 def neighbor_min(g, ranks: jnp.ndarray, active: jnp.ndarray,
@@ -31,27 +49,27 @@ def neighbor_min(g, ranks: jnp.ndarray, active: jnp.ndarray,
     ell = _nm.ell_from_graph(g, width=width)
     ranks_p, active_p = _nm.pad_state(jnp.asarray(ranks, jnp.int32), active)
     return _nm.neighbor_min_ell(ell, ranks_p, active_p,
-                                interpret=not _on_tpu())
+                                interpret=_INTERPRET)
 
 
 def neighbor_min_ell(ell, ranks_p, active_p, block_rows: int = 256):
     return _nm.neighbor_min_ell(ell, ranks_p, active_p,
                                 block_rows=block_rows,
-                                interpret=not _on_tpu())
+                                interpret=_INTERPRET)
 
 
 def neighbor_min_ell_batch(ell, ranks_p, active_p, block_rows: int = 256):
     """Batched (B, R, W) neighbour-min — per-round hot loop of core.batch."""
     return _nm.neighbor_min_ell_batch(ell, ranks_p, active_p,
                                       block_rows=block_rows,
-                                      interpret=not _on_tpu())
+                                      interpret=_INTERPRET)
 
 
 def label_agree_ell_batch(ell, labels_p, block_rows: int = 256):
     """Batched (B, R, W) same-label neighbour count — the device cost pass
     of core.batch (2·intra_pos when summed per graph)."""
     return _nm.label_agree_ell_batch(ell, labels_p, block_rows=block_rows,
-                                     interpret=not _on_tpu())
+                                     interpret=_INTERPRET)
 
 
 def _pad_to(x, mult, axis):
@@ -86,10 +104,11 @@ def flash_attention(q, k, v, causal: bool = True, scale: float | None = None,
         return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
     out = _fa.flash_attention(qp, kp, vp, causal=causal, scale=scale,
                               block_q=block_q, block_k=block_k,
-                              interpret=not _on_tpu(),
+                              interpret=_INTERPRET,
                               row_offset=sk0 - sq0)
     return out[:, :, :sq0, :]
 
 
 __all__ = ["neighbor_min", "neighbor_min_ell", "neighbor_min_ell_batch",
-           "label_agree_ell_batch", "flash_attention"]
+           "label_agree_ell_batch", "flash_attention",
+           "interpret_mode", "set_interpret_mode"]

@@ -25,6 +25,18 @@ def neighbor_min_ref(ell: jnp.ndarray, ranks: jnp.ndarray,
     return jnp.min(jnp.where(act, vals, INF_I32), axis=1)
 
 
+def label_agree_ref(ell: jnp.ndarray, labels_p: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.label_agree_ell_batch on one graph slice.
+
+    ell: (n, W) neighbour ids, pad entries = n; labels_p: (n+1,) labels
+    with slot n = -1 sentinel (never equal to a real label). Returns the
+    per-vertex count of ELL neighbours sharing the vertex's label.
+    """
+    nbr = jnp.take(labels_p, ell, axis=0, fill_value=-1)
+    own = labels_p[: ell.shape[0]]
+    return jnp.sum((nbr == own[:, None]).astype(jnp.int32), axis=1)
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True, scale: float | None = None
                   ) -> jnp.ndarray:
@@ -46,4 +58,5 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.astype(q.dtype)
 
 
-__all__ = ["neighbor_min_ref", "attention_ref", "INF_I32"]
+__all__ = ["neighbor_min_ref", "label_agree_ref", "attention_ref",
+           "INF_I32"]

@@ -395,9 +395,114 @@ class Roofline:
         }
 
 
+# --- Batched ELL kernel models (the clustering engine's hot loop) ----------
+#
+# The two Pallas kernels the fused bucket program spends its rounds in
+# (repro.kernels.neighbor_min): one invocation sweeps a (B, R, W) int32 ELL
+# adjacency. These analytic models give the autotuner's perf tests a
+# hardware lower bound to assert measured walls against — a wall below the
+# model bound means the measurement (or the model) is broken.
+
+ELL_KERNELS = ("neighbor_min", "label_agree")
+
+
+def ell_kernel_flops(kernel: str, b: int, r: int, w: int) -> float:
+    """Element-op count of one batched ELL kernel invocation.
+
+    Per (entry, row, col): ``neighbor_min`` does a rank gather, an activity
+    gather, a select and a running min (≈4 ops); ``label_agree`` does a
+    label gather, a compare and an accumulate (≈3 ops). Element ops, not
+    MXU FLOPs — these kernels are VPU/gather bound by construction.
+    """
+    if kernel not in ELL_KERNELS:
+        raise ValueError(f"unknown ELL kernel {kernel!r}; "
+                         f"expected one of {ELL_KERNELS}")
+    per_elem = 4.0 if kernel == "neighbor_min" else 3.0
+    return per_elem * b * r * w
+
+
+def ell_kernel_bytes(kernel: str, b: int, r: int, w: int) -> float:
+    """Lower bound on HBM traffic of one batched ELL kernel invocation.
+
+    int32 throughout: the (B, R, W) ELL read once; one gathered word per
+    ELL entry per gathered table (``neighbor_min`` gathers ranks and
+    activity, ``label_agree`` gathers labels); the (B, R+1) state vectors
+    read once; the (B, R) output written once. A lower bound — gathers
+    that miss cache cost full lines, so real traffic is ≥ this.
+    """
+    if kernel not in ELL_KERNELS:
+        raise ValueError(f"unknown ELL kernel {kernel!r}; "
+                         f"expected one of {ELL_KERNELS}")
+    n_tables = 2 if kernel == "neighbor_min" else 1
+    ell_words = b * r * w
+    gather_words = n_tables * ell_words
+    state_words = n_tables * b * (r + 1)
+    out_words = b * r
+    return 4.0 * (ell_words + gather_words + state_words + out_words)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRoofline:
+    """Roofline model of one batched ELL kernel invocation (no
+    collectives — batch entries are independent)."""
+
+    kernel: str
+    b: int
+    r: int
+    w: int
+    flops: float
+    bytes_hbm: float
+    peak_flops: float
+    mem_bw: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / self.mem_bw
+
+    @property
+    def t_model(self) -> float:
+        """The model's lower bound on the invocation wall (seconds)."""
+        return max(self.t_compute, self.t_memory)
+
+    @property
+    def bottleneck(self) -> str:
+        return "compute" if self.t_compute >= self.t_memory else "memory"
+
+    def as_dict(self) -> dict:
+        return {
+            "kernel": self.kernel,
+            "shape": [self.b, self.r, self.w],
+            "flops": self.flops,
+            "bytes_hbm": self.bytes_hbm,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_model_s": self.t_model,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def ell_kernel_roofline(kernel: str, b: int, r: int, w: int, *,
+                        peak_flops: float = PEAK_FLOPS_BF16,
+                        mem_bw: float = HBM_BW) -> KernelRoofline:
+    """Roofline bound for one ``(B, R, W)`` batched ELL kernel invocation
+    (TPU v5e constants by default — on other hardware the bound is still a
+    valid *lower* bound for slower parts, which is how the perf tests use
+    it: measured walls must never beat the model)."""
+    return KernelRoofline(kernel=kernel, b=int(b), r=int(r), w=int(w),
+                          flops=ell_kernel_flops(kernel, b, r, w),
+                          bytes_hbm=ell_kernel_bytes(kernel, b, r, w),
+                          peak_flops=peak_flops, mem_bw=mem_bw)
+
+
 __all__ = [
     "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW",
     "collective_stats", "CollectiveStats",
     "forward_flops", "step_flops", "model_flops", "active_param_count",
     "hbm_bytes", "Roofline",
+    "ELL_KERNELS", "ell_kernel_flops", "ell_kernel_bytes",
+    "KernelRoofline", "ell_kernel_roofline",
 ]

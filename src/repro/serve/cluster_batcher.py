@@ -148,6 +148,9 @@ class ClusterStats(EngineStats):
     subscribed: int = 0          # single-flight riders on identical requests
     latency: FlushTelemetry = dataclasses.field(
         default_factory=FlushTelemetry)  # per-bucket flush wall/pack times
+    # Autotune telemetry from the last warmup(autotune=True): tuning-cache
+    # counters (hits/misses/stale/sweeps) + per-tier sweep records.
+    tuning: Optional[dict] = None
     # Live counters of the engine's result cache (None = caching off).
     # Cache-lifetime, not engine-lifetime, when the cache is shared
     # between engines; the scalar cache_hits/cache_misses above are this
@@ -425,7 +428,8 @@ class ClusterBatcher:
                 for reqs in self.buckets.values() if reqs]
         return max(ages, default=0.0)
 
-    def warmup(self, graphs) -> int:
+    def warmup(self, graphs, autotune: bool = False,
+               candidates=None, repeats: int = 3) -> int:
         """Precompile every pow2 sub-batch program the workload can hit.
 
         Deadline flushes run partial buckets at power-of-two sub-batch
@@ -438,23 +442,36 @@ class ClusterBatcher:
         sub-batches at its device count, so it usually has fewer) via
         zero-filled dummy tensors; nothing is returned to callers.
         Returns the number of programs compiled.
+
+        ``autotune=True`` first sweeps the kernel ``block_rows``
+        candidate set (:mod:`repro.kernels.autotune`) per bucket tier over
+        *real packed bucket tensors* built from the sample graphs, records
+        each winner in the process tuning cache, and only then runs the
+        compile loop — so the compiled programs bake the tuned block
+        shapes in (the program key carries them). Tiers whose winners are
+        already cached are skipped entirely: a second process warming up
+        against a populated ``REPRO_TUNING_CACHE`` performs zero sweep
+        timings (the cache hit counters prove it). Sweep telemetry lands
+        in ``stats.tuning``.
         """
         from repro.core.executor import program_cache_size, \
             run_bucket_program
 
         before = program_cache_size()
         k = self.num_samples
-        seen = set()
+        by_bucket: Dict[Tuple[int, int], List[GraphPlan]] = {}
         for g in graphs:
-            bucket = plan_graph(g, method=self.method, eps=self.eps).bucket
-            if bucket in seen:
-                continue
-            seen.add(bucket)
+            plan = plan_graph(g, method=self.method, eps=self.eps)
+            by_bucket.setdefault(plan.bucket, []).append(plan)
+        for bucket, plans in by_bucket.items():
             R, W = bucket
             pads, g_pad = set(), 1
             while g_pad <= next_pow2(self.max_batch):
                 pads.add(self.executor.group_pad(g_pad))
                 g_pad *= 2
+            if autotune:
+                self._autotune_bucket(plans, sorted(pads),
+                                      candidates, repeats)
             for gp in sorted(pads):
                 b = gp * k
                 ell = jnp.full((b, R, W), R, dtype=jnp.int32)
@@ -465,7 +482,48 @@ class ClusterBatcher:
                 jax.block_until_ready(run_bucket_program(
                     ell, ranks, elig, m, k=k, use_kernel=self.use_kernel,
                     donate=self.pool.donate, mesh=self.executor.mesh))
+        if autotune:
+            from repro.kernels.autotune import tuning_info
+
+            self.stats.tuning = tuning_info()
         return program_cache_size() - before
+
+    def _autotune_bucket(self, plans, pads, candidates, repeats) -> None:
+        """Sweep kernel block shapes for one bucket, per distinct batch
+        tier, over real packed tensors — skipping already-tuned tiers.
+
+        The sweep times the kernels directly (engine ``use_kernel`` does
+        not matter: winners are recorded for whichever engine does run the
+        kernel path). Tier check goes through ``TuningCache.get`` with
+        counting on, so warmup hits/misses are observable engine-side.
+        """
+        from repro.core.plan import _pack_bucket
+        from repro.kernels import autotune as _at
+
+        cache = _at.tuning_cache()
+        R, W = plans[0].bucket
+        k = self.num_samples
+        done_tiers = set()
+        for gp in pads:
+            tier = _at.batch_tier(gp * k)
+            if tier in done_tiers:
+                continue
+            done_tiers.add(tier)
+            if all(cache.get(kern, R, W, tier) is not None
+                   for kern in _at.KERNELS):
+                continue        # tuned by an earlier process: zero sweeps
+            # Fill the padded group axis with real plans (cycling the
+            # samples) so the measured tensors match what flushes run.
+            use = list(plans)
+            while len(use) < gp:
+                use.extend(plans)
+            use = use[:gp]
+            keys = [sample_keys(jax.random.PRNGKey(i), k)
+                    for i in range(len(use))]
+            ell, ranks, elig, _m, _pad = _pack_bucket(use, keys, k=k,
+                                                      g_pad=gp)
+            _at.sweep_bucket(ell, ranks, elig, cache=cache,
+                             candidates=candidates, repeats=repeats)
 
     # -- Internals ---------------------------------------------------------
 
@@ -642,7 +700,13 @@ class ClusterBatcher:
                 bucket = (handle.shape[1], handle.shape[2])
                 self.stats.latency.record(bucket, handle.wall_seconds,
                                           handle.pack_seconds,
-                                          depth=handle.inflight_at_submit)
+                                          depth=handle.inflight_at_submit,
+                                          compile_s=handle.compile_seconds)
+                if handle.compile_seconds is not None:
+                    # Program-cache miss: feed the observed compile wall
+                    # into the learned compile-cost stream.
+                    self.stats.latency.record_compile(
+                        bucket, handle.compile_seconds)
                 self.policy.on_retire(bucket, self.stats.latency)
         if defer:
             return first_err

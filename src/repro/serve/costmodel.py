@@ -61,12 +61,15 @@ class FlushCost:
     caller should fall back to its unpriced behaviour.
     """
 
-    benefit_s: float          # deadline slack the stolen requests save
+    benefit_s: float          # deadline slack saved + avoided own flushes
     pad_cost_s: float         # est. device time of added pad entries + rows
     compile_cost_s: float     # expected compile charge of the inflated B
     pad_entries_added: int    # marginal empty entries ((B1−B0) − stolen·k)
     vertex_waste_added: int   # Σ (R − R_src) over stolen groups (rows)
     priced: bool = True
+    # Portion of benefit_s credited for source-bucket flushes this steal
+    # avoids (observed compile-free walls only — zero for cold sources).
+    own_flush_credit_s: float = 0.0
 
     @property
     def total_cost_s(self) -> float:
@@ -88,10 +91,13 @@ class FlushCostModel:
     CostAwareCoalescingPolicy`.
 
     Args:
-      compile_cost_s: charge applied when the steal inflates the batch
-        axis to a ``(B, R, W)`` shape with no resident compiled program
-        (only meaningful once :meth:`bind_engine` has provided the exact
-        program signature; unbound models never charge a compile).
+      compile_cost_s: *static prior* charged when the steal inflates the
+        batch axis to a ``(B, R, W)`` shape with no resident compiled
+        program and no compile wall has been observed yet; once telemetry
+        carries observed compile walls the learned per-shape EWMA replaces
+        this prior (only meaningful once :meth:`bind_engine` has provided
+        the exact program signature; unbound models never charge a
+        compile).
       service_floor_s: lower bound on the assumed flush service time. The
         default 0.0 makes pricing purely telemetry-driven; simulations and
         deterministic benches set a pessimistic floor so decisions do not
@@ -152,11 +158,19 @@ class FlushCostModel:
             return self.service_floor_s if self.service_floor_s > 0 else None
         return max(ewma, self.service_floor_s)
 
-    def compile_charge(self, bucket: BucketKey, b1: int) -> float:
+    def compile_charge(self, bucket: BucketKey, b1: int,
+                       telemetry=None) -> float:
         """Expected compile cost of running the inflated batch axis ``b1``
         at ``bucket`` — zero when the exact program is resident or the
-        model has no binding to know the program signature."""
-        if not self._bound or self.compile_cost_s == 0.0:
+        model has no binding to know the program signature.
+
+        With ``telemetry`` the charge is *learned*: the per-shape EWMA of
+        observed compile walls (fed by the executor's compile stamps via
+        :meth:`FlushTelemetry.record_compile`), falling back to the global
+        compile EWMA, and only then to the static ``compile_cost_s``
+        prior — so warmed tiers are priced at what compiles actually cost
+        on this host, not at a guess."""
+        if not self._bound:
             return 0.0
         from repro.core.executor import program_cache_contains
 
@@ -165,6 +179,12 @@ class FlushCostModel:
                                   use_kernel=self._use_kernel,
                                   donate=self._donate, mesh=self._mesh):
             return 0.0
+        if telemetry is not None:
+            learned = telemetry.bucket_ewma_compile(bucket)
+            if learned is None:
+                learned = telemetry.ewma_compile
+            if learned is not None:
+                return learned
         return self.compile_cost_s
 
     # -- the decision -----------------------------------------------------
@@ -181,11 +201,18 @@ class FlushCostModel:
         slack saved: a rejected candidate waits out the remainder of its
         own ``max_wait`` budget, so riding this flush saves
         ``max_wait − age`` seconds (its full age when no deadline is
-        configured). Cost is the marginal padding the promotion adds —
-        pow2 group inflation priced at the bucket's observed per-entry
-        service time, plus the promoted-row waste of running each stolen
-        entry at the larger ``R`` — and the compile the inflated batch
-        axis would pay if its program is not resident.
+        configured) — plus, per distinct source bucket, the *avoided
+        own-flush* service time: absorbing a source's stragglers spares
+        the deadline flush that source would otherwise run. That credit
+        uses only the source's observed compile-free wall EWMA
+        (:meth:`FlushTelemetry.bucket_ewma_wall_xc`) — never the floor or
+        the global fallback — so cold sources earn nothing and a
+        pessimistic ``service_floor_s`` keeps its one-sided meaning. Cost
+        is the marginal padding the promotion adds — pow2 group inflation
+        priced at the bucket's observed per-entry service time, plus the
+        promoted-row waste of running each stolen entry at the larger
+        ``R`` — and the (learned, see :meth:`compile_charge`) compile the
+        inflated batch axis would pay if its program is not resident.
         """
         if not candidates:
             return _ABSTAIN
@@ -218,12 +245,21 @@ class FlushCostModel:
         vertex_cost = sum(
             k * max(0, R - r_src) / R for (r_src, _), _ in candidates
         ) * per_entry
-        compile_cost = self.compile_charge(bucket, b1) if b1 > b0 else 0.0
-        return FlushCost(benefit_s=benefit,
+        compile_cost = self.compile_charge(bucket, b1, telemetry) \
+            if b1 > b0 else 0.0
+        own_flush_credit = 0.0
+        xc = getattr(telemetry, "bucket_ewma_wall_xc", None)
+        if xc is not None:
+            for src in {src for src, _ in candidates}:
+                observed = xc(src)
+                if observed is not None:
+                    own_flush_credit += observed
+        return FlushCost(benefit_s=benefit + own_flush_credit,
                          pad_cost_s=pad_cost + vertex_cost,
                          compile_cost_s=compile_cost,
                          pad_entries_added=pad_entries,
-                         vertex_waste_added=vertex_rows)
+                         vertex_waste_added=vertex_rows,
+                         own_flush_credit_s=own_flush_credit)
 
 
 class ShapeHeat:

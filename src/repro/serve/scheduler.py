@@ -131,10 +131,12 @@ class FlushTelemetry:
         self._ewma_wall: Optional[float] = None
         self._ewma_service: Optional[float] = None
         self._ewma_pack: Optional[float] = None
+        self._ewma_compile: Optional[float] = None
         self._per_bucket: Dict[BucketKey, dict] = {}
 
     def record(self, bucket: BucketKey, wall_s: float,
-               pack_s: float = 0.0, depth: int = 1) -> None:
+               pack_s: float = 0.0, depth: int = 1,
+               compile_s: Optional[float] = None) -> None:
         """Account one completed flush of shape ``bucket``.
 
         ``depth`` is how many flushes were in flight when this one was
@@ -143,6 +145,12 @@ class FlushTelemetry:
         so ``wall / depth`` estimates the per-flush *service* time — the
         quantity the adaptive window must use, or queue wait would feed
         back into a larger window which creates more queue wait.
+
+        ``compile_s`` is the compile wall this flush paid (None on
+        program-cache hits): subtracted to maintain a *compile-free* wall
+        EWMA per bucket, the steady-state service estimate the cost
+        model's own-flush steal credit reads — crediting a first flush's
+        compile-inflated wall would overprice avoided flushes wildly.
         """
         a = self.alpha
         self.total_flushes += 1
@@ -153,19 +161,48 @@ class FlushTelemetry:
             else a * service + (1 - a) * self._ewma_service
         self._ewma_pack = pack_s if self._ewma_pack is None \
             else a * pack_s + (1 - a) * self._ewma_pack
-        rec = self._per_bucket.get(bucket)
-        if rec is None:
-            rec = self._per_bucket[bucket] = {
-                "wall": deque(maxlen=self.window),
-                "pack": deque(maxlen=self.window),
-                "count": 0,
-                "ewma_wall": None,
-            }
+        rec = self._bucket_rec(bucket)
         rec["wall"].append(wall_s)
         rec["pack"].append(pack_s)
         rec["count"] += 1
         rec["ewma_wall"] = wall_s if rec["ewma_wall"] is None \
             else a * wall_s + (1 - a) * rec["ewma_wall"]
+        wall_xc = max(0.0, wall_s - (compile_s or 0.0))
+        rec["ewma_wall_xc"] = wall_xc if rec.get("ewma_wall_xc") is None \
+            else a * wall_xc + (1 - a) * rec["ewma_wall_xc"]
+
+    def _bucket_rec(self, bucket: BucketKey) -> dict:
+        rec = self._per_bucket.get(bucket)
+        if rec is None:
+            rec = self._per_bucket[bucket] = {
+                "wall": deque(maxlen=self.window),
+                "pack": deque(maxlen=self.window),
+                "compile": deque(maxlen=self.window),
+                "count": 0,
+                "compiles": 0,
+                "ewma_wall": None,
+                "ewma_wall_xc": None,
+                "ewma_compile": None,
+            }
+        return rec
+
+    def record_compile(self, bucket: BucketKey, wall_s: float) -> None:
+        """Account one observed compile wall for shape ``bucket``.
+
+        The executor stamps ``compile_seconds`` on each in-flight handle
+        that missed the program cache; the batcher feeds the samples here
+        on harvest. Windowed like wall/pack; the per-shape EWMA is the
+        learned prior :meth:`~repro.serve.costmodel.FlushCostModel.
+        compile_charge` prefers over its static ``compile_cost_s``.
+        """
+        a = self.alpha
+        self._ewma_compile = wall_s if self._ewma_compile is None \
+            else a * wall_s + (1 - a) * self._ewma_compile
+        rec = self._bucket_rec(bucket)
+        rec["compile"].append(wall_s)
+        rec["compiles"] += 1
+        rec["ewma_compile"] = wall_s if rec["ewma_compile"] is None \
+            else a * wall_s + (1 - a) * rec["ewma_compile"]
 
     @property
     def ewma_wall(self) -> Optional[float]:
@@ -188,6 +225,23 @@ class FlushTelemetry:
         rec = self._per_bucket.get(bucket)
         return None if rec is None else rec["ewma_wall"]
 
+    @property
+    def ewma_compile(self) -> Optional[float]:
+        """EWMA observed compile wall seconds across all buckets (None =
+        no compile observed yet)."""
+        return self._ewma_compile
+
+    def bucket_ewma_compile(self, bucket: BucketKey) -> Optional[float]:
+        rec = self._per_bucket.get(bucket)
+        return None if rec is None else rec.get("ewma_compile")
+
+    def bucket_ewma_wall_xc(self, bucket: BucketKey) -> Optional[float]:
+        """Compile-free wall EWMA — the steady-state service estimate the
+        cost model's own-flush steal credit is allowed to use (observed
+        flushes only; no floor/global fallback)."""
+        rec = self._per_bucket.get(bucket)
+        return None if rec is None else rec.get("ewma_wall_xc")
+
     def summary(self) -> Dict[str, dict]:
         """Per-bucket-shape latency percentiles, JSON-ready (ms).
 
@@ -203,15 +257,22 @@ class FlushTelemetry:
         for (R, W), rec in sorted(self._per_bucket.items()):
             wall = np.asarray(rec["wall"], dtype=np.float64)
             pack = np.asarray(rec["pack"], dtype=np.float64)
-            out[f"{R}x{W}"] = {
+            entry = {
                 "flushes_total": rec["count"],
                 "window_samples": int(len(wall)),
-                "wall_p50_ms": float(np.percentile(wall, 50)) * 1e3,
-                "wall_p99_ms": float(np.percentile(wall, 99)) * 1e3,
-                "pack_p50_ms": float(np.percentile(pack, 50)) * 1e3,
-                "pack_p99_ms": float(np.percentile(pack, 99)) * 1e3,
-                "wall_ewma_ms": rec["ewma_wall"] * 1e3,
             }
+            if len(wall):       # a shape may have compile samples only
+                entry.update(
+                    wall_p50_ms=float(np.percentile(wall, 50)) * 1e3,
+                    wall_p99_ms=float(np.percentile(wall, 99)) * 1e3,
+                    pack_p50_ms=float(np.percentile(pack, 50)) * 1e3,
+                    pack_p99_ms=float(np.percentile(pack, 99)) * 1e3,
+                    wall_ewma_ms=rec["ewma_wall"] * 1e3,
+                )
+            if rec.get("compiles"):
+                entry["compiles_total"] = rec["compiles"]
+                entry["compile_wall_ewma_ms"] = rec["ewma_compile"] * 1e3
+            out[f"{R}x{W}"] = entry
         return out
 
 
