@@ -24,7 +24,10 @@ tracking):
     output is bit-identical, which is also asserted)
   * p50/p99 over the steady-state repeats
   * graphs/sec of the serving pass under ``--policy`` + its flush-latency
-    telemetry (p50/p99 wall + pack per bucket shape)
+    telemetry (p50/p99 wall + assemble per bucket shape; since the PR 8
+    admission-time packing split the pre-split ``pack_*`` fields are
+    renamed ``assemble_*`` and per-request ``build_*`` stats ride along,
+    plus ``host_pack`` wall fractions of both streams over the serve wall)
   * compile counts: per-graph MIS programs vs batch bucket programs, plus
     the bounded program-cache state (size/capacity/evictions)
 """
@@ -192,6 +195,11 @@ def main():
           f"graphs/s  flushes={serve_stats.flushes} "
           f"(deadline={serve_stats.deadline_flushes}, "
           f"stolen={serve_stats.stolen_requests})")
+    print(f"[serve]  host packing: build "
+          f"{serve_stats.latency.total_build_s / t_serve * 100:5.1f}% of "
+          f"wall (admission)  assemble "
+          f"{serve_stats.latency.total_assemble_s / t_serve * 100:5.1f}% "
+          "(flush path)")
 
     if args.json:
         payload = {
@@ -226,6 +234,17 @@ def main():
             "stolen_requests": serve_stats.stolen_requests,
             "padded_slots": serve_stats.padded_slots,
             "flush_latency": serve_stats.latency.summary(),
+            # The two host packing streams of the admission-time split as
+            # fractions of the serve wall: build = per-request row builds
+            # at admission, assemble = per-bucket staging assembly on the
+            # flush path (the only packing cost left there).
+            "host_pack": {
+                "build_wall_s": serve_stats.latency.total_build_s,
+                "assemble_wall_s": serve_stats.latency.total_assemble_s,
+                "build_frac": serve_stats.latency.total_build_s / t_serve,
+                "assemble_frac":
+                    serve_stats.latency.total_assemble_s / t_serve,
+            },
             # Result-cache counters ride along for cross-PR tracking even
             # though this workload is all-unique (hits stay 0 here; the
             # repeat-traffic scenario in serve_bench exercises them).

@@ -108,7 +108,9 @@ def drive(batcher: ClusterBatcher, n_requests: int, label: str):
               f"in_flight_peak={s.in_flight_peak}")
     if s.latency.total_flushes:
         print(f"flush latency: wall EWMA={s.latency.ewma_wall * 1e3:.1f}ms  "
-              f"pack EWMA={s.latency.ewma_pack * 1e3:.1f}ms")
+              f"assemble EWMA={s.latency.ewma_assemble * 1e3:.1f}ms"
+              + (f"  build EWMA={s.latency.ewma_build * 1e3:.2f}ms"
+                 if s.latency.total_builds else ""))
     print(f"max in-engine wait: {max(waits):.3f}s")
 
 

@@ -23,7 +23,10 @@ from .arboricity import arboricity_bounds, degeneracy_parallel, degeneracy_seque
 from .batch import (
     BucketBufferPool,
     GraphPlan,
+    PackedRows,
     PackStats,
+    build_packed_rows,
+    pack_bucket,
     plan_graph,
     promote_plan,
 )
@@ -76,10 +79,13 @@ __all__ = [
     "correlation_cluster",
     "correlation_cluster_batch",
     "GraphPlan",
+    "PackedRows",
     "PackStats",
     "BucketBufferPool",
     "plan_graph",
     "promote_plan",
+    "build_packed_rows",
+    "pack_bucket",
     "estimate_pack_stats",
     "GraphFingerprint",
     "graph_fingerprint",

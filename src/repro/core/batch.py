@@ -9,8 +9,9 @@ count is O(#buckets · log B), not O(#graphs).
 The engine is layered (this module is the thin composition of the two):
 
 * :mod:`repro.core.plan` — host side: ``plan_graph`` bucketing, the
-  ``_pack_bucket`` ELL packer, ``PackStats`` pad accounting, and the
-  lease-based ``BucketBufferPool`` staging reuse.
+  ``pack_bucket`` ELL packer (with prebuilt ``PackedRows`` assembly for
+  the serving layer's admission-time packing), ``PackStats`` pad
+  accounting, and the lease-based ``BucketBufferPool`` staging reuse.
 * :mod:`repro.core.executor` — device side: the fused MIS + PIVOT capture
   + cost + best-of-k program, the bounded LRU of compiled bucket programs,
   and the ``BucketExecutor`` implementations (``sync`` blocking,
@@ -37,11 +38,12 @@ import numpy as np
 
 from .graph import Graph
 
-# Backward-compatible re-exports: the pre-split module exposed all of these.
+# Backward-compatible re-exports: the pre-split module exposed all of these
+# (_pack_bucket is the deprecated shim of pack_bucket).
 from .plan import (  # noqa: F401
     MAX_ROWS, MAX_WIDTH, MIN_ROWS, MIN_WIDTH, BucketBufferPool, GraphPlan,
-    PackStats, StagingLease, _pack_bucket, plan_graph, promote_plan,
-    result_for_plan,
+    PackedRows, PackStats, StagingLease, _pack_bucket, build_packed_rows,
+    pack_bucket, plan_graph, promote_plan, result_for_plan,
 )
 from .executor import (  # noqa: F401
     IN_MIS, REMOVED, UNDECIDED, AsyncExecutor, BucketExecutor, InFlightBucket,

@@ -500,21 +500,22 @@ class InFlightBucket:
     keeps overlapped flushes from refilling a buffer still in flight.
 
     Per-flush latency telemetry rides on the handle: ``shape`` is the
-    packed ``(B, R, W)``, ``pack_seconds`` the host packing time (stamped
-    by :func:`pack_and_submit`), ``submitted_at`` the dispatch wall-clock
-    stamp, and ``wall_seconds`` the submit→fetch wall time, filled in when
-    the outputs are first fetched. The serving layer feeds these into its
-    :class:`~repro.serve.scheduler.FlushTelemetry` so scheduling policies
-    can adapt to observed flush latency.
+    packed ``(B, R, W)``, ``assemble_seconds`` the host bucket-assembly
+    time (stamped by :func:`pack_and_submit`; the per-request row *build*
+    happens at admission and is accounted there), ``submitted_at`` the
+    dispatch wall-clock stamp, and ``wall_seconds`` the submit→fetch wall
+    time, filled in when the outputs are first fetched. The serving layer
+    feeds these into its :class:`~repro.serve.scheduler.FlushTelemetry`
+    so scheduling policies can adapt to observed flush latency.
     """
 
     __slots__ = ("payload", "_outputs", "_fetched", "_lease",
-                 "shape", "pack_seconds", "submitted_at", "wall_seconds",
-                 "inflight_at_submit", "compile_seconds")
+                 "shape", "assemble_seconds", "submitted_at",
+                 "wall_seconds", "inflight_at_submit", "compile_seconds")
 
     def __init__(self, outputs, payload: Any = None, lease=None,
                  shape: Optional[Tuple[int, ...]] = None,
-                 pack_seconds: float = 0.0,
+                 assemble_seconds: float = 0.0,
                  submitted_at: Optional[float] = None,
                  inflight_at_submit: int = 1,
                  compile_seconds: Optional[float] = None):
@@ -523,7 +524,7 @@ class InFlightBucket:
         self.payload = payload
         self._lease = lease
         self.shape = shape
-        self.pack_seconds = pack_seconds
+        self.assemble_seconds = assemble_seconds
         self.submitted_at = submitted_at
         self.wall_seconds: Optional[float] = None
         # In-flight depth counting this flush — wall time includes queueing
@@ -533,6 +534,11 @@ class InFlightBucket:
         # Compile wall this flush paid (None on program-cache hits) — the
         # serving layer feeds these into the learned compile-cost stream.
         self.compile_seconds = compile_seconds
+
+    @property
+    def pack_seconds(self) -> float:
+        """Deprecated pre-PR-8 name of :attr:`assemble_seconds`."""
+        return self.assemble_seconds
 
     @property
     def harvested(self) -> bool:
@@ -590,15 +596,15 @@ class BucketExecutor(Protocol):
                use_kernel: bool = False, donate: bool = False,
                payload: Any = None, lease=None,
                track: bool = True,
-               pack_seconds: float = 0.0) -> InFlightBucket:
+               assemble_seconds: float = 0.0) -> InFlightBucket:
         """Dispatch one packed bucket; returns its in-flight handle.
 
         ``track=True`` (serving layers) enqueues the handle for delivery
         through ``retire``/``drain``; ``track=False`` (one-shot callers
         that keep their own handle list and harvest via ``result()``)
-        leaves queue bookkeeping to the submitter. ``pack_seconds`` is the
-        host packing time the submitter measured; it is carried on the
-        handle for latency telemetry.
+        leaves queue bookkeeping to the submitter. ``assemble_seconds`` is
+        the host bucket-assembly time the submitter measured; it is
+        carried on the handle for latency telemetry.
         """
         ...
 
@@ -632,14 +638,15 @@ class _QueueExecutor:
                use_kernel: bool = False, donate: bool = False,
                payload: Any = None, lease=None,
                track: bool = True,
-               pack_seconds: float = 0.0) -> InFlightBucket:
+               assemble_seconds: float = 0.0) -> InFlightBucket:
         shape = tuple(int(s) for s in np.shape(ell))
         submitted_at = time.perf_counter()
         outputs = run_bucket_program(ell, ranks_p, elig_p, m_edges, k=k,
                                      use_kernel=use_kernel, donate=donate,
                                      mesh=self.mesh)
         handle = InFlightBucket(outputs, payload=payload, lease=lease,
-                                shape=shape, pack_seconds=pack_seconds,
+                                shape=shape,
+                                assemble_seconds=assemble_seconds,
                                 submitted_at=submitted_at,
                                 inflight_at_submit=len(self._pending) + 1,
                                 compile_seconds=consume_compile_wall())
@@ -741,16 +748,21 @@ def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
                     track: bool = True):
     """Pack one bucket and dispatch it through an executor.
 
-    The single lease → ``_pack_bucket`` → ``submit`` sequence shared by
+    The single lease → ``pack_bucket`` → ``submit`` sequence shared by
     ``correlation_cluster_batch`` and the serving-layer flush, so group
     padding, donation policy and pad accounting cannot drift between the
-    two paths. Returns ``(handle, stats)`` where ``stats`` is this one
-    flush's :class:`~repro.core.plan.PackStats` — the single source every
-    caller's pad accounting merges from. If packing or dispatch raises,
-    the staging lease is released before re-raising — nothing was
-    dispatched, so the buffers are genuinely free.
+    two paths. Plans carrying prebuilt :class:`~repro.core.plan.
+    PackedRows` assemble by row copies (their ``group_keys`` entries may
+    be ``None``); plans without get the legacy derive-at-flush build —
+    the measured host time is stamped on the handle as
+    ``assemble_seconds`` either way. Returns ``(handle, stats)`` where
+    ``stats`` is this one flush's :class:`~repro.core.plan.PackStats` —
+    the single source every caller's pad accounting merges from. If
+    packing or dispatch raises, the staging lease is released before
+    re-raising — nothing was dispatched, so the buffers are genuinely
+    free.
     """
-    from .plan import _pack_bucket, estimate_pack_stats
+    from .plan import estimate_pack_stats, pack_bucket
 
     R, W = plans[0].bucket
     g_pad = executor.group_pad(len(plans))
@@ -758,15 +770,15 @@ def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
     lease = pool.acquire(b_pad, R, W) if pool is not None else None
     try:
         t_pack = time.perf_counter()
-        ell, ranks, elig, m_edges, _ = _pack_bucket(
+        ell, ranks, elig, m_edges, _ = pack_bucket(
             plans, group_keys, k=k, g_pad=g_pad,
             staging=lease.arrays if lease is not None else None)
-        pack_seconds = time.perf_counter() - t_pack
+        assemble_seconds = time.perf_counter() - t_pack
         handle = executor.submit(
             ell, ranks, elig, m_edges, k=k, use_kernel=use_kernel,
             donate=pool is not None and pool.donate,
             payload=payload, lease=lease, track=track,
-            pack_seconds=pack_seconds)
+            assemble_seconds=assemble_seconds)
     except BaseException:
         if lease is not None:
             lease.release()

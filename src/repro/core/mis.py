@@ -54,6 +54,14 @@ def _perm_ranks_batch_for(n: int):
     return jax.jit(jax.vmap(lambda k: random_permutation_ranks(n, k)))
 
 
+@lru_cache(maxsize=1024)
+def _perm_ranks_single_for(n: int):
+    # k=1 fastpath: the broadcast to a (1, n) batch happens inside the
+    # trace, so a single-sample caller pays one dispatch instead of a host
+    # jnp.stack plus the vmapped call. Bit-identical to the batch of one.
+    return jax.jit(lambda k: random_permutation_ranks(n, k)[None])
+
+
 def random_permutation_ranks_batch(n: int, keys) -> jax.Array:
     """Ranks for several keys of one graph in a single fused dispatch.
 
@@ -62,10 +70,16 @@ def random_permutation_ranks_batch(n: int, keys) -> jax.Array:
     asserted in ``tests/test_mis.py``). The batch-engine packer uses this
     for the best-of-k sample keys of each graph: one async dispatch per
     graph instead of ``k`` eager permutation calls, which keeps host-side
-    packing off the device's critical path.
+    packing off the device's critical path. A single-key list (best-of-1,
+    the serving default) skips the host-side key stack entirely — that
+    stack is pure dispatch overhead when admission-time row builds issue
+    one rank op per request.
     """
     if not isinstance(keys, jax.Array):
-        keys = jnp.stack(list(keys))
+        keys = list(keys)
+        if len(keys) == 1:
+            return _perm_ranks_single_for(n)(keys[0])
+        keys = jnp.stack(keys)
     return _perm_ranks_batch_for(n)(keys)
 
 

@@ -7,12 +7,22 @@ host:
 * :func:`plan_graph` resolves one graph's degree cap and its ``(R, W)``
   shape bucket (``R`` = vertex count rounded to a power of two, ``W`` = max
   *eligible-induced* degree rounded to a power of two — the Theorem 26 cap
-  is what keeps ``W ≤ 12λ`` and makes ELL padding cheap).
-* :func:`_pack_bucket` lays one bucket's graphs (× k best-of-k samples)
+  is what keeps ``W ≤ 12λ`` and makes ELL padding cheap). It also
+  canonicalises the eligible-induced edge list (lexsorted) exactly once;
+  :func:`graph_fingerprint` and the packer both read
+  ``GraphPlan.canonical_edges`` instead of re-deriving it.
+* :func:`build_packed_rows` turns one plan into a :class:`PackedRows`
+  artifact — the graph's finished ``(R, W)`` ELL rows, rank rows, and
+  eligibility row. Serving builds it once per request at admission, so the
+  argsort/bincount/scatter work leaves the flush critical path.
+* :func:`pack_bucket` lays one bucket's graphs (× k best-of-k samples)
   into the ``(B, R, W)`` ELL tensor plus ``(B, R+1)`` rank/eligibility
   state the device program consumes, with the group axis padded to a power
   of two (callers may request extra group padding, e.g. to a device-count
-  multiple for the sharded executor).
+  multiple for the sharded executor). Plans carrying prebuilt
+  :class:`PackedRows` assemble by row copies only; plans without fall back
+  to the legacy derive-at-flush build — the two paths are bit-identical
+  and compose freely within one bucket.
 * :class:`PackStats` is the packer's own padding accounting — the single
   source serving stats are derived from, so they cannot drift from what was
   actually padded onto the device. :func:`estimate_pack_stats` is the pure
@@ -36,6 +46,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import struct
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -74,6 +85,14 @@ class GraphPlan:
     wreq: int                   # max eligible-induced degree
     R: int                      # row bucket (pow2)
     W: int                      # width bucket (pow2)
+    # Eligible-induced undirected edge list in canonical (lexsorted (u, v))
+    # order, int64 C-contiguous. Built once by plan_graph; both
+    # graph_fingerprint and the packer consume it, so the keep-mask/sort
+    # happens exactly once per request and the two can never diverge.
+    canonical_edges: Optional[np.ndarray] = None
+    # Prebuilt device rows (admission-time packing). None = the packer
+    # derives rows at flush time from canonical_edges instead.
+    rows: Optional["PackedRows"] = None
 
     @property
     def bucket(self) -> Tuple[int, int]:
@@ -108,11 +127,16 @@ def plan_graph(g: Graph, method: str = "pivot", eps: float = 2.0,
     if len(und):
         keep = eligible[und[:, 0]] & eligible[und[:, 1]]
         kept = und[keep]
-        deg_ind = np.bincount(kept.ravel(), minlength=n) if len(kept) else \
-            np.zeros(n, np.int64)
-        wreq = int(deg_ind.max()) if len(kept) else 0
+    else:
+        kept = np.zeros((0, 2), dtype=np.int64)
+    if len(kept):
+        # Canonical order: lexsorted by (u, v). This is the byte order the
+        # fingerprint hashes and the edge order the packer scatters from.
+        kept = kept[np.lexsort((kept[:, 1], kept[:, 0]))]
+        wreq = int(np.bincount(kept.ravel(), minlength=n).max())
     else:
         wreq = 0
+    kept = np.ascontiguousarray(kept, dtype=np.int64)
 
     R = max(MIN_ROWS, next_pow2(max(1, n)))
     W = max(MIN_WIDTH, next_pow2(max(1, wreq)))
@@ -129,7 +153,135 @@ def plan_graph(g: Graph, method: str = "pivot", eps: float = 2.0,
             "means the graph is too dense for the bucketed ELL layout; use "
             "the per-graph engine")
     return GraphPlan(g=g, n=n, lam=lam, threshold=threshold,
-                     eligible=eligible, wreq=wreq, R=R, W=W)
+                     eligible=eligible, wreq=wreq, R=R, W=W,
+                     canonical_edges=kept)
+
+
+def plan_canonical_edges(plan: GraphPlan) -> np.ndarray:
+    """The plan's canonical (lexsorted) eligible-induced edge list.
+
+    ``plan_graph`` always attaches it; plans constructed by hand get it
+    derived (and memoised) here so the fingerprint and the packer keep one
+    source of truth either way.
+    """
+    if plan.canonical_edges is None:
+        und = plan.g.undirected_edges()
+        if len(und):
+            keep = plan.eligible[und[:, 0]] & plan.eligible[und[:, 1]]
+            kept = und[keep]
+            if len(kept):
+                kept = kept[np.lexsort((kept[:, 1], kept[:, 0]))]
+        else:
+            kept = np.zeros((0, 2), dtype=np.int64)
+        plan.canonical_edges = np.ascontiguousarray(kept, dtype=np.int64)
+    return plan.canonical_edges
+
+
+class PackedRows:
+    """Prebuilt device rows for one planned graph (admission-time packing).
+
+    Everything :func:`pack_bucket` would derive for this graph at flush
+    time, finished once up front: the ``(R, W)`` int32 ELL adjacency rows
+    (pad id ``R``), the ``(k, R+1)`` rank rows for the request's best-of-k
+    sample keys (``INT32_MAX`` beyond ``n``), the ``(R+1,)`` eligibility
+    row (slot ``R`` False), and the full edge count ``m`` the cost
+    identity reads. Flush-time assembly then reduces to row copies into
+    the leased staging arrays.
+
+    The rank permutations are dispatched to the device when the artifact
+    is built (one fused async call) and materialised into the padded
+    numpy layout lazily on first access — by flush time they have long
+    finished, so admission keeps the overlap the flush-time packer had.
+    """
+
+    __slots__ = ("R", "W", "n", "m", "k", "ell", "elig",
+                 "_ranks", "_ranks_dev")
+
+    def __init__(self, R: int, W: int, n: int, m: int, k: int,
+                 ell: np.ndarray, elig: np.ndarray,
+                 ranks: Optional[np.ndarray] = None, ranks_dev=None):
+        self.R = R
+        self.W = W
+        self.n = n
+        self.m = m
+        self.k = k
+        self.ell = ell
+        self.elig = elig
+        self._ranks = ranks
+        self._ranks_dev = ranks_dev
+
+    @property
+    def bucket(self) -> Tuple[int, int]:
+        return (self.R, self.W)
+
+    @property
+    def ranks(self) -> np.ndarray:
+        """``(k, R+1)`` int32 rank rows (materialises the device batch)."""
+        if self._ranks is None:
+            out = np.full((self.k, self.R + 1), _INT32_MAX, dtype=np.int32)
+            if self._ranks_dev is not None:
+                out[:, : self.n] = np.asarray(self._ranks_dev)
+                self._ranks_dev = None
+            self._ranks = out
+        return self._ranks
+
+    def promote(self, R: int, W: int) -> "PackedRows":
+        """Pad-copy relayout into a larger ``(R, W)`` bucket (coalescing).
+
+        Bit-exact for the same reason :func:`promote_plan` is: promoted
+        rows ``n..R`` carry INF rank and are ineligible, extra width slots
+        hold the new pad id ``R``. Raises ``ValueError`` for a target that
+        cannot hold these rows.
+        """
+        if (R, W) == (self.R, self.W):
+            return self
+        if R < self.R or W < self.W:
+            raise ValueError(
+                f"cannot promote packed rows {self.bucket} into ({R}, {W}):"
+                " the target must be at least as large in both dimensions")
+        ell = np.full((R, W), R, dtype=np.int32)
+        if self.n:
+            # Real entries only live in rows < n; re-stamp the pad id.
+            sub = self.ell[: self.n]
+            ell[: self.n, : self.W] = np.where(sub == self.R, R, sub)
+        elig = np.zeros(R + 1, dtype=bool)
+        elig[: self.n] = self.elig[: self.n]
+        ranks = np.full((self.k, R + 1), _INT32_MAX, dtype=np.int32)
+        ranks[:, : self.n] = self.ranks[:, : self.n]
+        return PackedRows(R=R, W=W, n=self.n, m=self.m, k=self.k,
+                          ell=ell, elig=elig, ranks=ranks)
+
+
+def build_packed_rows(plan: GraphPlan,
+                      keys: Sequence[jax.Array]) -> PackedRows:
+    """Build one graph's :class:`PackedRows` at its native bucket.
+
+    ``keys`` are the request's best-of-k sample keys; the rank batch is
+    dispatched here (async) and harvested lazily. The ELL rows scatter
+    straight from the plan's canonical edge list — the same array the
+    fingerprint hashes — so the sort/bincount of packing happens exactly
+    once per request, at admission.
+    """
+    n = plan.n
+    R, W = plan.bucket
+    ell = np.full((R, W), R, dtype=np.int32)
+    e = plan_canonical_edges(plan)
+    if len(e):
+        src = np.concatenate([e[:, 0], e[:, 1]])
+        dst = np.concatenate([e[:, 1], e[:, 0]])
+        order = np.argsort(src, kind="stable")
+        src, dst = src[order], dst[order]
+        deg = np.bincount(src, minlength=n)
+        starts = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(deg, out=starts[1:])
+        slot = np.arange(len(src)) - starts[src]
+        ell[src, slot] = dst
+    elig = np.zeros(R + 1, dtype=bool)
+    if n:
+        elig[:n] = plan.eligible
+    ranks_dev = random_permutation_ranks_batch(n, keys) if n else None
+    return PackedRows(R=R, W=W, n=n, m=int(plan.g.m), k=len(keys),
+                      ell=ell, elig=elig, ranks_dev=ranks_dev)
 
 
 def promote_plan(plan: GraphPlan, R: int, W: int) -> GraphPlan:
@@ -160,7 +312,10 @@ def promote_plan(plan: GraphPlan, R: int, W: int) -> GraphPlan:
             f"bucket ({MAX_ROWS}, {MAX_WIDTH})")
     if (R, W) == plan.bucket:
         return plan
-    return dataclasses.replace(plan, R=R, W=W)
+    # Prebuilt rows relayout with the plan (cheap pad-copies), so a
+    # coalesced flush at the promoted shape still assembles by row copies.
+    rows = plan.rows.promote(R, W) if plan.rows is not None else None
+    return dataclasses.replace(plan, R=R, W=W, rows=rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,7 +364,7 @@ def graph_fingerprint(plan: GraphPlan, key: jax.Array, *,
     Two requests with equal fingerprints produce bit-identical device
     inputs, hence bit-identical ``(labels, cost, picked)`` — the invariant
     the serving-layer result cache and single-flight coalescing rest on.
-    The payload canonicalises exactly what :func:`_pack_bucket` puts on
+    The payload canonicalises exactly what :func:`pack_bucket` puts on
     the device for this graph at its native bucket (bucket-shape-stable:
     promotion to a larger flush shape is bit-exact, so it does not enter
     the fingerprint):
@@ -232,15 +387,9 @@ def graph_fingerprint(plan: GraphPlan, key: jax.Array, *,
     is exactly what a cold flush would have returned.
     """
     g = plan.g
-    und = g.undirected_edges()
-    if len(und):
-        keep = plan.eligible[und[:, 0]] & plan.eligible[und[:, 1]]
-        kept = und[keep]
-        if len(kept):
-            kept = kept[np.lexsort((kept[:, 1], kept[:, 0]))]
-    else:
-        kept = np.zeros((0, 2), dtype=np.int64)
-    kept = np.ascontiguousarray(kept, dtype=np.int64)
+    # The canonical lexsorted edge list is built once by plan_graph and
+    # shared with the packer — hashing here re-derives nothing.
+    kept = plan_canonical_edges(plan)
     elig = np.ascontiguousarray(np.asarray(plan.eligible, dtype=bool))
     payload = b"".join([
         b"cc-graph-fp1\0",
@@ -316,12 +465,12 @@ def estimate_pack_stats(plans: Sequence[GraphPlan], k: int,
     )
 
 
-def _pack_bucket(plans: Sequence[GraphPlan],
-                 group_keys: Sequence[Sequence[jax.Array]],
-                 k: int,
-                 staging: Optional[dict] = None,
-                 g_pad: Optional[int] = None):
-    """Pack one bucket's graphs (× k samples each) into device tensors.
+def pack_bucket(plans: Sequence[GraphPlan],
+                group_keys: Sequence[Optional[Sequence[jax.Array]]],
+                k: int,
+                staging: Optional[dict] = None,
+                g_pad: Optional[int] = None):
+    """Assemble one bucket's graphs (× k samples each) into device tensors.
 
     Returns ``(ell, ranks, elig, m_edges, pad_groups)`` with batch axis
     ``B = g_pad · k`` where ``g_pad`` defaults to ``next_pow2(len(plans))``
@@ -331,6 +480,20 @@ def _pack_bucket(plans: Sequence[GraphPlan],
     device argmin can reduce over a simple ``(G, k)`` reshape. ``staging``
     (a lease from :class:`BucketBufferPool`) reuses host arrays across
     flushes instead of reallocating.
+
+    Per graph, one of two bit-identical paths runs:
+
+    * **prebuilt** — a plan carrying :class:`PackedRows` (built at
+      admission by :func:`build_packed_rows`, promoted with its plan for
+      coalesced flushes) assembles by row copies only; its ``group_keys``
+      entry may be ``None`` because the rank permutations were drawn when
+      the rows were built. A flush of all-prebuilt plans skips the full
+      staging reset too: every real row is wholly overwritten by its copy,
+      so only the group-padding tail is (re)stamped with the pad pattern.
+    * **legacy** — a plan without rows gets the derive-at-flush build,
+      scattering from the plan's canonical edge list (the same array the
+      fingerprint hashes) with its rank batch dispatched up front (async)
+      and harvested after the host-side scatters.
     """
     R, W = plans[0].bucket
     if g_pad is None:
@@ -338,39 +501,66 @@ def _pack_bucket(plans: Sequence[GraphPlan],
     elif g_pad < len(plans):
         raise ValueError(f"g_pad={g_pad} < {len(plans)} graphs in bucket")
     b_pad = g_pad * k
+    rows_list = [p.rows for p in plans]
+    for pr in rows_list:
+        if pr is not None and (pr.bucket != (R, W) or pr.k != k):
+            raise ValueError(
+                f"prebuilt rows at bucket {pr.bucket} with k={pr.k} cannot "
+                f"assemble into a ({R}, {W}) flush with k={k}; promote the "
+                "plan first (promote_plan relays its PackedRows)")
+    all_prebuilt = all(pr is not None for pr in rows_list)
+    n_real = len(plans) * k
     if staging is None:
-        ell = np.full((b_pad, R, W), R, dtype=np.int32)
-        ranks = np.full((b_pad, R + 1), _INT32_MAX, dtype=np.int32)
-        elig = np.zeros((b_pad, R + 1), dtype=bool)
-        m_edges = np.zeros((b_pad,), dtype=np.int32)
+        if all_prebuilt:
+            ell = np.empty((b_pad, R, W), dtype=np.int32)
+            ranks = np.empty((b_pad, R + 1), dtype=np.int32)
+            elig = np.empty((b_pad, R + 1), dtype=bool)
+            m_edges = np.empty((b_pad,), dtype=np.int32)
+        else:
+            ell = np.full((b_pad, R, W), R, dtype=np.int32)
+            ranks = np.full((b_pad, R + 1), _INT32_MAX, dtype=np.int32)
+            elig = np.zeros((b_pad, R + 1), dtype=bool)
+            m_edges = np.zeros((b_pad,), dtype=np.int32)
     else:
         ell, ranks, elig, m_edges = (staging["ell"], staging["ranks"],
                                      staging["elig"], staging["m_edges"])
-        ell.fill(R)
-        ranks.fill(_INT32_MAX)
-        elig.fill(False)
-        m_edges.fill(0)
+        if not all_prebuilt:
+            ell.fill(R)
+            ranks.fill(_INT32_MAX)
+            elig.fill(False)
+            m_edges.fill(0)
+    if all_prebuilt:
+        # Rows [0, n_real) are wholly overwritten below; only the
+        # group-padding tail needs the pad pattern.
+        ell[n_real:] = R
+        ranks[n_real:] = _INT32_MAX
+        elig[n_real:] = False
+        m_edges[n_real:] = 0
 
-    # Dispatch every graph's rank batch first (one fused device call per
-    # graph, async under JAX dispatch): the permutations compute while the
-    # numpy ELL packing below runs on the host. Same per-graph permutation
-    # as the single-graph engine — ranks are a function of (n, key) only,
-    # and the batched call is row-bit-identical to per-key calls — so the
-    # result stays bit-exact per graph.
+    # Dispatch the legacy graphs' rank batches first (one fused device
+    # call per graph, async under JAX dispatch): the permutations compute
+    # while the numpy ELL packing below runs on the host. Same per-graph
+    # permutation as the single-graph engine — ranks are a function of
+    # (n, key) only, and the batched call is row-bit-identical to per-key
+    # calls — so the result stays bit-exact per graph. Prebuilt graphs
+    # dispatched theirs at admission.
     rank_batches = [
-        random_permutation_ranks_batch(plan.n, keys) if plan.n else None
-        for plan, keys in zip(plans, group_keys)
+        random_permutation_ranks_batch(plan.n, keys)
+        if pr is None and plan.n else None
+        for plan, keys, pr in zip(plans, group_keys, rows_list)
     ]
 
     for gi, (plan, keys) in enumerate(zip(plans, group_keys)):
         n = plan.n
         base = gi * k
-        und = plan.g.undirected_edges()
-        if len(und):
-            keep = plan.eligible[und[:, 0]] & plan.eligible[und[:, 1]]
-            e = und[keep]
-        else:
-            e = np.zeros((0, 2), dtype=np.int64)
+        pr = rows_list[gi]
+        if pr is not None:
+            ell[base: base + k] = pr.ell
+            ranks[base: base + k] = pr.ranks
+            elig[base: base + k] = pr.elig
+            m_edges[base: base + k] = pr.m
+            continue
+        e = plan_canonical_edges(plan)
         if len(e):
             src = np.concatenate([e[:, 0], e[:, 1]])
             dst = np.concatenate([e[:, 1], e[:, 0]])
@@ -399,6 +589,14 @@ def _pack_bucket(plans: Sequence[GraphPlan],
         for si in range(rk.shape[0]):
             ranks[base + si, : plan.n] = rk[si]
     return ell, ranks, elig, m_edges, g_pad - len(plans)
+
+
+def _pack_bucket(plans, group_keys, k, staging=None, g_pad=None):
+    """Deprecated pre-PR-8 private name of :func:`pack_bucket`."""
+    warnings.warn(
+        "repro.core.plan._pack_bucket is deprecated; use pack_bucket",
+        DeprecationWarning, stacklevel=2)
+    return pack_bucket(plans, group_keys, k, staging=staging, g_pad=g_pad)
 
 
 def result_for_plan(plan: GraphPlan, labels_row: np.ndarray, cost: int,
@@ -523,10 +721,14 @@ __all__ = [
     "GraphFingerprint",
     "graph_fingerprint",
     "PackStats",
+    "PackedRows",
     "StagingLease",
     "BucketBufferPool",
     "plan_graph",
+    "plan_canonical_edges",
     "promote_plan",
+    "build_packed_rows",
+    "pack_bucket",
     "estimate_pack_stats",
     "result_for_plan",
     "MIN_ROWS",

@@ -50,13 +50,28 @@ Admission backpressure (bounded in-flight work)
   window is ``max_in_flight``; the adaptive policy derives a dynamic one
   from flush-latency telemetry.
 
+Admission-time packing (build/assemble split)
+  With ``prebuild_rows=True`` (default) every cold admission finishes its
+  per-graph packing work right away: :func:`repro.core.plan.
+  build_packed_rows` scatters the plan's canonical edge list into the
+  graph's :class:`~repro.core.plan.PackedRows` and dispatches its rank
+  permutations, once per request. Flushes then *assemble* buckets by row
+  copies into the leased staging arrays — the argsort/bincount host work
+  leaves the flush critical path, which is what the admission-time split
+  buys (JetStream-style: per-request preprocessing at admission, batch
+  assembly a memcpy). ``prebuild_rows=False`` keeps the legacy
+  derive-at-flush packing; both paths are bit-identical and the
+  ``pack_split`` scenario in ``benchmarks/serve_bench.py`` asserts the
+  assemble-vs-pack latency win.
+
 Telemetry (the policies' stats surface)
-  Every harvested flush records its host pack time and submit→fetch wall
-  time — stamped by the executor layer on the
+  Every harvested flush records its host bucket-assembly time and
+  submit→fetch wall time — stamped by the executor layer on the
   :class:`~repro.core.executor.InFlightBucket` handle — into
   ``stats.latency`` (a :class:`~repro.serve.scheduler.FlushTelemetry`),
-  keyed by bucket shape. Policies read the EWMAs; benchmarks emit the
-  p50/p99 summaries.
+  keyed by bucket shape; prebuilt admissions record their per-request
+  row-build time into the same telemetry's ``build`` stream. Policies
+  read the EWMAs; benchmarks emit the p50/p99 summaries.
 
 Buffer reuse
   All flushes route through one :class:`repro.core.plan.BucketBufferPool`:
@@ -106,7 +121,8 @@ from repro.core import BucketBufferPool, make_executor, plan_graph
 from repro.core.api import ClusterResult, sample_keys
 from repro.core.executor import pack_and_submit
 from repro.core.graph import Graph
-from repro.core.plan import (GraphFingerprint, GraphPlan, graph_fingerprint,
+from repro.core.plan import (GraphFingerprint, GraphPlan,
+                             build_packed_rows, graph_fingerprint,
                              promote_plan, result_for_plan)
 from repro.util import next_pow2
 
@@ -203,6 +219,12 @@ class ClusterBatcher:
         hit retires at admission, bit-identical to a cold flush — the
         fingerprint covers the exact PRNG key, so caching never trades
         determinism for speed.
+      prebuild_rows: build each cold admission's
+        :class:`~repro.core.plan.PackedRows` at admission (default), so
+        flushes assemble buckets by row copies instead of re-deriving
+        every graph's ELL rows. ``False`` restores the legacy
+        derive-at-flush packing — bit-identical results either way (the
+        benchmark's ``pack_split`` scenario runs both arms).
     """
 
     def __init__(self, max_batch: int = 64, method: str = "pivot",
@@ -214,7 +236,8 @@ class ClusterBatcher:
                  executor="sync",
                  max_in_flight: Optional[int] = None,
                  policy=None,
-                 result_cache=True):
+                 result_cache=True,
+                 prebuild_rows: bool = True):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_wait is not None and max_wait < 0:
@@ -232,6 +255,7 @@ class ClusterBatcher:
         self.pool = pool if pool is not None else BucketBufferPool()
         self.executor = make_executor(executor)
         self.max_in_flight = max_in_flight
+        self.prebuild_rows = prebuild_rows
         self.policy = make_policy(policy, max_batch=max_batch,
                                   max_wait=max_wait,
                                   max_in_flight=max_in_flight)
@@ -324,6 +348,17 @@ class ClusterBatcher:
                 f"{self.executor.in_flight} flushes in flight; retry after "
                 "retiring")
         req.admitted_at = now
+        if self.prebuild_rows and plan.rows is None:
+            # The request's per-graph packing work, done once here — the
+            # ELL scatter from the plan's canonical edges plus the async
+            # rank dispatch — so its flushes only copy rows. Placed after
+            # the cache/single-flight/backpressure gates: only requests
+            # that will actually pack pay the build.
+            t_build = time.perf_counter()
+            plan.rows = build_packed_rows(
+                plan, sample_keys(req.key, self.num_samples))
+            self.stats.latency.record_build(
+                plan.bucket, time.perf_counter() - t_build)
         self.buckets.setdefault(plan.bucket, []).append(req)
         if req.fingerprint is not None:
             self._single_flight[req.fingerprint.digest] = req
@@ -496,8 +531,15 @@ class ClusterBatcher:
         not matter: winners are recorded for whichever engine does run the
         kernel path). Tier check goes through ``TuningCache.get`` with
         counting on, so warmup hits/misses are observable engine-side.
+
+        Sweep tensors pack into leased pool staging — the same
+        ``pack_bucket`` + :class:`~repro.core.plan.BucketBufferPool` path
+        flushes use, not ad-hoc buffers — so the pool's lease invariant
+        covers the sweep too. The lease is released right after the sweep
+        returns: ``sweep_bucket`` copies host→device and blocks on every
+        timing, so nothing in flight reads the staging afterwards.
         """
-        from repro.core.plan import _pack_bucket
+        from repro.core.plan import pack_bucket
         from repro.kernels import autotune as _at
 
         cache = _at.tuning_cache()
@@ -520,10 +562,14 @@ class ClusterBatcher:
             use = use[:gp]
             keys = [sample_keys(jax.random.PRNGKey(i), k)
                     for i in range(len(use))]
-            ell, ranks, elig, _m, _pad = _pack_bucket(use, keys, k=k,
-                                                      g_pad=gp)
-            _at.sweep_bucket(ell, ranks, elig, cache=cache,
-                             candidates=candidates, repeats=repeats)
+            lease = self.pool.acquire(gp * k, R, W)
+            try:
+                ell, ranks, elig, _m, _pad = pack_bucket(
+                    use, keys, k=k, g_pad=gp, staging=lease.arrays)
+                _at.sweep_bucket(ell, ranks, elig, cache=cache,
+                                 candidates=candidates, repeats=repeats)
+            finally:
+                lease.release()
 
     # -- Internals ---------------------------------------------------------
 
@@ -605,9 +651,13 @@ class ClusterBatcher:
         k = self.num_samples
         R, W = decision.bucket
         # Promotion is a no-op for native requests; for stolen ones it
-        # re-targets the plan at the flush's larger shape (bit-exact).
+        # re-targets the plan at the flush's larger shape (bit-exact),
+        # relaying any prebuilt rows via pad-copies. Prebuilt plans drew
+        # their rank permutations at admission, so no sample keys are
+        # derived for them here — that fold_in work is off the flush path.
         plans = [promote_plan(r.plan, R, W) for r in all_reqs]
-        bkeys = [sample_keys(r.key, k) for r in all_reqs]
+        bkeys = [None if p.rows is not None else sample_keys(r.key, k)
+                 for r, p in zip(all_reqs, plans)]
         try:
             _, pack = pack_and_submit(
                 plans, bkeys, k, self.executor, pool=self.pool,
@@ -658,7 +708,7 @@ class ClusterBatcher:
         ``flush``) finish dispatching their remaining decisions before
         surfacing it. Successful harvests fan each primary's device row
         out to its subscribers, insert the post-selection winner into the
-        result cache, record the flush's wall/pack latency into
+        result cache, record the flush's wall/assemble latency into
         ``stats.latency``, and notify the policy.
         """
         handles = self.executor.drain() if block else self.executor.retire()
@@ -699,7 +749,7 @@ class ClusterBatcher:
             if handle.shape is not None and handle.wall_seconds is not None:
                 bucket = (handle.shape[1], handle.shape[2])
                 self.stats.latency.record(bucket, handle.wall_seconds,
-                                          handle.pack_seconds,
+                                          handle.assemble_seconds,
                                           depth=handle.inflight_at_submit,
                                           compile_s=handle.compile_seconds)
                 if handle.compile_seconds is not None:

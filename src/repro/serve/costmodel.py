@@ -21,9 +21,13 @@ module prices it, from inputs the serving stack already has:
   (locked down in ``tests/test_scheduler.py``'s pad-accounting test).
 * **Service time** — the per-bucket / global EWMAs of
   :class:`~repro.serve.scheduler.FlushTelemetry`, already stamped on every
-  harvested flush by the executor layer. A configurable floor
-  (``service_floor_s``) acts as a pessimistic prior for simulations and
-  deterministic benches.
+  harvested flush by the executor layer. Since the admission-time packing
+  split these walls cover bucket *assembly* + device time only — the
+  per-request row build happens at admission, in telemetry's separate
+  ``build`` stream — so the EWMAs price exactly what a flush costs, not
+  host work that would have been paid regardless of the steal. A
+  configurable floor (``service_floor_s``) acts as a pessimistic prior
+  for simulations and deterministic benches.
 * **Compile probability** — :func:`repro.core.executor.
   program_cache_contains`, a non-mutating probe of the bounded program
   LRU: stealing is only charged a compile when it inflates the batch axis

@@ -22,7 +22,8 @@ every *decision* to a :class:`SchedulerPolicy`:
   item's round count depends on what the rest of the stream does.
 * :class:`AdaptivePolicy` — replaces the static ``max_in_flight`` knob
   with a dynamic admission window derived from executor telemetry: keep
-  ``ceil(EWMA(flush service time) / EWMA(pack time))`` flushes in flight —
+  ``ceil(EWMA(flush service time) / EWMA(assemble time))`` flushes in
+  flight —
   enough that the host never leaves the device idle, no more than that so
   queueing delay is not hidden inside the engine. MPC analogue: sizing
   the number of machines to the observed round time instead of fixing it
@@ -109,12 +110,20 @@ class FlushDecision:
 class FlushTelemetry:
     """Rolling flush-latency telemetry — the policies' stats surface.
 
-    The executor layer stamps each :class:`~repro.core.executor.
-    InFlightBucket` with its host pack time and its submit→fetch wall
-    time; the batcher feeds those here on harvest. Policies read the
-    EWMAs (adaptive in-flight control); benchmarks and ``ClusterStats``
-    read :meth:`summary` (per-bucket p50/p99). Bounded: at most ``window``
-    samples are retained per bucket shape.
+    Host packing work is accounted as two separate streams since the
+    admission-time packing split (PR 8):
+
+    * **build** — the per-request :func:`~repro.core.plan.
+      build_packed_rows` time, recorded by the batcher at admission via
+      :meth:`record_build`. It is not part of any flush's wall.
+    * **assemble** — the per-bucket staging assembly time stamped on each
+      :class:`~repro.core.executor.InFlightBucket` (the only host packing
+      cost left on the flush critical path), fed here on harvest together
+      with the submit→fetch wall time.
+
+    Policies read the EWMAs (adaptive in-flight control); benchmarks and
+    ``ClusterStats`` read :meth:`summary` (per-bucket p50/p99). Bounded:
+    at most ``window`` samples are retained per bucket shape.
 
     ``in_flight`` is refreshed by the batcher before every policy call —
     it is the number of submitted-but-unharvested flushes, the quantity
@@ -128,14 +137,20 @@ class FlushTelemetry:
         self.alpha = alpha
         self.in_flight = 0
         self.total_flushes = 0
+        self.total_builds = 0
+        # Lifetime wall accumulators for the two host packing streams —
+        # batch_bench emits these as fractions of the serve wall.
+        self.total_build_s = 0.0
+        self.total_assemble_s = 0.0
         self._ewma_wall: Optional[float] = None
         self._ewma_service: Optional[float] = None
-        self._ewma_pack: Optional[float] = None
+        self._ewma_assemble: Optional[float] = None
+        self._ewma_build: Optional[float] = None
         self._ewma_compile: Optional[float] = None
         self._per_bucket: Dict[BucketKey, dict] = {}
 
     def record(self, bucket: BucketKey, wall_s: float,
-               pack_s: float = 0.0, depth: int = 1,
+               assemble_s: float = 0.0, depth: int = 1,
                compile_s: Optional[float] = None) -> None:
         """Account one completed flush of shape ``bucket``.
 
@@ -146,6 +161,10 @@ class FlushTelemetry:
         quantity the adaptive window must use, or queue wait would feed
         back into a larger window which creates more queue wait.
 
+        ``assemble_s`` is the flush's host bucket-assembly time (the
+        pre-PR-8 ``pack_s``, minus the per-request row build that now
+        happens at admission — see :meth:`record_build`).
+
         ``compile_s`` is the compile wall this flush paid (None on
         program-cache hits): subtracted to maintain a *compile-free* wall
         EWMA per bucket, the steady-state service estimate the cost
@@ -154,16 +173,17 @@ class FlushTelemetry:
         """
         a = self.alpha
         self.total_flushes += 1
+        self.total_assemble_s += assemble_s
         self._ewma_wall = wall_s if self._ewma_wall is None \
             else a * wall_s + (1 - a) * self._ewma_wall
         service = wall_s / max(1, depth)
         self._ewma_service = service if self._ewma_service is None \
             else a * service + (1 - a) * self._ewma_service
-        self._ewma_pack = pack_s if self._ewma_pack is None \
-            else a * pack_s + (1 - a) * self._ewma_pack
+        self._ewma_assemble = assemble_s if self._ewma_assemble is None \
+            else a * assemble_s + (1 - a) * self._ewma_assemble
         rec = self._bucket_rec(bucket)
         rec["wall"].append(wall_s)
-        rec["pack"].append(pack_s)
+        rec["assemble"].append(assemble_s)
         rec["count"] += 1
         rec["ewma_wall"] = wall_s if rec["ewma_wall"] is None \
             else a * wall_s + (1 - a) * rec["ewma_wall"]
@@ -171,14 +191,32 @@ class FlushTelemetry:
         rec["ewma_wall_xc"] = wall_xc if rec.get("ewma_wall_xc") is None \
             else a * wall_xc + (1 - a) * rec["ewma_wall_xc"]
 
+    def record_build(self, bucket: BucketKey, build_s: float) -> None:
+        """Account one request's admission-time row build for ``bucket``.
+
+        Fed by the batcher right after :func:`~repro.core.plan.
+        build_packed_rows`; per-request (not per-flush), so the stream's
+        sample count is the prebuilt-admission count, not the flush count.
+        """
+        a = self.alpha
+        self.total_builds += 1
+        self.total_build_s += build_s
+        self._ewma_build = build_s if self._ewma_build is None \
+            else a * build_s + (1 - a) * self._ewma_build
+        rec = self._bucket_rec(bucket)
+        rec["build"].append(build_s)
+        rec["builds"] += 1
+
     def _bucket_rec(self, bucket: BucketKey) -> dict:
         rec = self._per_bucket.get(bucket)
         if rec is None:
             rec = self._per_bucket[bucket] = {
                 "wall": deque(maxlen=self.window),
-                "pack": deque(maxlen=self.window),
+                "assemble": deque(maxlen=self.window),
+                "build": deque(maxlen=self.window),
                 "compile": deque(maxlen=self.window),
                 "count": 0,
+                "builds": 0,
                 "compiles": 0,
                 "ewma_wall": None,
                 "ewma_wall_xc": None,
@@ -191,7 +229,7 @@ class FlushTelemetry:
 
         The executor stamps ``compile_seconds`` on each in-flight handle
         that missed the program cache; the batcher feeds the samples here
-        on harvest. Windowed like wall/pack; the per-shape EWMA is the
+        on harvest. Windowed like wall/assemble; the per-shape EWMA is the
         learned prior :meth:`~repro.serve.costmodel.FlushCostModel.
         compile_charge` prefers over its static ``compile_cost_s``.
         """
@@ -217,9 +255,21 @@ class FlushTelemetry:
         return self._ewma_service
 
     @property
+    def ewma_assemble(self) -> Optional[float]:
+        """EWMA host bucket-assembly seconds per flush across all buckets
+        (the pre-PR-8 ``ewma_pack``)."""
+        return self._ewma_assemble
+
+    @property
+    def ewma_build(self) -> Optional[float]:
+        """EWMA per-request admission-time row-build seconds (None until
+        a prebuilt admission is recorded)."""
+        return self._ewma_build
+
+    @property
     def ewma_pack(self) -> Optional[float]:
-        """EWMA host pack seconds across all buckets."""
-        return self._ewma_pack
+        """Deprecated pre-PR-8 name of :attr:`ewma_assemble`."""
+        return self._ewma_assemble
 
     def bucket_ewma_wall(self, bucket: BucketKey) -> Optional[float]:
         rec = self._per_bucket.get(bucket)
@@ -242,21 +292,42 @@ class FlushTelemetry:
         rec = self._per_bucket.get(bucket)
         return None if rec is None else rec.get("ewma_wall_xc")
 
+    def samples(self, metric: str) -> list:
+        """All retained samples of one metric, pooled across bucket shapes.
+
+        ``metric`` is one of ``'wall'``, ``'assemble'``, ``'build'`` or
+        ``'compile'`` (seconds, flush/record order within each bucket).
+        Benchmarks use this for stream-wide percentiles that per-bucket
+        :meth:`summary` entries cannot express. Bounded by the telemetry
+        window: at most ``window`` samples per bucket shape survive.
+        """
+        out: list = []
+        for rec in self._per_bucket.values():
+            out.extend(rec.get(metric, ()))
+        return out
+
     def summary(self) -> Dict[str, dict]:
         """Per-bucket-shape latency percentiles, JSON-ready (ms).
 
-        Keys are ``"RxW"`` strings; values carry flush counts, wall p50/p99,
-        pack p50/p99 and the wall EWMA — the fields the benchmarks emit so
-        scheduling quality is tracked across PRs. Counts are explicit about
-        scope: ``flushes_total`` is the lifetime count for the bucket shape
+        Keys are ``"RxW"`` strings; values carry flush counts, wall
+        p50/p99, assemble p50/p99 and the wall EWMA — the fields the
+        benchmarks emit so scheduling quality is tracked across PRs.
+        Since the admission-time packing split (PR 8) the pre-PR-8
+        ``pack_p50_ms``/``pack_p99_ms`` fields are renamed
+        ``assemble_p50_ms``/``assemble_p99_ms`` (per-flush bucket
+        assembly), and shapes with prebuilt admissions additionally carry
+        ``builds_total``/``build_p50_ms``/``build_p99_ms`` (per-request
+        admission-time row build). Counts are explicit about scope:
+        ``flushes_total`` is the lifetime count for the bucket shape
         while ``window_samples`` is the number of retained samples the
         percentiles are computed over (at most ``window``) — a long-lived
-        bucket's percentiles describe its recent flushes, not its lifetime.
+        bucket's percentiles describe its recent flushes, not its
+        lifetime.
         """
         out: Dict[str, dict] = {}
         for (R, W), rec in sorted(self._per_bucket.items()):
             wall = np.asarray(rec["wall"], dtype=np.float64)
-            pack = np.asarray(rec["pack"], dtype=np.float64)
+            assemble = np.asarray(rec["assemble"], dtype=np.float64)
             entry = {
                 "flushes_total": rec["count"],
                 "window_samples": int(len(wall)),
@@ -265,9 +336,16 @@ class FlushTelemetry:
                 entry.update(
                     wall_p50_ms=float(np.percentile(wall, 50)) * 1e3,
                     wall_p99_ms=float(np.percentile(wall, 99)) * 1e3,
-                    pack_p50_ms=float(np.percentile(pack, 50)) * 1e3,
-                    pack_p99_ms=float(np.percentile(pack, 99)) * 1e3,
+                    assemble_p50_ms=float(np.percentile(assemble, 50)) * 1e3,
+                    assemble_p99_ms=float(np.percentile(assemble, 99)) * 1e3,
                     wall_ewma_ms=rec["ewma_wall"] * 1e3,
+                )
+            if rec.get("builds"):
+                build = np.asarray(rec["build"], dtype=np.float64)
+                entry.update(
+                    builds_total=rec["builds"],
+                    build_p50_ms=float(np.percentile(build, 50)) * 1e3,
+                    build_p99_ms=float(np.percentile(build, 99)) * 1e3,
                 )
             if rec.get("compiles"):
                 entry["compiles_total"] = rec["compiles"]
@@ -387,10 +465,12 @@ class AdaptivePolicy(DeadlinePolicy):
     """Dynamic in-flight window from observed flush latency.
 
     Replaces the static ``max_in_flight`` knob: the admission window is
-    ``clamp(ceil(EWMA(service) / EWMA(pack)), min_window, max_window)`` —
-    the pipeline depth at which the host (packing one flush in ``pack``
-    seconds) exactly keeps a device busy for ``service`` seconds per
-    flush. Fewer in flight and the device idles between flushes; more and
+    ``clamp(ceil(EWMA(service) / EWMA(assemble)), min_window,
+    max_window)`` — the pipeline depth at which the host (assembling one
+    flush in ``assemble`` seconds; the per-request row build happens at
+    admission and is off this path) exactly keeps a device busy for
+    ``service`` seconds per flush. Fewer in flight and the device idles
+    between flushes; more and
     extra arrivals only queue *inside* the engine where the front-end
     cannot see or shed them. ``service`` is the submit→fetch wall time
     normalized by the in-flight depth at submit (queue-excluded) — raw
@@ -413,10 +493,11 @@ class AdaptivePolicy(DeadlinePolicy):
         self.max_window = max_window
 
     def admission_window(self, telemetry: FlushTelemetry) -> Optional[int]:
-        service, pack = telemetry.ewma_service, telemetry.ewma_pack
-        if service is None or pack is None or pack <= 0.0:
+        service = telemetry.ewma_service
+        assemble = telemetry.ewma_assemble
+        if service is None or assemble is None or assemble <= 0.0:
             return self.max_window
-        depth = math.ceil(service / pack)
+        depth = math.ceil(service / assemble)
         return max(self.min_window, min(self.max_window, depth))
 
 

@@ -145,12 +145,12 @@ def test_resolve_block_rows_untuned_is_none():
 
 def _packed_bucket(graphs, g_pad=None, k=1):
     from repro.core.api import sample_keys
-    from repro.core.plan import _pack_bucket
+    from repro.core.plan import pack_bucket
 
     plans = [plan_graph(g) for g in graphs]
     keys = [sample_keys(jax.random.PRNGKey(i), k)
             for i in range(len(plans))]
-    return _pack_bucket(plans, keys, k=k, g_pad=g_pad)
+    return pack_bucket(plans, keys, k=k, g_pad=g_pad)
 
 
 def test_sweep_records_winner_and_cache():

@@ -46,7 +46,7 @@ from repro.core import executor as exec_mod
 from repro.core.api import sample_keys
 from repro.core.executor import run_bucket_program
 from repro.core.graph import path, random_arboric
-from repro.core.plan import _pack_bucket
+from repro.core.plan import pack_bucket
 from repro.serve.cluster_batcher import (
     AdmissionRejected,
     ClusterBatcher,
@@ -287,7 +287,7 @@ def test_handle_result_releases_lease_exactly_once():
     g = build_graph(6, path(6))
     plan = plan_graph(g)
     lease = pool.acquire(1, plan.R, plan.W)
-    ell, ranks, elig, m, _ = _pack_bucket(
+    ell, ranks, elig, m, _ = pack_bucket(
         [plan], [sample_keys(jax.random.PRNGKey(0), 1)], k=1,
         staging=lease.arrays, g_pad=1)
     ex = AsyncExecutor()
@@ -462,7 +462,7 @@ def test_sync_executor_completes_at_submit():
     ex = SyncExecutor()
     g = build_graph(6, path(6))
     plan = plan_graph(g)
-    ell, ranks, elig, m, _ = _pack_bucket(
+    ell, ranks, elig, m, _ = pack_bucket(
         [plan], [sample_keys(jax.random.PRNGKey(0), 1)], k=1)
     h = ex.submit(ell, ranks, elig, m, k=1)
     assert h.ready() and h.harvested

@@ -1,0 +1,339 @@
+"""Admission-time packing split: PackedRows build, assemble, promotion.
+
+The contracts under test (core/plan.py build_packed_rows / pack_bucket /
+PackedRows.promote, serve/cluster_batcher.py prebuild admission):
+
+* one canonical edge list per plan — ``plan_graph`` lexsorts once and
+  both ``graph_fingerprint`` and the packer consume it, so the PR 6
+  fingerprint payload is byte-identical whether or not rows are prebuilt;
+* a bucket assembled from prebuilt rows is **byte-identical** to the
+  legacy full repack — same ELL/rank/eligibility/m_edges staging tensors,
+  not merely the same clustering (device reductions are order-invariant,
+  but we hold the stronger property so the bit-exactness contract can
+  never hinge on it);
+* ``PackedRows.promote`` relayouts into any larger ``(R, W)`` and the
+  promoted rows assemble byte-identically to a legacy pack of the
+  promoted plans (the coalesced-flush path);
+* the serving engine retires bit-identical results with ``prebuild_rows``
+  on and off, across executors, kernel paths, partial deadline
+  sub-batches and coalesced (stolen) flushes;
+* ``_pack_bucket`` survives as a deprecation shim of ``pack_bucket``;
+* ``warmup(autotune=True)`` stages its sweep tensors through pool leases
+  (and releases them).
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    BucketBufferPool,
+    PackedRows,
+    build_graph,
+    build_packed_rows,
+    correlation_cluster,
+    pack_bucket,
+    plan_graph,
+    promote_plan,
+)
+from repro.core.api import sample_keys
+from repro.core.graph import path, random_arboric
+from repro.core.mis import random_permutation_ranks_batch
+from repro.core.plan import _pack_bucket, graph_fingerprint, plan_canonical_edges
+from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
+from repro.serve.engine import serve_all
+from repro.serve.scheduler import CoalescingPolicy
+from repro.util import VirtualClock
+
+
+def _graphs(num, lo, hi, seed, lam_hi=2):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(num):
+        n = int(rng.integers(lo, hi))
+        edges, lam = random_arboric(n, int(rng.integers(1, lam_hi + 1)), rng)
+        out.append(build_graph(n, edges))
+    return out
+
+
+def _path_graphs(ns):
+    """Path graphs whose n all land in one (R, W) shape bucket."""
+    return [build_graph(n, path(n)) for n in ns]
+
+
+def _legacy(plans):
+    """Strip prebuilt rows so pack_bucket takes the full-repack path."""
+    for p in plans:
+        p.rows = None
+    return plans
+
+
+def _pack_pair(graphs, k=1, promote=False, seed=0):
+    """(prebuilt staging, legacy staging) for the same graphs and keys.
+
+    With ``promote`` the plans are relayed into a bucket one pow2 step
+    above the component-wise max of the group — the coalesced-flush path.
+    Without it the graphs must already share one shape bucket.
+    """
+    keys = [sample_keys(jax.random.PRNGKey(seed + i), k)
+            for i in range(len(graphs))]
+    mk = lambda: [plan_graph(g) for g in graphs]          # noqa: E731
+    pre, leg = mk(), _legacy(mk())
+    for p, ks in zip(pre, keys):
+        p.rows = build_packed_rows(p, ks)
+    if promote:
+        R = 2 * max(p.R for p in pre)
+        W = 2 * max(p.W for p in pre)
+        pre = [promote_plan(p, R, W) for p in pre]
+        leg = [promote_plan(p, R, W) for p in leg]
+    packed_pre = pack_bucket(pre, [None] * len(pre), k=k)
+    packed_leg = pack_bucket(leg, keys, k=k)
+    return packed_pre, packed_leg
+
+
+def _assert_staging_equal(a, b):
+    ell_a, ranks_a, elig_a, m_a, pad_a = a
+    ell_b, ranks_b, elig_b, m_b, pad_b = b
+    assert (ell_a == ell_b).all()
+    assert (ranks_a == ranks_b).all()
+    assert (elig_a == elig_b).all()
+    assert (m_a == m_b).all()
+    assert pad_a == pad_b
+
+
+# ---------------------------------------------------------------------------
+# Staging byte-equality: prebuilt assembly == legacy repack.
+# ---------------------------------------------------------------------------
+
+
+def test_prebuilt_assembly_matches_legacy_pack_bytes():
+    _assert_staging_equal(*_pack_pair(_path_graphs([9, 12, 14, 16, 10])))
+
+
+def test_prebuilt_assembly_matches_legacy_best_of_k():
+    _assert_staging_equal(*_pack_pair(_path_graphs([11, 13, 16, 9]), k=3))
+
+
+def test_promoted_rows_match_legacy_pack_at_promoted_shape():
+    # The coalesced-flush relayout: mixed native buckets promoted into one
+    # shape a pow2 step above the largest of them.
+    graphs = _graphs(4, 5, 14, seed=3)
+    _assert_staging_equal(*_pack_pair(graphs, k=2, promote=True))
+
+
+def test_mixed_prebuilt_and_legacy_bucket():
+    graphs = _path_graphs([10, 16, 9, 13, 15, 12])
+    keys = [sample_keys(jax.random.PRNGKey(i), 1) for i in range(6)]
+    mixed = [plan_graph(g) for g in graphs]
+    for i, (p, ks) in enumerate(zip(mixed, keys)):
+        p.rows = build_packed_rows(p, ks) if i % 2 == 0 else None
+    group_keys = [None if p.rows is not None else ks
+                  for p, ks in zip(mixed, keys)]
+    legacy = _legacy([plan_graph(g) for g in graphs])
+    _assert_staging_equal(pack_bucket(mixed, group_keys, k=1),
+                          pack_bucket(legacy, keys, k=1))
+
+
+def test_staging_reuse_resets_stale_tail():
+    # A lease previously filled by a larger group must not leak rows into
+    # a smaller all-prebuilt pack (only the tail is re-stamped).
+    pool = BucketBufferPool()
+    big = [plan_graph(g) for g in _path_graphs([9, 11, 13, 15, 16])]
+    R, W = big[0].bucket
+    small = big[:2]
+    keys = [sample_keys(jax.random.PRNGKey(i), 1) for i in range(5)]
+    for p, ks in zip(big, keys):
+        p.rows = build_packed_rows(p, ks)
+    lease = pool.acquire(8, R, W)
+    pack_bucket(big, [None] * 5, k=1, staging=lease.arrays, g_pad=8)
+    lease.release()
+    lease = pool.acquire(8, R, W)      # same pooled (now dirty) buffers
+    reused = pack_bucket(small, [None] * 2, k=1, staging=lease.arrays,
+                         g_pad=8)
+    lease.release()
+    fresh = pack_bucket(small, [None] * 2, k=1, g_pad=8)
+    _assert_staging_equal(reused, fresh)
+
+
+def test_pack_bucket_rejects_mismatched_prebuilt_shape():
+    plan = plan_graph(build_graph(6, path(6)))
+    plan.rows = build_packed_rows(plan, sample_keys(jax.random.PRNGKey(0), 1))
+    bigger = promote_plan(plan, plan.R * 2, plan.W)
+    bigger.rows = plan.rows            # stale rows at the old bucket
+    with pytest.raises(ValueError, match="prebuilt rows"):
+        pack_bucket([bigger], [None], k=1)
+    with pytest.raises(ValueError, match="prebuilt rows"):
+        pack_bucket([plan], [None], k=2)   # k mismatch
+
+
+def test_promote_rejects_shrinking():
+    plan = plan_graph(build_graph(10, path(10)))
+    rows = build_packed_rows(plan, sample_keys(jax.random.PRNGKey(0), 1))
+    with pytest.raises(ValueError):
+        rows.promote(plan.R // 2, plan.W)
+
+
+def test_packed_rows_lazy_ranks_match_direct_dispatch():
+    plan = plan_graph(build_graph(9, path(9)))
+    keys = sample_keys(jax.random.PRNGKey(7), 2)
+    rows = build_packed_rows(plan, keys)
+    direct = np.asarray(random_permutation_ranks_batch(plan.n, keys))
+    assert rows.ranks.shape == (2, plan.R + 1)
+    assert (rows.ranks[:, :plan.n] == direct).all()
+    assert (rows.ranks[:, plan.n:] == np.iinfo(np.int32).max).all()
+
+
+# ---------------------------------------------------------------------------
+# Canonical edge list shared with the fingerprint (PR 6 contract).
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_payload_survives_canonical_sharing():
+    for g in _graphs(4, 6, 30, seed=6, lam_hi=3):
+        with_cache = plan_graph(g)
+        assert with_cache.canonical_edges is not None
+        stripped = plan_graph(g)
+        stripped.canonical_edges = None      # hand-built-plan fallback
+        fp_a = graph_fingerprint(with_cache, jax.random.PRNGKey(1))
+        fp_b = graph_fingerprint(stripped, jax.random.PRNGKey(1))
+        assert fp_a.digest == fp_b.digest
+        # The lazy fallback memoizes the same canonical order.
+        assert (plan_canonical_edges(stripped)
+                == plan_canonical_edges(with_cache)).all()
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim.
+# ---------------------------------------------------------------------------
+
+
+def test_pack_bucket_deprecated_shim():
+    plans = _legacy([plan_graph(build_graph(6, path(6)))])
+    keys = [sample_keys(jax.random.PRNGKey(0), 1)]
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shimmed = _pack_bucket(plans, keys, k=1)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    _assert_staging_equal(shimmed,
+                          pack_bucket(_legacy(plans), keys, k=1))
+
+
+# ---------------------------------------------------------------------------
+# Serving engine: prebuild on/off bit-exactness.
+# ---------------------------------------------------------------------------
+
+
+def _serve(graphs, prebuild, executor="sync", use_kernel=False, policy=None,
+           max_batch=4, num_samples=1, max_wait=None):
+    batcher = ClusterBatcher(max_batch=max_batch, max_wait=max_wait,
+                             num_samples=num_samples, executor=executor,
+                             use_kernel=use_kernel, policy=policy,
+                             result_cache=False, prebuild_rows=prebuild)
+    reqs = [ClusterRequest(uid=i, graph=g, key=jax.random.PRNGKey(i))
+            for i, g in enumerate(graphs)]
+    done = {r.uid: r.result for r in serve_all(batcher, reqs)}
+    assert len(done) == len(graphs)
+    return done, batcher.stats
+
+
+@pytest.mark.parametrize("executor", ["sync", "async", "sharded"])
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_serving_bitexact_across_executors_and_kernels(executor, use_kernel):
+    graphs = _graphs(6, 6, 24, seed=8)
+    pre, _ = _serve(graphs, True, executor=executor, use_kernel=use_kernel,
+                    num_samples=2)
+    leg, stats = _serve(graphs, False, executor=executor,
+                        use_kernel=use_kernel, num_samples=2)
+    assert stats.latency.total_builds == 0
+    for i, g in enumerate(graphs):
+        ref = correlation_cluster(g, key=jax.random.PRNGKey(i),
+                                  num_samples=2, use_kernel=use_kernel)
+        for arm in (pre, leg):
+            assert (arm[i].labels == ref.labels).all()
+            assert arm[i].cost == ref.cost
+            assert arm[i].info["picked_sample"] == ref.info["picked_sample"]
+
+
+def test_deadline_partial_subbatch_prebuilt_bitexact():
+    # max_batch never fills: every flush is a partial deadline sub-batch.
+    graphs = _graphs(5, 6, 20, seed=9)
+    for prebuild in (True, False):
+        clock = VirtualClock()
+        batcher = ClusterBatcher(max_batch=64, max_wait=0.01, clock=clock,
+                                 result_cache=False, prebuild_rows=prebuild)
+        done = {}
+        for i, g in enumerate(graphs):
+            clock.advance(0.004)
+            for r in batcher.admit(ClusterRequest(
+                    uid=i, graph=g, key=jax.random.PRNGKey(i))):
+                done[r.uid] = r.result
+            for r in batcher.poll():
+                done[r.uid] = r.result
+        for r in batcher.flush():
+            done[r.uid] = r.result
+        assert batcher.stats.deadline_flushes > 0
+        for i, g in enumerate(graphs):
+            ref = correlation_cluster(g, key=jax.random.PRNGKey(i))
+            assert (done[i].labels == ref.labels).all()
+            assert done[i].cost == ref.cost
+
+
+def test_coalesced_stolen_flush_prebuilt_bitexact():
+    # Hot (32, 4) bucket + starved small bucket, aggressive stealing: the
+    # stolen requests run at a promoted shape assembled from promoted
+    # PackedRows. Identical steal schedule across arms (virtual clock).
+    stolen_counts = {}
+    for prebuild in (True, False):
+        clock = VirtualClock()
+        batcher = ClusterBatcher(
+            max_batch=8, clock=clock, result_cache=False,
+            prebuild_rows=prebuild,
+            policy=CoalescingPolicy(8, max_wait=0.01, steal_wait=0.001))
+        done = {}
+        graphs = {}
+        rng = np.random.default_rng(11)
+        for i in range(24):
+            n = 6 if i % 8 == 0 else int(rng.integers(17, 30))
+            graphs[i] = build_graph(n, path(n))
+            clock.advance(0.002)
+            for r in batcher.admit(ClusterRequest(
+                    uid=i, graph=graphs[i], key=jax.random.PRNGKey(i))):
+                done[r.uid] = r.result
+            for r in batcher.poll():
+                done[r.uid] = r.result
+        for r in batcher.flush():
+            done[r.uid] = r.result
+        assert batcher.stats.stolen_requests > 0
+        stolen_counts[prebuild] = batcher.stats.stolen_requests
+        for i, g in graphs.items():
+            ref = correlation_cluster(g, key=jax.random.PRNGKey(i))
+            assert (done[i].labels == ref.labels).all()
+            assert done[i].cost == ref.cost
+    assert stolen_counts[True] == stolen_counts[False]
+
+
+# ---------------------------------------------------------------------------
+# Warmup autotune sweep: staged through pool leases.
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_autotune_sweeps_through_pool_lease(tmp_path):
+    from repro.kernels import autotune as at
+
+    prev = at.set_tuning_cache(
+        at.TuningCache(path=str(tmp_path / "tuning.json")))
+    try:
+        batcher = ClusterBatcher(max_batch=4)
+        graphs = _graphs(3, 20, 24, seed=12)
+        compiled = batcher.warmup(graphs, autotune=True,
+                                  candidates=(16, 32), repeats=1)
+        assert compiled > 0
+        # The sweep leased (and released) pool staging instead of packing
+        # into ad-hoc buffers: buffers exist, none outstanding.
+        assert batcher.pool.leased == 0
+        assert batcher.pool.n_buffers > 0
+        assert batcher.stats.tuning
+    finally:
+        at.set_tuning_cache(prev)

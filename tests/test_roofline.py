@@ -154,7 +154,7 @@ def test_measured_kernel_walls_respect_roofline():
     from repro.core import build_graph
     from repro.core.api import sample_keys
     from repro.core.graph import random_arboric
-    from repro.core.plan import _pack_bucket, plan_graph
+    from repro.core.plan import pack_bucket, plan_graph
     from repro.kernels import autotune as at
     from repro.kernels.ops import label_agree_ell_batch, neighbor_min_ell_batch
 
@@ -168,7 +168,7 @@ def test_measured_kernel_walls_respect_roofline():
         plans = [plan_graph(g) for g in graphs]
         keys = [sample_keys(jax.random.PRNGKey(i), 1)
                 for i in range(len(plans))]
-        ell, ranks, elig, _m, _pad = _pack_bucket(plans, keys, k=1, g_pad=4)
+        ell, ranks, elig, _m, _pad = pack_bucket(plans, keys, k=1, g_pad=4)
         b, r, w = (int(s) for s in ell.shape)
 
         records = at.sweep_bucket(ell, ranks, elig, candidates=(16, 32),

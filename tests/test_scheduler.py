@@ -123,16 +123,16 @@ def test_adaptive_policy_window_tracks_latency_ratio():
     pol = AdaptivePolicy(max_batch=4, min_window=1, max_window=8)
     tele = FlushTelemetry(alpha=1.0)    # alpha=1: window = last sample
     assert pol.admission_window(tele) == 8      # cold: never throttle
-    tele.record((8, 4), wall_s=0.100, pack_s=0.010)
+    tele.record((8, 4), wall_s=0.100, assemble_s=0.010)
     assert pol.admission_window(tele) == 8      # ceil(10) clamped to max
-    tele.record((8, 4), wall_s=0.030, pack_s=0.010)
+    tele.record((8, 4), wall_s=0.030, assemble_s=0.010)
     assert pol.admission_window(tele) == 3      # device 3x the host
-    tele.record((8, 4), wall_s=0.001, pack_s=0.010)
+    tele.record((8, 4), wall_s=0.001, assemble_s=0.010)
     assert pol.admission_window(tele) == 1      # host-bound: no pipelining
     # Queue-inclusive wall is normalized by the in-flight depth at submit:
     # 80ms of wall behind 7 other flushes is 10ms of service, not a signal
     # to deepen the window (the feedback loop the normalization breaks).
-    tele.record((8, 4), wall_s=0.080, pack_s=0.010, depth=8)
+    tele.record((8, 4), wall_s=0.080, assemble_s=0.010, depth=8)
     assert pol.admission_window(tele) == 1
     tele.in_flight = 1
     assert not pol.on_admit({}, now=0.0, telemetry=tele)
@@ -342,9 +342,9 @@ def test_coalescing_full_flush_steals_when_room_remains():
 # ---------------------------------------------------------------------------
 
 
-def _warm_telemetry(bucket=(32, 4), wall_s=0.08, pack_s=0.001):
+def _warm_telemetry(bucket=(32, 4), wall_s=0.08, assemble_s=0.001):
     tele = FlushTelemetry(alpha=1.0)    # alpha=1: EWMA = last sample
-    tele.record(bucket, wall_s=wall_s, pack_s=pack_s)
+    tele.record(bucket, wall_s=wall_s, assemble_s=assemble_s)
     return tele
 
 
@@ -840,15 +840,23 @@ def test_flush_latency_telemetry_reaches_stats():
     tele = batcher.stats.latency
     assert tele.total_flushes == batcher.stats.flushes == 2
     assert tele.ewma_wall is not None and tele.ewma_wall >= 0.0
-    assert tele.ewma_pack is not None and tele.ewma_pack >= 0.0
+    assert tele.ewma_assemble is not None and tele.ewma_assemble >= 0.0
+    # Deprecated pre-split alias must keep answering with the new stream.
+    assert tele.ewma_pack == tele.ewma_assemble
+    # Default engine prebuilds rows at admission: one build per request,
+    # in its own telemetry stream, off every flush's wall.
+    assert tele.total_builds == 4
+    assert tele.ewma_build is not None and tele.ewma_build >= 0.0
     summary = tele.summary()
     assert list(summary) == ["8x4"]
     rec = summary["8x4"]
     assert rec["flushes_total"] == 2
     assert rec["window_samples"] == 2
-    for field in ("wall_p50_ms", "wall_p99_ms", "pack_p50_ms",
-                  "pack_p99_ms", "wall_ewma_ms"):
+    for field in ("wall_p50_ms", "wall_p99_ms", "assemble_p50_ms",
+                  "assemble_p99_ms", "wall_ewma_ms", "build_p50_ms",
+                  "build_p99_ms"):
         assert rec[field] >= 0.0
+    assert rec["builds_total"] == 4
     assert batcher.stats.policy == "full"
 
 
@@ -859,7 +867,7 @@ def test_telemetry_summary_separates_lifetime_from_window_counts():
     a lifetime count with windowed percentiles)."""
     tele = FlushTelemetry(window=4)
     for i in range(10):
-        tele.record((8, 4), wall_s=0.001 * (i + 1), pack_s=0.0005)
+        tele.record((8, 4), wall_s=0.001 * (i + 1), assemble_s=0.0005)
     rec = tele.summary()["8x4"]
     assert rec["flushes_total"] == 10
     assert rec["window_samples"] == 4
