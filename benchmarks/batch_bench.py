@@ -13,9 +13,16 @@ policy for the serving-style pass (the same workload streamed through
 ``ClusterBatcher`` + ``serve_all``), whose per-bucket flush-latency
 telemetry is emitted alongside the one-shot numbers.
 
+``--method`` picks the registered bucket program the loop/batch/serve
+passes run (``pivot`` default, ``precluster`` for the constant-round
+agreement program); independent of that axis, a ``method_quality`` pass
+always compares the two programs' disagreement costs at matched
+wall-clock (the faster method earns a best-of-k budget) plus device round
+counts, emitted as the ``method_quality`` block of the JSON.
+
 Run:  PYTHONPATH=src python benchmarks/batch_bench.py \
           [--graphs 96] [--repeat 3] [--executor sync] [--policy full] \
-          [--json BENCH_batch.json]
+          [--method pivot] [--json BENCH_batch.json]
 
 Reported (and written machine-readably to ``--json`` for cross-PR perf
 tracking):
@@ -46,6 +53,7 @@ from repro.core import batch as batch_mod
 from repro.core import make_executor, program_cache_info
 from repro.core.graph import random_arboric
 from repro.core.mis import _greedy_mis_parallel_impl
+from repro.core.programs import registered_methods
 from repro.serve.cluster_batcher import ClusterBatcher, ClusterRequest
 from repro.serve.engine import serve_all
 from repro.serve.scheduler import POLICY_NAMES
@@ -65,21 +73,83 @@ def make_workload(num_graphs: int, seed: int = 0):
     return graphs, keys, lams
 
 
-def bench_loop(graphs, keys, lams):
+def bench_loop(graphs, keys, lams, method: str = "pivot"):
     t0 = time.perf_counter()
-    results = [correlation_cluster(g, key=k, lam=lam)
+    results = [correlation_cluster(g, key=k, lam=lam, method=method)
                for g, k, lam in zip(graphs, keys, lams)]
     return time.perf_counter() - t0, results
 
 
-def bench_batch(graphs, keys, lams, executor):
+def bench_batch(graphs, keys, lams, executor, method: str = "pivot",
+                num_samples: int = 1):
     t0 = time.perf_counter()
     results = correlation_cluster_batch(graphs, keys=keys, lams=lams,
-                                        executor=executor)
+                                        executor=executor, method=method,
+                                        num_samples=num_samples)
     return time.perf_counter() - t0, results
 
 
-def bench_serve_policy(graphs, lams, policy: str, executor: str):
+def bench_method_quality(graphs, keys, lams, executor,
+                         max_matched_k: int = 16) -> dict:
+    """Clustering quality per registered method at matched wall-clock.
+
+    PIVOT is a 3-approx in expectation; the constant-round precluster
+    program trades quality for O(1) rounds-loop trips. A raw cost
+    comparison at one sample each would hide that trade, so the faster
+    method is granted a best-of-k budget: ``k_matched = floor(pivot_wall /
+    precluster_wall)`` (clamped to [1, max_matched_k]) extra samples, the
+    budget equalizing the two methods' steady-state walls. Emits total
+    disagreement costs, the cost ratio vs PIVOT at 1 sample and at the
+    matched budget, and mean device round counts per method — the
+    ``method_quality`` block of ``BENCH_batch.json``.
+    """
+    walls, runs = {}, {}
+    for method in ("pivot", "precluster"):
+        bench_batch(graphs, keys, lams, executor, method=method)   # warm
+        walls[method], runs[method] = bench_batch(graphs, keys, lams,
+                                                  executor, method=method)
+    k_matched = max(1, min(max_matched_k,
+                           int(walls["pivot"] // max(walls["precluster"],
+                                                     1e-9))))
+    if k_matched > 1:
+        bench_batch(graphs, keys, lams, executor, method="precluster",
+                    num_samples=k_matched)                          # warm
+        wall_m, res_m = bench_batch(graphs, keys, lams, executor,
+                                    method="precluster",
+                                    num_samples=k_matched)
+    else:
+        wall_m, res_m = walls["precluster"], runs["precluster"]
+    cost_pivot = sum(r.cost for r in runs["pivot"])
+    cost_pre = sum(r.cost for r in runs["precluster"])
+    cost_pre_m = sum(r.cost for r in res_m)
+    block = {
+        "n_graphs": len(graphs),
+        "matched_samples": k_matched,
+        "per_method": {
+            "pivot": {
+                "wall_s": walls["pivot"],
+                "total_cost": cost_pivot,
+                "mean_rounds": float(np.mean(
+                    [r.info["depth"] for r in runs["pivot"]])),
+            },
+            "precluster": {
+                "wall_s": walls["precluster"],
+                "total_cost": cost_pre,
+                "mean_rounds": float(np.mean(
+                    [r.info["depth"] for r in runs["precluster"]])),
+                "matched_wall_s": wall_m,
+                "matched_total_cost": cost_pre_m,
+            },
+        },
+        # >1 means precluster leaves more disagreements than PIVOT.
+        "cost_ratio_vs_pivot": cost_pre / max(1, cost_pivot),
+        "cost_ratio_vs_pivot_matched": cost_pre_m / max(1, cost_pivot),
+    }
+    return block
+
+
+def bench_serve_policy(graphs, lams, policy: str, executor: str,
+                       method: str = "pivot"):
     """Stream the workload through the serving engine under a policy.
 
     Same graphs/keys as the one-shot passes (so results are asserted
@@ -90,7 +160,7 @@ def bench_serve_policy(graphs, lams, policy: str, executor: str):
     """
     max_wait = None if policy == "full" else 0.05
     batcher = ClusterBatcher(max_batch=32, policy=policy, max_wait=max_wait,
-                             executor=executor)
+                             executor=executor, method=method)
     reqs = [ClusterRequest(uid=i, graph=g, key=jax.random.PRNGKey(i),
                            lam=lam)
             for i, (g, lam) in enumerate(zip(graphs, lams))]
@@ -109,6 +179,11 @@ def main():
                     default="sync")
     ap.add_argument("--policy", choices=list(POLICY_NAMES), default="full",
                     help="scheduling policy for the serving-style pass")
+    ap.add_argument("--method", choices=list(registered_methods()),
+                    default="pivot",
+                    help="registered bucket program for the loop/batch/"
+                         "serve passes (the method_quality block always "
+                         "compares pivot vs precluster)")
     ap.add_argument("--autotune", action="store_true",
                     help="sweep kernel block shapes per bucket tier "
                          "(after the cold/steady passes, so those stay "
@@ -124,11 +199,12 @@ def main():
 
     # --- cold pass: fresh shapes, compiles included (the serving scenario) --
     mis_cache0 = int(_greedy_mis_parallel_impl._cache_size())
-    t_loop, loop_res = bench_loop(graphs, keys, lams)
+    t_loop, loop_res = bench_loop(graphs, keys, lams, method=args.method)
     mis_compiles = int(_greedy_mis_parallel_impl._cache_size()) - mis_cache0
 
     batch_cache0 = batch_mod.program_cache_size()
-    t_batch, batch_res = bench_batch(graphs, keys, lams, executor)
+    t_batch, batch_res = bench_batch(graphs, keys, lams, executor,
+                                     method=args.method)
     batch_compiles = batch_mod.program_cache_size() - batch_cache0
     buckets = sorted({r.info["bucket"] for r in batch_res})
 
@@ -137,7 +213,7 @@ def main():
             "batch output diverged from the per-graph engine"
 
     print(f"workload: {n_graphs} graphs, {len(buckets)} buckets {buckets}, "
-          f"executor={args.executor}")
+          f"executor={args.executor} method={args.method}")
     print(f"[cold]   per-graph loop: {t_loop:8.2f}s  "
           f"{n_graphs / t_loop:8.1f} graphs/s  "
           f"({mis_compiles} MIS compiles)")
@@ -149,9 +225,10 @@ def main():
           "(graphs-shapes vs buckets)")
 
     # --- steady state: every shape already compiled --------------------------
-    loop_times = [bench_loop(graphs, keys, lams)[0]
+    loop_times = [bench_loop(graphs, keys, lams, method=args.method)[0]
                   for _ in range(args.repeat)]
-    batch_times = [bench_batch(graphs, keys, lams, executor)[0]
+    batch_times = [bench_batch(graphs, keys, lams, executor,
+                               method=args.method)[0]
                    for _ in range(args.repeat)]
     t_loop_w, t_batch_w = min(loop_times), min(batch_times)
     print(f"[steady] per-graph loop: {t_loop_w:8.2f}s  "
@@ -170,7 +247,8 @@ def main():
     tuning_block = {"enabled": bool(args.autotune)}
     if args.autotune:
         t0 = time.perf_counter()
-        warmer = ClusterBatcher(max_batch=32, executor=args.executor)
+        warmer = ClusterBatcher(max_batch=32, executor=args.executor,
+                                method=args.method)
         warmer.warmup(graphs, autotune=True)
         tuning_block.update(warmer.stats.tuning or {})
         tuning_block["sweep_wall_s"] = time.perf_counter() - t0
@@ -182,10 +260,22 @@ def main():
                   f"tuned={rec['winner_ms']:7.2f}ms "
                   f"speedup={rec['speedup_vs_default']:.2f}x")
 
+    # --- method quality: disagreement cost per method at matched wall ------
+    method_quality = bench_method_quality(graphs, keys, lams, executor)
+    mq_pre = method_quality["per_method"]["precluster"]
+    print(f"[quality] precluster/pivot cost ratio: "
+          f"{method_quality['cost_ratio_vs_pivot']:.3f} (1 sample), "
+          f"{method_quality['cost_ratio_vs_pivot_matched']:.3f} "
+          f"(best-of-{method_quality['matched_samples']} matched wall); "
+          f"rounds pivot="
+          f"{method_quality['per_method']['pivot']['mean_rounds']:.1f} "
+          f"precluster={mq_pre['mean_rounds']:.1f}")
+
     # --- serving pass: same workload through the scheduler-driven engine ----
-    bench_serve_policy(graphs, lams, args.policy, args.executor)  # warm
+    bench_serve_policy(graphs, lams, args.policy, args.executor,
+                       method=args.method)  # warm
     t_serve, served, serve_batcher = bench_serve_policy(
-        graphs, lams, args.policy, args.executor)
+        graphs, lams, args.policy, args.executor, method=args.method)
     serve_stats = serve_batcher.stats
     for uid, a in enumerate(loop_res):
         b = served[uid].result
@@ -206,6 +296,7 @@ def main():
             "bench": "batch",
             "executor": args.executor,
             "policy": args.policy,
+            "method": args.method,
             "n_graphs": n_graphs,
             "n_buckets": len(buckets),
             "cold": {
@@ -263,6 +354,7 @@ def main():
         if cost_stats is not None:      # cost policy: steal pricing counters
             serve_payload["cost"] = cost_stats()
         payload["serve"] = serve_payload
+        payload["method_quality"] = method_quality
         payload["tuning"] = tuning_block
         # Host metadata + tuning-cache state: makes the perf trajectory
         # comparable across machines.

@@ -45,6 +45,15 @@ Three questions answered, machine-readably (``BENCH_serve.json``):
   deterministic coalescing leg — every result of a promoted (stolen)
   prebuilt flush bit-identical to the per-graph engine. Emitted as
   ``pack_split`` in the JSON.
+* **Mixed-method trace** (the PR 10 method-registry acceptance scenario;
+  always runs) — requests alternating ``method='pivot'`` /
+  ``method='precluster'`` through one engine under the cost policy. Each
+  method flushes through its own ``(method, R, W)`` queue (telemetry keys
+  asserted for both), cross-method steals are refused by construction,
+  and every result is asserted bit-identical to the per-graph engine of
+  its own method. Emitted as ``mixed_method``. The headline policy
+  passes take a ``--method`` axis so CI can smoke each registered bucket
+  program end to end.
 * **Executor / adaptive window** — what does pipelined execution buy, and
   does the adaptive in-flight window match a hand-tuned static
   ``max_in_flight``? Closed-loop steady-state comparisons, interleaved so
@@ -59,8 +68,8 @@ second measures.
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py \
           [--graphs 200] [--max-batch 16] [--max-wait 0.05] \
-          [--policy deadline] [--executor sync] [--smoke] \
-          [--json BENCH_serve.json]
+          [--policy deadline] [--executor sync] [--method pivot] \
+          [--smoke] [--json BENCH_serve.json]
 """
 
 from __future__ import annotations
@@ -74,6 +83,7 @@ import numpy as np
 
 from repro.core import build_graph, correlation_cluster, program_cache_info
 from repro.core.graph import path, random_arboric
+from repro.core.programs import registered_methods
 from repro.serve.cluster_batcher import (
     AdmissionRejected,
     ClusterBatcher,
@@ -101,7 +111,7 @@ def make_requests(num_graphs: int, seed: int = 0, n_lo: int = 8,
 
 def drive(reqs, max_batch: int, max_wait, num_samples: int,
           executor: str = "sync", arrival_gap: float = 0.0, batcher=None,
-          policy=None):
+          policy=None, method: str = "pivot"):
     """One serving pass; returns (wall_seconds, per-request waits, stats).
 
     ``arrival_gap`` spaces admissions in time (a Poisson-ish open-loop
@@ -116,7 +126,7 @@ def drive(reqs, max_batch: int, max_wait, num_samples: int,
     if batcher is None:
         batcher = ClusterBatcher(max_batch=max_batch, max_wait=max_wait,
                                  num_samples=num_samples, executor=executor,
-                                 policy=policy)
+                                 policy=policy, method=method)
     waits = {}
 
     def account(done):
@@ -758,6 +768,67 @@ def pack_split_comparison(smoke: bool, max_batch: int = 16):
     return results
 
 
+def mixed_method_comparison(smoke: bool, max_batch: int = 16,
+                            executor: str = "sync"):
+    """One engine serving both registered bucket programs in one trace,
+    cost policy active (the PR 10 acceptance scenario).
+
+    Requests alternate ``method='pivot'`` / ``method='precluster'`` over
+    assorted shapes through a single :class:`ClusterBatcher` under the
+    cost-aware coalescing policy, so the per-``(method, R, W)`` queues,
+    the cross-method steal refusal, and the method-tagged program-cache
+    probes are all exercised together. Asserted: every retired result is
+    bit-identical to the per-graph engine *of its own method* — a
+    coalesced flush that mixed programs would break this immediately —
+    and the flush-latency telemetry carries method-prefixed bucket keys
+    for both methods (proving the queues never merged).
+    """
+    n = 48 if smoke else 128
+    methods = ("pivot", "precluster")
+    reqs = make_requests(n, seed=31, n_lo=8, n_hi=64)
+    engine = ClusterBatcher(max_batch=max_batch, max_wait=0.005,
+                            policy="cost", executor=executor)
+    creqs = [ClusterRequest(uid=uid, graph=g, lam=lam,
+                            key=jax.random.PRNGKey(uid),
+                            method=methods[uid % 2])
+             for uid, g, lam in reqs]
+    t0 = time.perf_counter()
+    done = {r.uid: r for r in serve_all(engine, creqs)}
+    dt = time.perf_counter() - t0
+    assert len(done) == n, "requests lost in the mixed-method engine"
+    for uid, g, lam in reqs:
+        m = methods[uid % 2]
+        ref = correlation_cluster(g, key=jax.random.PRNGKey(uid), lam=lam,
+                                  method=m)
+        assert done[uid].result.method == m
+        assert (done[uid].result.labels == ref.labels).all() \
+            and done[uid].result.cost == ref.cost, (
+            f"mixed-method engine diverged from the per-graph {m!r} "
+            f"engine on request {uid}")
+    stats = engine.stats
+    tele_methods = {key.split(":", 1)[0]
+                    for key in stats.latency.summary()}
+    assert set(methods) <= tele_methods, (
+        f"telemetry saw methods {sorted(tele_methods)}; both methods must "
+        "flush through their own queues")
+    engine.close()
+    block = {
+        "n_requests": n,
+        "gps": n / dt,
+        "flushes": stats.flushes,
+        "coalesced_flushes": stats.coalesced_flushes,
+        "stolen_requests": stats.stolen_requests,
+        "buckets_seen": stats.buckets_seen,
+        "methods": sorted(tele_methods),
+    }
+    block.update(engine.policy.cost_stats())
+    print(f"[mixed-method] {block['gps']:8.1f} graphs/s   "
+          f"flushes={block['flushes']}  stolen={block['stolen_requests']}  "
+          f"queues={block['buckets_seen']}  "
+          f"bit-exact per method: {n} requests")
+    return block
+
+
 def pct(x, q):
     return float(np.percentile(x, q))
 
@@ -777,6 +848,10 @@ def main():
     ap.add_argument("--executor", choices=["sync", "async", "sharded"],
                     default="sync",
                     help="bucket executor for the policy passes")
+    ap.add_argument("--method", choices=list(registered_methods()),
+                    default="pivot",
+                    help="bucket program for the headline policy passes "
+                         "(the mixed-method scenario always runs both)")
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="machine-readable results path ('' to skip)")
     ap.add_argument("--smoke", action="store_true",
@@ -795,14 +870,15 @@ def main():
     print(f"workload: {n_graphs} graphs, max_batch={args.max_batch}, "
           f"max_wait={args.max_wait * 1e3:.0f}ms, "
           f"arrival gap={arrival_gap * 1e3:.1f}ms, "
-          f"policy={args.policy}, executor={args.executor}")
+          f"policy={args.policy}, executor={args.executor}, "
+          f"method={args.method}")
 
     # Warm every pow2 sub-batch program the workload can hit (deadline
     # flushes run partial buckets, and flush grouping is timing-dependent,
     # so per-policy warm passes alone leave compile spikes in the tail).
     warmer = ClusterBatcher(max_batch=args.max_batch,
                             num_samples=args.num_samples,
-                            executor=args.executor)
+                            executor=args.executor, method=args.method)
     t0 = time.perf_counter()
     compiled = warmer.warmup((g for _, g, _ in reqs),
                              autotune=args.autotune,
@@ -825,10 +901,12 @@ def main():
     for policy in policy_runs:
         max_wait = None if policy == "full" else args.max_wait
         drive(reqs, args.max_batch, max_wait, args.num_samples,
-              executor=args.executor, policy=policy)          # warm pass
+              executor=args.executor, policy=policy,
+              method=args.method)                             # warm pass
         dt, waits, stats = drive(reqs, args.max_batch, max_wait,
                                  args.num_samples, executor=args.executor,
-                                 policy=policy, arrival_gap=arrival_gap)
+                                 policy=policy, arrival_gap=arrival_gap,
+                                 method=args.method)
         results[policy] = (dt, waits, stats)
         extra = ""
         if stats.stolen_requests:
@@ -925,19 +1003,27 @@ def main():
     batcher = ClusterBatcher(max_batch=args.max_batch,
                              max_wait=args.max_wait,
                              num_samples=args.num_samples,
-                             executor=args.executor, policy=args.policy)
+                             executor=args.executor, policy=args.policy,
+                             method=args.method)
     sample_reqs = [ClusterRequest(uid=uid, graph=g,
                                   key=jax.random.PRNGKey(uid), lam=lam)
                    for uid, g, lam in sample]
     done = {r.uid: r for r in serve_all(batcher, sample_reqs)}
     for uid, g, lam in sample:
         ref = correlation_cluster(g, key=jax.random.PRNGKey(uid), lam=lam,
-                                  num_samples=args.num_samples)
+                                  num_samples=args.num_samples,
+                                  method=args.method)
         assert (done[uid].result.labels == ref.labels).all()
         assert done[uid].result.cost == ref.cost
     print(f"bit-exactness: {len(sample)} sampled requests match the "
           f"per-graph engine under the {args.policy!r} policy "
-          f"({args.executor} executor)")
+          f"({args.executor} executor, {args.method!r} method)")
+
+    # Mixed-method trace: both registered bucket programs through one
+    # engine under the cost policy, asserted bit-exact per method.
+    mixed_method = mixed_method_comparison(args.smoke,
+                                           max_batch=args.max_batch,
+                                           executor=args.executor)
 
     # Shape-churn eviction: scheduler heat hints vs blind LRU (runs last —
     # it squeezes the global program cache, which would otherwise force
@@ -980,6 +1066,7 @@ def main():
             "bench": "serve",
             "policy": args.policy,
             "executor": args.executor,
+            "method": args.method,
             "smoke": bool(args.smoke),
             "n_graphs": n_graphs,
             "max_batch": args.max_batch,
@@ -994,6 +1081,7 @@ def main():
             "inflight_window_gps": window_cmp,
             "adaptive_vs_static_ratio": adaptive_ratio,
             "repeat_traffic": repeat_traffic,
+            "mixed_method": mixed_method,
             "tuning": tuning_block,
             "program_cache": program_cache_info(),
         }

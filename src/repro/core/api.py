@@ -9,6 +9,9 @@ dedup stage and the standalone examples. Methods:
                       scheduling with MPC round ledger).
 * ``pivot_raw``     — PIVOT without the degree cap (baseline comparator;
                       this is what Chierichetti et al. simulate).
+* ``precluster``    — constant-round neighbourhood-agreement pre-clustering
+                      (arXiv 2106.08448); the per-graph reference of the
+                      batch engine's ``'precluster'`` bucket program.
 * ``forest_exact``  — Corollary 27/31(1): maximum matching (λ=1 inputs).
 * ``forest_approx`` — Lemma 29/Cor 31(2,3): maximal matching + length-3
                       augmentation passes.
@@ -85,10 +88,35 @@ def correlation_cluster(
     key = key if key is not None else jax.random.PRNGKey(0)
     info: dict = {}
 
-    if lam is None and method in ("pivot", "pivot_phased", "cliques"):
+    if lam is None and method in ("pivot", "pivot_phased", "cliques",
+                                  "precluster"):
         lo, hi = arboricity_bounds(g, exact=g.n <= 200_000)
         lam = hi  # degeneracy upper bound; only moves the O(λ/ε) constant
         info["lambda_estimate"] = (lo, hi)
+
+    if method == "precluster":
+        # Host reference of the batch engine's constant-round program:
+        # same degree-cap planning, same ranks, same integer agreement
+        # predicate and propagation — bit-identical labels per key.
+        from .plan import plan_graph
+        from .programs import precluster_host
+
+        plan = plan_graph(g, method="precluster", eps=eps, lam=lam)
+        best = None
+        for i, k in enumerate(sample_keys(key, num_samples)):
+            ranks = np.asarray(random_permutation_ranks(g.n, k))
+            labels_i, rounds_i = precluster_host(
+                g.n, plan.canonical_edges, plan.eligible, ranks)
+            cost_i = clustering_cost(g, labels_i)
+            if best is None or cost_i < best[0]:
+                best = (cost_i, labels_i, rounds_i, i)
+        cost, labels, rounds, picked = best
+        info.update(depth=rounds, threshold=plan.threshold,
+                    high_degree=int((~plan.eligible).sum()))
+        if num_samples > 1:
+            info.update(num_samples=num_samples, picked_sample=picked)
+        return ClusterResult(labels=np.asarray(labels), cost=cost,
+                             method=method, info=info)
 
     if method in ("pivot", "pivot_phased", "pivot_raw"):
         engine = "phased" if method == "pivot_phased" else "rounds"
@@ -155,7 +183,15 @@ def correlation_cluster(
     elif method == "cliques":
         labels = np.asarray(clique_clustering(g))
     else:
-        raise ValueError(f"unknown method {method!r}")
+        # Batch-engine methods come from the program registry; host-only
+        # methods are this module's own — one generated list, never stale.
+        from .programs import registered_methods
+
+        host_only = ("pivot_phased", "forest_exact", "forest_approx",
+                     "cliques")
+        supported = tuple(sorted(set(registered_methods()) | set(host_only)))
+        raise ValueError(f"unknown method {method!r}; expected one of "
+                         f"{supported}")
 
     return ClusterResult(
         labels=np.asarray(labels),

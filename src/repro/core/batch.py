@@ -12,10 +12,11 @@ The engine is layered (this module is the thin composition of the two):
   ``pack_bucket`` ELL packer (with prebuilt ``PackedRows`` assembly for
   the serving layer's admission-time packing), ``PackStats`` pad
   accounting, and the lease-based ``BucketBufferPool`` staging reuse.
-* :mod:`repro.core.executor` — device side: the fused MIS + PIVOT capture
-  + cost + best-of-k program, the bounded LRU of compiled bucket programs,
-  and the ``BucketExecutor`` implementations (``sync`` blocking,
-  ``async`` pipelined, ``sharded`` multi-device ``shard_map``).
+* :mod:`repro.core.executor` — device side: the fused bucket programs
+  (rounds body × cost pass × best-of-k, composed from the method/objective
+  registries in :mod:`repro.core.programs`), the bounded LRU of compiled
+  bucket programs, and the ``BucketExecutor`` implementations (``sync``
+  blocking, ``async`` pipelined, ``sharded`` multi-device ``shard_map``).
 
 Bit-exactness contract: for the same per-graph PRNG key,
 ``correlation_cluster_batch`` returns labels, costs and picked sample
@@ -70,6 +71,19 @@ def _cost_host(g: Graph, labels: np.ndarray) -> int:
     return pos_disagree + (intra_pairs - intra_pos)
 
 
+def _minmax_cost_host(g: Graph, labels: np.ndarray) -> int:
+    """Worst-vertex disagreement oracle, alongside :func:`_cost_host`.
+
+    Full-graph semantics (every positive edge attributed to both
+    endpoints); the device ``'minmax'`` cost pass scores the
+    eligible-induced capped subgraph, so the two agree exactly when the
+    degree cap drops nothing (see :mod:`repro.core.programs`).
+    """
+    from .programs import minmax_cost_host
+
+    return minmax_cost_host(g.n, g.undirected_edges(), labels)
+
+
 def correlation_cluster_batch(
     graphs: Sequence[Graph],
     keys: Optional[Sequence[jax.Array] | jax.Array] = None,
@@ -81,6 +95,7 @@ def correlation_cluster_batch(
     pool: Optional[BucketBufferPool] = None,
     with_stats: bool = False,
     executor=None,
+    objective: str = "disagree",
 ):
     """Cluster many graphs through the shape-bucketed batch engine.
 
@@ -88,8 +103,12 @@ def correlation_cluster_batch(
       graphs: the positive-edge graphs (``Graph`` instances).
       keys: per-graph PRNG keys (one key broadcast to all if a single key is
         given; defaults to ``PRNGKey(0)`` like the per-graph api).
-      method: ``'pivot'`` (Theorem 26 degree cap + PIVOT, Corollary 28) or
-        ``'pivot_raw'`` (no cap).
+      method: one of {METHODS} — each a registered
+        :class:`~repro.core.programs.BucketProgramSpec`:
+{METHOD_LINES}
+      objective: one of {OBJECTIVES} — the registered cost pass scoring
+        each sample before best-of-k selection:
+{OBJECTIVE_LINES}
       lams: optional per-graph arboricity bounds (estimated when omitted).
       num_samples: best-of-k PIVOT — each graph is clustered under ``k``
         folded keys *within the same bucket* and the lowest-cost replica is
@@ -112,7 +131,9 @@ def correlation_cluster_batch(
     under the same keys (plus ``PackStats`` when ``with_stats``).
     """
     from .api import ClusterResult, sample_keys  # deferred: api imports us
+    from .programs import objective_spec
 
+    objective_spec(objective)        # fail fast, listing registered names
     if num_samples < 1:
         raise ValueError(
             f"num_samples must be >= 1, got {num_samples} (use 1 for a "
@@ -152,7 +173,7 @@ def correlation_cluster_batch(
         bkeys = [sample_keys(keys[gi], k) for gi in members]
         handle, bucket_stats = pack_and_submit(
             bplans, bkeys, k, ex, pool=pool, use_kernel=use_kernel,
-            payload=(members, bplans), track=False)
+            payload=(members, bplans), track=False, objective=objective)
         handles.append(handle)
         stats.merge(bucket_stats)
 
@@ -168,6 +189,35 @@ def correlation_cluster_batch(
     results: List[ClusterResult] = [results_by_graph[gi]
                                     for gi in range(n_graphs)]
     return (results, stats) if with_stats else results
+
+
+def _registry_doc() -> None:
+    # Fill the method/objective sections of the docstring from the program
+    # registry, so adding a method can never leave stale user-facing docs.
+    from .programs import method_spec, objective_spec, registered_methods, \
+        registered_objectives
+
+    def names(seq):
+        return "/".join(f"``'{name}'``" for name in seq)
+
+    def lines(seq, describe):
+        return "\n".join(f"        * ``'{name}'`` — {describe(name)}"
+                         for name in seq)
+
+    doc = correlation_cluster_batch.__doc__
+    if doc is None:              # stripped docstrings (python -OO)
+        return
+    doc = doc.replace("{METHODS}", names(registered_methods()))
+    doc = doc.replace("{METHOD_LINES}", lines(
+        registered_methods(), lambda m: method_spec(m).description))
+    doc = doc.replace("{OBJECTIVES}", names(registered_objectives()))
+    doc = doc.replace("{OBJECTIVE_LINES}", lines(
+        registered_objectives(), lambda o: objective_spec(o).description))
+    correlation_cluster_batch.__doc__ = doc
+
+
+_registry_doc()
+del _registry_doc
 
 
 __all__ = [

@@ -54,6 +54,21 @@ def canonicalize(labels: np.ndarray) -> np.ndarray:
     return inv.astype(np.int32)
 
 
+def minmax_cost(g: Graph, labels) -> int:
+    """Worst-vertex disagreement (min-max objective, arXiv 2502.12519).
+
+    Per vertex v: its cut positive edges plus its missing intra-cluster
+    positive edges; the clustering is scored by the *maximum* over
+    vertices instead of the sum. Numpy host oracle over the full graph —
+    the full-graph counterpart of the device cost pass in
+    :mod:`repro.core.programs` (which scores the eligible-induced capped
+    subgraph; the two agree exactly when the degree cap drops nothing).
+    """
+    from .programs import minmax_cost_host
+
+    return minmax_cost_host(g.n, g.undirected_edges(), labels)
+
+
 # ---------------------------------------------------------------------------
 # Brute-force optimum (tiny n): enumerate set partitions via restricted
 # growth strings (recursive).
@@ -148,6 +163,7 @@ def lemma25_transform(g: Graph, labels: np.ndarray, lam: int) -> np.ndarray:
 __all__ = [
     "clustering_cost",
     "clustering_cost_split",
+    "minmax_cost",
     "canonicalize",
     "brute_force_opt",
     "lemma25_transform",

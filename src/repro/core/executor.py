@@ -3,17 +3,24 @@
 The "how it runs" half of the plan/executor split (packing and bucketing
 live in :mod:`repro.core.plan`). Three pieces:
 
-**The fused bucket program** (:func:`_batch_pivot_cost_impl`) — one jit
-program per ``(B, R, W)`` bucket shape that runs MIS rounds
-(``lax.while_loop``), PIVOT capture, the disagreement-cost pass and the
-best-of-k argmin entirely on device, so only winning labels / costs /
-sample indices cross back to the host. Every batch entry is independent of
-every other, which is what makes both async overlap and data-parallel
-sharding semantics-preserving.
+**The fused bucket programs** — one jit program per ``(B, R, W)`` bucket
+shape × registered ``(method, objective)`` combination, composed from the
+method registry in :mod:`repro.core.programs`: the method's rounds body
+(MIS ``lax.while_loop`` for ``'pivot'``, straight-line constant-round
+agreement for ``'precluster'``), the objective's cost pass
+(``'disagree'`` / ``'minmax'``) and the shared best-of-k argmin run
+entirely on device, so only winning labels / costs / sample indices cross
+back to the host. Every batch entry is independent of every other, which
+is what makes both async overlap and data-parallel sharding
+semantics-preserving. (:func:`_batch_pivot_cost_impl` survives as the
+pre-registry name of the pivot × disagree composition.)
 
 **The compiled-program cache** — :func:`run_bucket_program` resolves each
-``(shape, k, kernel, donation, mesh)`` request through a bounded LRU of jit
-instances. Long-lived servers seeing many bucket shapes therefore hold at
+``(shape, k, kernel, donation, mesh, method, objective)`` request through
+a bounded LRU of jit instances. Methods sharing one *program family*
+(``'pivot'`` / ``'pivot_raw'``) share compiled programs, and the legacy
+pivot × disagree keys are preserved verbatim so the refactor cannot
+fragment a warmed cache. Long-lived servers seeing many bucket shapes hold at
 most :func:`program_cache_capacity` compiled programs; evictions and
 compiles are counted (:func:`program_cache_info`) instead of growing
 memory without limit. The LRU takes *hints* from layers that know more
@@ -66,133 +73,27 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map as _shard_map
 from repro.util import next_pow2
 
-from .mis import INF_RANK
-
-UNDECIDED = 0
-IN_MIS = 1
-REMOVED = 2
-
+from .programs import IN_MIS, REMOVED, UNDECIDED, _gather_rows, \
+    bucket_impl, method_spec, objective_spec
 
 # ---------------------------------------------------------------------------
-# Fused device program: MIS rounds + PIVOT capture + cost + best-of-k argmin.
+# Fused device programs: rounds body + cost pass + best-of-k argmin, composed
+# from the method/objective registries in repro.core.programs.
 # ---------------------------------------------------------------------------
-
-
-def _gather_rows(table: jnp.ndarray, ell: jnp.ndarray) -> jnp.ndarray:
-    """(B, R+1) per-graph state gathered through (B, R, W) neighbour ids."""
-    return jax.vmap(lambda t, e: t[e])(table, ell)
 
 
 def _batch_pivot_cost_impl(ell, ranks_p, elig_p, m_edges, k: int,
                            use_kernel: bool,
                            block_rows: Optional[Tuple[int, int]] = None):
-    """Cluster + cost + select every graph of one shape bucket on device.
+    """Pre-registry name of the pivot × disagree bucket program.
 
-    Args:
-      ell: (B, R, W) int32 ELL adjacency, pad entries = R; B = G·k with the
-        k sample replicas of each graph contiguous.
-      ranks_p: (B, R+1) int32 ranks, slot R = INF.
-      elig_p: (B, R+1) bool degree-cap eligibility, slot R False.
-      m_edges: (B,) int32 full-graph undirected edge counts.
-      k: best-of-k replica count (static).
-      block_rows: tuned (neighbor_min, label_agree) kernel row tiles
-        (static; None → kernel defaults). Only affects timing — every
-        block shape produces bit-identical labels/costs/picked.
-    Returns per *group* (graph) arrays:
-      (labels (G, R), costs (G,), picked (G,), rounds (G,)).
+    Kept as a thin wrapper over :func:`repro.core.programs.bucket_impl`
+    (same signature, bit-identical outputs) for callers that imported the
+    fused pipeline directly before the method registry existed.
     """
-    B, R, W = ell.shape
-    nm_rows, la_rows = block_rows if block_rows is not None else (None, None)
-    ranks = ranks_p[:, :R]
-    elig = elig_p[:, :R]
-    # Rank gather is loop-invariant on the jnp path — hoisted out of the
-    # while body; only the activity gather changes per round.
-    nbr_ranks = None if use_kernel else _gather_rows(ranks_p, ell)
-
-    def nbr_min(active: jnp.ndarray) -> jnp.ndarray:
-        active_p = jnp.concatenate(
-            [active, jnp.zeros((B, 1), active.dtype)], axis=1)
-        if use_kernel:
-            from repro.kernels import ops as _kops  # kernels stay optional
-
-            if nm_rows is not None:
-                return _kops.neighbor_min_ell_batch(ell, ranks_p, active_p,
-                                                    block_rows=nm_rows)
-            return _kops.neighbor_min_ell_batch(ell, ranks_p, active_p)
-        act = _gather_rows(active_p, ell)
-        return jnp.min(jnp.where(act, nbr_ranks, INF_RANK), axis=2)
-
-    def cond(carry):
-        status, _ = carry
-        return jnp.any(status == UNDECIDED)
-
-    def body(carry):
-        status, rounds = carry
-        und = status == UNDECIDED            # UNDECIDED ⊆ eligible
-        nmin = nbr_min(und)
-        winners = und & (ranks < nmin)
-        wmin = nbr_min(winners)
-        hit = und & (~winners) & (wmin < INF_RANK)
-        status = jnp.where(winners, IN_MIS, status)
-        status = jnp.where(hit, REMOVED, status)
-        # Per-entry done mask: finished entries stop accumulating rounds.
-        rounds = rounds + jnp.any(und, axis=1).astype(jnp.int32)
-        return status, rounds
-
-    status0 = jnp.where(elig, UNDECIDED, REMOVED).astype(jnp.int32)
-    status, rounds = jax.lax.while_loop(
-        cond, body, (status0, jnp.zeros((B,), jnp.int32)))
-
-    # PIVOT capture pass: min-rank MIS neighbour, one batched convergecast.
-    in_mis = status == IN_MIS
-    wmin = nbr_min(in_mis)
-    arange_r = jnp.arange(R, dtype=jnp.int32)
-    rank_to_v = jax.vmap(
-        lambda rk: jnp.zeros((R + 1,), jnp.int32).at[
-            jnp.clip(rk, 0, R)].set(arange_r)
-    )(ranks)
-    piv = jnp.take_along_axis(rank_to_v, jnp.minimum(wmin, R), axis=1)
-    own = jnp.broadcast_to(arange_r[None, :], (B, R))
-    labels = jnp.where(in_mis, own,
-                       jnp.where(wmin < INF_RANK, piv, own))
-    labels = jnp.where(elig, labels, own)
-
-    # Disagreement-cost pass. Every kept (eligible-induced) undirected edge
-    # appears twice in the ELL, so the same-label neighbour count sums to
-    # 2·intra_pos; cap-dropped edges are always cut (their ineligible
-    # endpoint is a singleton) so m_edges accounts for them exactly:
-    #   cost = (m − intra_pos) + (intra_pairs − intra_pos).
-    labels_p = jnp.concatenate(
-        [labels, jnp.full((B, 1), -1, jnp.int32)], axis=1)
-    if use_kernel:
-        from repro.kernels import ops as _kops
-
-        if la_rows is not None:
-            agree = _kops.label_agree_ell_batch(ell, labels_p,
-                                                block_rows=la_rows)
-        else:
-            agree = _kops.label_agree_ell_batch(ell, labels_p)
-        intra_pos2 = jnp.sum(agree, axis=1)
-    else:
-        nbr_lab = _gather_rows(labels_p, ell)
-        intra_pos2 = jnp.sum(
-            (nbr_lab == labels[:, :, None]).astype(jnp.int32), axis=(1, 2))
-    sizes = jax.vmap(
-        lambda lab: jnp.zeros((R,), jnp.int32).at[lab].add(1))(labels)
-    intra_pairs = jnp.sum(sizes * (sizes - 1) // 2, axis=1)
-    costs = m_edges - intra_pos2 + intra_pairs
-
-    # Best-of-k selection: first minimum wins (jnp.argmin tie-break), the
-    # same rule as the host loop's strict `<` — only winners cross to host.
-    G = B // k
-    cost_g = costs.reshape(G, k)
-    picked = jnp.argmin(cost_g, axis=1).astype(jnp.int32)
-    labels_win = jnp.take_along_axis(
-        labels.reshape(G, k, R), picked[:, None, None], axis=1)[:, 0]
-    costs_win = jnp.take_along_axis(cost_g, picked[:, None], axis=1)[:, 0]
-    rounds_win = jnp.take_along_axis(
-        rounds.reshape(G, k), picked[:, None], axis=1)[:, 0]
-    return labels_win, costs_win, picked, rounds_win
+    return bucket_impl(ell, ranks_p, elig_p, m_edges, k=k,
+                       use_kernel=use_kernel, block_rows=block_rows,
+                       program="pivot", objective="disagree")
 
 
 # ---------------------------------------------------------------------------
@@ -218,15 +119,24 @@ def _mesh_cache_key(mesh: Optional[Mesh]):
 
 def _program_key(shape, k: int, use_kernel: bool, donate: bool,
                  mesh: Optional[Mesh],
-                 block_rows: Optional[Tuple[int, int]] = None) -> tuple:
+                 block_rows: Optional[Tuple[int, int]] = None,
+                 program: str = "pivot",
+                 objective: str = "disagree") -> tuple:
     """The cache key for one compiled bucket program — single definition so
     :func:`run_bucket_program` and the :func:`program_cache_contains` probe
     can never disagree about identity. ``block_rows`` is the *resolved*
     tuned kernel block pair (None on the jnp path and for untuned
     buckets), so a tuning-cache update yields a new program at the new
-    shape instead of mutating a compiled one."""
-    return (tuple(int(s) for s in shape), k, use_kernel, donate,
+    shape instead of mutating a compiled one. ``program`` is the method's
+    *program family* (``method_spec(m).program``, so ``'pivot'`` and
+    ``'pivot_raw'`` share compiled programs); the default pivot × disagree
+    combination keeps the pre-registry 6-tuple key verbatim, so a warmed
+    resident cache never fragments across the refactor."""
+    base = (tuple(int(s) for s in shape), k, use_kernel, donate,
             _mesh_cache_key(mesh), block_rows)
+    if program == "pivot" and objective == "disagree":
+        return base
+    return base + (program, objective)
 
 
 def _resolve_block_rows(shape, use_kernel: bool,
@@ -255,9 +165,12 @@ def _key_bucket(key: tuple) -> Tuple[int, int]:
 
 def _build_program(k: int, use_kernel: bool, donate: bool,
                    mesh: Optional[Mesh],
-                   block_rows: Optional[Tuple[int, int]] = None) -> Callable:
-    impl = partial(_batch_pivot_cost_impl, k=k, use_kernel=use_kernel,
-                   block_rows=block_rows)
+                   block_rows: Optional[Tuple[int, int]] = None,
+                   program: str = "pivot",
+                   objective: str = "disagree") -> Callable:
+    impl = partial(bucket_impl, k=k, use_kernel=use_kernel,
+                   block_rows=block_rows, program=program,
+                   objective=objective)
     if mesh is not None:
         axis = mesh.axis_names[0]
         spec = P(axis)
@@ -318,19 +231,23 @@ def set_program_cache_capacity(capacity: int) -> int:
 def program_cache_contains(shape, k: int, use_kernel: bool = False,
                            donate: bool = False,
                            mesh: Optional[Mesh] = None,
-                           block_rows=None) -> bool:
+                           block_rows=None,
+                           method: str = "pivot",
+                           objective: str = "disagree") -> bool:
     """Non-mutating probe: is this exact bucket program compiled?
 
     Unlike a real run this never touches the LRU order, so the serving
     cost model can price the compile a candidate (coalesced) flush shape
     would pay without distorting the recency the eviction decision reads.
     ``block_rows`` resolves exactly as :func:`run_bucket_program` does
-    (explicit pair > tuning-cache winners > None), so probe and run can
-    never disagree about which program a flush would use.
+    (explicit pair > tuning-cache winners > None), and ``method``
+    resolves through the registry to its program family, so probe and run
+    can never disagree about which program a flush would use.
     """
     resolved = _resolve_block_rows(shape, use_kernel, block_rows)
-    return _program_key(shape, k, use_kernel, donate,
-                        mesh, resolved) in _program_cache
+    return _program_key(shape, k, use_kernel, donate, mesh, resolved,
+                        program=method_spec(method).program,
+                        objective=objective) in _program_cache
 
 
 def program_cache_touch(bucket: Tuple[int, int]) -> int:
@@ -412,8 +329,10 @@ def consume_compile_wall() -> Optional[float]:
 
 def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
                        use_kernel: bool = False, donate: bool = False,
-                       mesh: Optional[Mesh] = None, block_rows=None):
-    """Invoke the fused bucket program through the bounded program cache.
+                       mesh: Optional[Mesh] = None, block_rows=None,
+                       method: str = "pivot",
+                       objective: str = "disagree"):
+    """Invoke one fused bucket program through the bounded program cache.
 
     The single entry point for every executor and the serving-layer warmup,
     so the donation policy and its warning handling live in one place: the
@@ -421,6 +340,11 @@ def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
     entry-shaped inputs into them on every backend — donation still
     releases the inputs eagerly instead of holding two generations live,
     and the "not usable" warning is expected, not actionable.
+
+    ``method`` / ``objective`` select the registered rounds body and cost
+    pass (:mod:`repro.core.programs`); the method resolves to its program
+    family before keying the cache, so family-sharing methods reuse one
+    compiled program per shape.
 
     ``block_rows`` picks the kernel row tiles baked into the program: an
     explicit ``(neighbor_min, label_agree)`` pair, or (default) the tuning
@@ -441,6 +365,8 @@ def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
     """
     global _last_compile_wall
     _last_compile_wall = None
+    program = method_spec(method).program
+    objective_spec(objective)            # fail fast on unknown objectives
     if use_kernel:
         # First import must happen OUTSIDE any trace: the kernels modules
         # create module-level jnp constants, and a first import from inside
@@ -450,13 +376,15 @@ def run_bucket_program(ell, ranks_p, elig_p, m_edges, k: int,
 
     ell = jnp.asarray(ell)
     resolved = _resolve_block_rows(ell.shape, use_kernel, block_rows)
-    key = _program_key(ell.shape, k, use_kernel, donate, mesh, resolved)
+    key = _program_key(ell.shape, k, use_kernel, donate, mesh, resolved,
+                       program=program, objective=objective)
     fn = _program_cache.get(key)
     fresh = fn is None
     if fresh:
         global _program_cache_compiles
         _program_cache_compiles += 1
-        fn = _build_program(k, use_kernel, donate, mesh, resolved)
+        fn = _build_program(k, use_kernel, donate, mesh, resolved,
+                            program=program, objective=objective)
         _program_cache[key] = fn
         _evict_to_capacity()
     else:
@@ -511,14 +439,16 @@ class InFlightBucket:
 
     __slots__ = ("payload", "_outputs", "_fetched", "_lease",
                  "shape", "assemble_seconds", "submitted_at",
-                 "wall_seconds", "inflight_at_submit", "compile_seconds")
+                 "wall_seconds", "inflight_at_submit", "compile_seconds",
+                 "method", "objective")
 
     def __init__(self, outputs, payload: Any = None, lease=None,
                  shape: Optional[Tuple[int, ...]] = None,
                  assemble_seconds: float = 0.0,
                  submitted_at: Optional[float] = None,
                  inflight_at_submit: int = 1,
-                 compile_seconds: Optional[float] = None):
+                 compile_seconds: Optional[float] = None,
+                 method: str = "pivot", objective: str = "disagree"):
         self._outputs = outputs
         self._fetched: Optional[Tuple[np.ndarray, ...]] = None
         self.payload = payload
@@ -527,6 +457,10 @@ class InFlightBucket:
         self.assemble_seconds = assemble_seconds
         self.submitted_at = submitted_at
         self.wall_seconds: Optional[float] = None
+        # Which registered program produced this flush — the serving
+        # harvest keys its per-bucket telemetry by (method, R, W).
+        self.method = method
+        self.objective = objective
         # In-flight depth counting this flush — wall time includes queueing
         # behind the depth−1 earlier flushes, so telemetry divides by this
         # to estimate per-flush service time.
@@ -596,7 +530,9 @@ class BucketExecutor(Protocol):
                use_kernel: bool = False, donate: bool = False,
                payload: Any = None, lease=None,
                track: bool = True,
-               assemble_seconds: float = 0.0) -> InFlightBucket:
+               assemble_seconds: float = 0.0,
+               method: str = "pivot",
+               objective: str = "disagree") -> InFlightBucket:
         """Dispatch one packed bucket; returns its in-flight handle.
 
         ``track=True`` (serving layers) enqueues the handle for delivery
@@ -604,7 +540,8 @@ class BucketExecutor(Protocol):
         that keep their own handle list and harvest via ``result()``)
         leaves queue bookkeeping to the submitter. ``assemble_seconds`` is
         the host bucket-assembly time the submitter measured; it is
-        carried on the handle for latency telemetry.
+        carried on the handle for latency telemetry. ``method`` /
+        ``objective`` select the registered bucket program.
         """
         ...
 
@@ -638,18 +575,22 @@ class _QueueExecutor:
                use_kernel: bool = False, donate: bool = False,
                payload: Any = None, lease=None,
                track: bool = True,
-               assemble_seconds: float = 0.0) -> InFlightBucket:
+               assemble_seconds: float = 0.0,
+               method: str = "pivot",
+               objective: str = "disagree") -> InFlightBucket:
         shape = tuple(int(s) for s in np.shape(ell))
         submitted_at = time.perf_counter()
         outputs = run_bucket_program(ell, ranks_p, elig_p, m_edges, k=k,
                                      use_kernel=use_kernel, donate=donate,
-                                     mesh=self.mesh)
+                                     mesh=self.mesh, method=method,
+                                     objective=objective)
         handle = InFlightBucket(outputs, payload=payload, lease=lease,
                                 shape=shape,
                                 assemble_seconds=assemble_seconds,
                                 submitted_at=submitted_at,
                                 inflight_at_submit=len(self._pending) + 1,
-                                compile_seconds=consume_compile_wall())
+                                compile_seconds=consume_compile_wall(),
+                                method=method, objective=objective)
         self._post_submit(handle)
         if track:
             self._pending.append(handle)
@@ -745,7 +686,7 @@ class ShardedExecutor(AsyncExecutor):
 
 def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
                     pool=None, use_kernel: bool = False, payload: Any = None,
-                    track: bool = True):
+                    track: bool = True, objective: str = "disagree"):
     """Pack one bucket and dispatch it through an executor.
 
     The single lease → ``pack_bucket`` → ``submit`` sequence shared by
@@ -761,10 +702,23 @@ def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
     packing or dispatch raises, the staging lease is released before
     re-raising — nothing was dispatched, so the buffers are genuinely
     free.
+
+    The clustering method rides on the plans themselves
+    (``GraphPlan.method``): one flush is one method by construction, so a
+    mixed-method plan list is rejected here — the last line of defence
+    behind the scheduler's cross-method steal refusal.
     """
     from .plan import estimate_pack_stats, pack_bucket
 
     R, W = plans[0].bucket
+    method = getattr(plans[0], "method", "pivot")
+    for p in plans[1:]:
+        if getattr(p, "method", "pivot") != method:
+            raise ValueError(
+                f"cannot pack methods {method!r} and "
+                f"{getattr(p, 'method', 'pivot')!r} into one bucket flush: "
+                "a bucket program runs exactly one registered method — "
+                "cross-method coalescing/stealing is refused")
     g_pad = executor.group_pad(len(plans))
     b_pad = g_pad * k
     lease = pool.acquire(b_pad, R, W) if pool is not None else None
@@ -778,7 +732,8 @@ def pack_and_submit(plans, group_keys, k: int, executor: "BucketExecutor",
             ell, ranks, elig, m_edges, k=k, use_kernel=use_kernel,
             donate=pool is not None and pool.donate,
             payload=payload, lease=lease, track=track,
-            assemble_seconds=assemble_seconds)
+            assemble_seconds=assemble_seconds,
+            method=method, objective=objective)
     except BaseException:
         if lease is not None:
             lease.release()

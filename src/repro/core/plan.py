@@ -93,35 +93,49 @@ class GraphPlan:
     # Prebuilt device rows (admission-time packing). None = the packer
     # derives rows at flush time from canonical_edges instead.
     rows: Optional["PackedRows"] = None
+    # Registered clustering method this plan was resolved for. Part of the
+    # serving-layer queue key: one flush runs one method's bucket program.
+    method: str = "pivot"
 
     @property
     def bucket(self) -> Tuple[int, int]:
+        """Shape bucket (R, W) — the packing/promotion identity."""
         return (self.R, self.W)
+
+    @property
+    def queue_key(self) -> Tuple[str, int, int]:
+        """Serving-layer bucket key (method, R, W): requests coalesce into
+        one flush only when they share both the packed shape and the
+        registered bucket program."""
+        return (self.method, self.R, self.W)
 
 
 def plan_graph(g: Graph, method: str = "pivot", eps: float = 2.0,
                lam: Optional[int] = None) -> GraphPlan:
     """Resolve the degree cap and the (R, W) shape bucket for one graph.
 
-    Mirrors the per-graph api exactly: ``lam`` defaults to the degeneracy
-    upper bound, eligibility is ``deg <= 8(1+ε)/ε·λ`` (Theorem 26), and for
-    ``method='pivot_raw'`` every vertex is eligible.
+    ``method`` must be registered in :mod:`repro.core.programs`; its spec
+    drives planning. Degree-capped methods mirror the per-graph api
+    exactly: ``lam`` defaults to the degeneracy upper bound, eligibility
+    is ``deg <= 8(1+ε)/ε·λ`` (Theorem 26). Uncapped methods
+    (``'pivot_raw'``) mark every vertex eligible.
 
-    Raises ``ValueError`` when the graph exceeds the largest supported
-    bucket (``MAX_ROWS`` vertices / eligible-induced degree ``MAX_WIDTH``).
+    Raises ``ValueError`` for an unregistered method, or when the graph
+    exceeds the largest supported bucket (``MAX_ROWS`` vertices /
+    eligible-induced degree ``MAX_WIDTH``).
     """
+    from .programs import method_spec
+
+    spec = method_spec(method)     # ValueError lists registered methods
     n = g.n
-    if method == "pivot":
+    if spec.degree_cap:
         if lam is None:
             _, lam = arboricity_bounds(g, exact=n <= 200_000)
         threshold = degree_threshold(lam, eps)
         eligible = ~(np.asarray(g.deg) > threshold)
-    elif method == "pivot_raw":
+    else:
         lam, threshold = None, None
         eligible = np.ones(n, dtype=bool)
-    else:
-        raise ValueError(f"batch engine supports 'pivot'/'pivot_raw', "
-                         f"got {method!r}")
 
     und = g.undirected_edges()
     if len(und):
@@ -154,7 +168,7 @@ def plan_graph(g: Graph, method: str = "pivot", eps: float = 2.0,
             "the per-graph engine")
     return GraphPlan(g=g, n=n, lam=lam, threshold=threshold,
                      eligible=eligible, wreq=wreq, R=R, W=W,
-                     canonical_edges=kept)
+                     canonical_edges=kept, method=method)
 
 
 def plan_canonical_edges(plan: GraphPlan) -> np.ndarray:
@@ -358,7 +372,8 @@ def _key_payload(key: jax.Array) -> bytes:
 
 def graph_fingerprint(plan: GraphPlan, key: jax.Array, *,
                       method: str = "pivot", num_samples: int = 1,
-                      eps: float = 2.0) -> GraphFingerprint:
+                      eps: float = 2.0,
+                      objective: str = "disagree") -> GraphFingerprint:
     """Canonical, collision-checked content hash of one planned request.
 
     Two requests with equal fingerprints produce bit-identical device
@@ -378,8 +393,12 @@ def graph_fingerprint(plan: GraphPlan, key: jax.Array, *,
       by ``fold_in`` from the base key, so key + k pins every permutation.
       Caching is keyed on the exact key precisely because the contract is
       bit-exactness *per key*, not statistical equivalence;
-    * ``method`` / ``eps`` / the resolved ``lam`` — they resolve the
-      degree cap (eligibility, threshold) and the result's info schema.
+    * ``method`` / ``objective`` / ``eps`` / the resolved ``lam`` — method
+      and objective select the registered bucket program (different
+      methods or objectives on identical inputs produce different labels
+      or different best-of-k winners, so their cache entries must never
+      alias), and ``eps``/``lam`` resolve the degree cap (eligibility,
+      threshold) and the result's info schema.
 
     Only post-selection winners (the argmin-of-k labels/cost/picked the
     engine returns) are cached against this fingerprint: intermediate
@@ -392,8 +411,9 @@ def graph_fingerprint(plan: GraphPlan, key: jax.Array, *,
     kept = plan_canonical_edges(plan)
     elig = np.ascontiguousarray(np.asarray(plan.eligible, dtype=bool))
     payload = b"".join([
-        b"cc-graph-fp1\0",
+        b"cc-graph-fp2\0",
         method.encode("utf-8") + b"\0",
+        objective.encode("utf-8") + b"\0",
         struct.pack("<d", float(eps)),
         struct.pack("<q", -1 if plan.lam is None else int(plan.lam)),
         struct.pack("<qqq", max(1, int(num_samples)), int(plan.n), int(g.m)),

@@ -3,10 +3,18 @@
 The paper's per-round budget is the frame: Theorem 26 bounds each
 PIVOT/MIS round by work proportional to the capped adjacency width
 (``W <= 12*lambda`` after the degree cap), so the engine's whole round cost
-lives in two batched ELL sweeps — ``neighbor_min_ell_batch`` inside the
-MIS while-loop and ``label_agree_ell_batch`` in the cost pass. The one
-free knob in those sweeps is ``block_rows``: the row-tile each Pallas grid
-step pipelines through VMEM. Whether a 64-row or a 512-row tile meets the
+lives in two batched ELL sweeps — ``neighbor_min_ell_batch`` and
+``label_agree_ell_batch``. Every bucket program the method/objective
+registry composes (:mod:`repro.core.programs`) is built from these same
+two kernels: the ``'pivot'`` MIS while-loop and the ``'precluster'``
+constant-round propagation both run ``neighbor_min``; the ``'disagree'``
+*and* ``'minmax'`` cost passes both reduce over ``label_agree`` counts.
+Tuning is therefore keyed by kernel × shape, never by method or
+objective — one warmup sweep's winners are baked into every registered
+program at that bucket shape, and registering a new method can never
+leave it running untuned blocks. The one free knob in those sweeps is
+``block_rows``: the row-tile each Pallas grid step pipelines through
+VMEM. Whether a 64-row or a 512-row tile meets the
 per-round budget "as fast as the hardware allows" depends on ``(R, W,
 batch tier, backend)`` — none of which is known at authoring time — so
 this module measures instead of assuming: sweep a small candidate set over
@@ -247,6 +255,14 @@ def sweep_bucket(ell, ranks_p, elig_p,
     candidate is compiled (first call, untimed) then timed best-of-
     ``repeats`` with ``block_until_ready``. Returns one sweep record per
     kernel; also appended to ``cache.sweep_log``.
+
+    One sweep serves every registered bucket program at this shape: the
+    ``neighbor_min`` timing covers both the MIS loop and the precluster
+    propagation (same kernel, same tensors, different trip counts), and
+    the ``label_agree`` timing covers both registered cost passes — the
+    ``'minmax'`` objective consumes the same per-vertex agreement counts
+    the ``'disagree'`` reduction does, so its hot kernel is tuned by this
+    sweep without a separate pass.
     """
     from repro.kernels import ops as _kops
 

@@ -1,10 +1,15 @@
 """Continuous batching for clustering-as-a-service — the *mechanics* half.
 
 Implements the :class:`repro.serve.engine.ClusterEngine` protocol for graph
-queries: incoming graphs are **admitted** into the shape bucket their padded
-``(R, W)`` size maps to, buckets **flush** through the injected
-:class:`~repro.core.executor.BucketExecutor`, and flushed requests
-**retire** with their results attached. *When* a bucket flushes, at what
+queries: incoming graphs are **admitted** into the ``(method, R, W)`` queue
+their registered bucket program and padded shape map to, buckets **flush**
+through the injected :class:`~repro.core.executor.BucketExecutor`, and
+flushed requests **retire** with their results attached. One engine serves
+mixed-method traffic: a request may carry its own ``method`` (defaulting to
+the engine's), and because a bucket program runs exactly one registered
+method per flush, queues coalesce only within a method — policies never
+see, and must never propose, a cross-method steal (``_execute`` refuses one
+with a ``ValueError`` if a custom policy tries). *When* a bucket flushes, at what
 sub-batch size, whether an admission is refused, and whether a flush steals
 work from a starving neighbour bucket are not decided here: every decision
 is delegated to the injected :class:`~repro.serve.scheduler.SchedulerPolicy`
@@ -124,6 +129,7 @@ from repro.core.graph import Graph
 from repro.core.plan import (GraphFingerprint, GraphPlan,
                              build_packed_rows, graph_fingerprint,
                              promote_plan, result_for_plan)
+from repro.core.programs import method_spec, objective_spec
 from repro.util import next_pow2
 
 from .engine import AdmissionRejected, EngineStats
@@ -137,6 +143,7 @@ class ClusterRequest:
     graph: Graph
     key: jax.Array
     lam: Optional[int] = None
+    method: Optional[str] = None    # None = the engine's default method
     result: Optional[ClusterResult] = None
     done: bool = False
     admitted_at: Optional[float] = None     # engine clock time of admission
@@ -157,7 +164,7 @@ class ClusterStats(EngineStats):
     clustered: int = 0
     padded_slots: int = 0        # empty device entries, from the packer
     pad_vertex_waste: int = 0    # Σ (R − n) over clustered graphs
-    buckets_seen: int = 0        # distinct (R, W) buckets admitted
+    buckets_seen: int = 0        # distinct (method, R, W) queues admitted
     rejected: int = 0            # admissions refused by backpressure
     in_flight_peak: int = 0      # max concurrent in-flight flushes seen
     cache_misses: int = 0        # admissions that went the cold path
@@ -197,6 +204,14 @@ class ClusterBatcher:
         nothing else.
       num_samples: best-of-k PIVOT per request (``< 1`` is coerced to 1;
         the engine itself rejects invalid values).
+      method: the engine's default bucket program (any method registered
+        in :mod:`repro.core.programs`); a request carrying its own
+        ``method`` overrides it per-admission — one engine serves mixed
+        ``'pivot'``/``'precluster'`` traffic, with queues, result-cache
+        fingerprints and steal compatibility all keyed per method.
+      objective: the registered cost pass scoring samples before
+        best-of-k selection (``'disagree'`` default, ``'minmax'``);
+        engine-wide, carried into every fingerprint and flush.
       pool: buffer pool shared by all flushes (created if omitted).
       executor: bucket executor name (``'sync'``/``'async'``/``'sharded'``)
         or instance — see the module docstring. Default ``'sync'``.
@@ -229,6 +244,7 @@ class ClusterBatcher:
 
     def __init__(self, max_batch: int = 64, method: str = "pivot",
                  eps: float = 2.0, num_samples: int = 1,
+                 objective: str = "disagree",
                  use_kernel: bool = False,
                  max_wait: Optional[float] = None,
                  clock=None,
@@ -247,6 +263,9 @@ class ClusterBatcher:
                 f"max_in_flight must be >= 1, got {max_in_flight}")
         self.max_batch = max_batch
         self.method = method
+        method_spec(method)          # fail fast, listing registered methods
+        objective_spec(objective)
+        self.objective = objective
         self.eps = eps
         self.num_samples = max(1, num_samples)
         self.use_kernel = use_kernel
@@ -265,9 +284,13 @@ class ClusterBatcher:
         bind = getattr(self.policy, "bind_engine", None)
         if bind is not None:
             bind(executor=self.executor, num_samples=self.num_samples,
-                 use_kernel=self.use_kernel, donate=self.pool.donate)
+                 use_kernel=self.use_kernel, donate=self.pool.donate,
+                 objective=self.objective)
         self.result_cache = make_result_cache(result_cache)
-        self.buckets: Dict[Tuple[int, int], List[ClusterRequest]] = {}
+        # Queues keyed by GraphPlan.queue_key = (method, R, W): requests
+        # coalesce only when they share both the padded shape and the
+        # bucket program that will run them.
+        self.buckets: Dict[Tuple[str, int, int], List[ClusterRequest]] = {}
         self._bucket_keys_seen: set = set()
         self._retired: Deque[ClusterRequest] = deque()
         self._in_flight_reqs = 0
@@ -315,15 +338,16 @@ class ClusterBatcher:
         if req.plan is None:
             # Resolved once; a retry after AdmissionRejected (and the
             # flush itself) reuses the plan verbatim.
-            req.plan = plan_graph(req.graph, method=self.method,
-                                  eps=self.eps, lam=req.lam)
+            req.plan = self._plan_for(req.graph, lam=req.lam,
+                                      method=req.method)
             req.lam = req.plan.lam
         plan = req.plan
         if self.result_cache is not None:
             if req.fingerprint is None:
                 req.fingerprint = graph_fingerprint(
-                    plan, req.key, method=self.method,
-                    num_samples=self.num_samples, eps=self.eps)
+                    plan, req.key, method=plan.method,
+                    num_samples=self.num_samples, eps=self.eps,
+                    objective=self.objective)
             cached = self.result_cache.get(req.fingerprint)
             if cached is not None:
                 req.admitted_at = now
@@ -358,15 +382,15 @@ class ClusterBatcher:
             plan.rows = build_packed_rows(
                 plan, sample_keys(req.key, self.num_samples))
             self.stats.latency.record_build(
-                plan.bucket, time.perf_counter() - t_build)
-        self.buckets.setdefault(plan.bucket, []).append(req)
+                plan.queue_key, time.perf_counter() - t_build)
+        self.buckets.setdefault(plan.queue_key, []).append(req)
         if req.fingerprint is not None:
             self._single_flight[req.fingerprint.digest] = req
             # Counted here (not at the probe) so a rejected-then-retried
             # admission registers one miss, not one per retry.
             self.stats.cache_misses += 1
         self.stats.submitted += 1
-        self._bucket_keys_seen.add(plan.bucket)
+        self._bucket_keys_seen.add(plan.queue_key)
         self.stats.buckets_seen = len(self._bucket_keys_seen)
         self._run_policy(now)
         return self.retire()
@@ -496,7 +520,9 @@ class ClusterBatcher:
         k = self.num_samples
         by_bucket: Dict[Tuple[int, int], List[GraphPlan]] = {}
         for g in graphs:
-            plan = plan_graph(g, method=self.method, eps=self.eps)
+            # Same resolution helper as admission — warmup can never plan
+            # a graph differently from the admission that will follow it.
+            plan = self._plan_for(g)
             by_bucket.setdefault(plan.bucket, []).append(plan)
         for bucket, plans in by_bucket.items():
             R, W = bucket
@@ -516,7 +542,8 @@ class ClusterBatcher:
                 m = jnp.zeros((b,), dtype=jnp.int32)
                 jax.block_until_ready(run_bucket_program(
                     ell, ranks, elig, m, k=k, use_kernel=self.use_kernel,
-                    donate=self.pool.donate, mesh=self.executor.mesh))
+                    donate=self.pool.donate, mesh=self.executor.mesh,
+                    method=self.method, objective=self.objective))
         if autotune:
             from repro.kernels.autotune import tuning_info
 
@@ -573,6 +600,14 @@ class ClusterBatcher:
 
     # -- Internals ---------------------------------------------------------
 
+    def _plan_for(self, graph: Graph, lam: Optional[int] = None,
+                  method: Optional[str] = None) -> GraphPlan:
+        """The engine's single ``plan_graph`` call site — admission and
+        warmup both resolve method/eps/lam through here, so the two can
+        never diverge. ``method=None`` means the engine default."""
+        return plan_graph(graph, method=method if method is not None
+                          else self.method, eps=self.eps, lam=lam)
+
     def _telemetry(self) -> FlushTelemetry:
         """The policies' stats surface, with ``in_flight`` refreshed — the
         single place that syncs it, so no policy call sees a stale count."""
@@ -607,7 +642,7 @@ class ClusterBatcher:
         if first_err is not None:
             raise first_err
 
-    def _take(self, bucket: Tuple[int, int],
+    def _take(self, bucket: Tuple[str, int, int],
               count: int) -> List[ClusterRequest]:
         """Pop up to ``count`` oldest requests from one bucket queue."""
         q = self.buckets.get(bucket)
@@ -624,9 +659,9 @@ class ClusterBatcher:
         """Put popped requests back at the *front* of their own bucket
         queues (each request's native plan bucket), preserving age order —
         stolen requests return to the queue they were stolen from."""
-        by_bucket: Dict[Tuple[int, int], List[ClusterRequest]] = {}
+        by_bucket: Dict[Tuple[str, int, int], List[ClusterRequest]] = {}
         for r in reqs:
-            by_bucket.setdefault(r.plan.bucket, []).append(r)
+            by_bucket.setdefault(r.plan.queue_key, []).append(r)
         for bucket, rs in by_bucket.items():
             self.buckets[bucket] = rs + self.buckets.get(bucket, [])
 
@@ -649,7 +684,19 @@ class ClusterBatcher:
         if not all_reqs:
             return None
         k = self.num_samples
-        R, W = decision.bucket
+        method, R, W = decision.bucket
+        bad = next((r for r in all_reqs if r.plan.method != method), None)
+        if bad is not None:
+            # The built-in policies never propose this (their steal filters
+            # require queue_key method equality); a custom policy that does
+            # is refused here with the requests safely requeued — a bucket
+            # program runs exactly one registered method per flush.
+            self._requeue(all_reqs)
+            raise ValueError(
+                f"flush decision for method {method!r} names a "
+                f"{bad.plan.method!r} request: a bucket program runs "
+                "exactly one registered method — cross-method "
+                "coalescing/stealing is refused")
         # Promotion is a no-op for native requests; for stolen ones it
         # re-targets the plan at the flush's larger shape (bit-exact),
         # relaying any prebuilt rows via pad-copies. Prebuilt plans drew
@@ -661,7 +708,8 @@ class ClusterBatcher:
         try:
             _, pack = pack_and_submit(
                 plans, bkeys, k, self.executor, pool=self.pool,
-                use_kernel=self.use_kernel, payload=all_reqs)
+                use_kernel=self.use_kernel, payload=all_reqs,
+                objective=self.objective)
         except BaseException:
             # Nothing was dispatched (the helper released the staging
             # lease): requeue the popped requests so none are lost, then
@@ -686,7 +734,8 @@ class ClusterBatcher:
                  cost: int, picked: int, rounds: int) -> None:
         """Attach one result (device row or cache entry) and retire it."""
         req.result = result_for_plan(req.plan, labels_row, cost, picked,
-                                     rounds, self.num_samples, self.method)
+                                     rounds, self.num_samples,
+                                     req.plan.method)
         req.done = True
         self.stats.retired += 1
         self._retired.append(req)
@@ -747,7 +796,7 @@ class ClusterBatcher:
                             cost, pick, depth)
             self._in_flight_reqs -= len(reqs)
             if handle.shape is not None and handle.wall_seconds is not None:
-                bucket = (handle.shape[1], handle.shape[2])
+                bucket = (handle.method, handle.shape[1], handle.shape[2])
                 self.stats.latency.record(bucket, handle.wall_seconds,
                                           handle.assemble_seconds,
                                           depth=handle.inflight_at_submit,

@@ -53,7 +53,11 @@ from typing import Callable, Optional, Sequence, Tuple
 
 from repro.util import next_pow2
 
-BucketKey = Tuple[int, int]
+# Queue identity: (method, R, W), matching the scheduler's BucketKey. The
+# pricing formulas only use the trailing shape pair (`bucket[-2:]`) plus
+# the method prefix for the program-cache probe, so legacy bare (R, W)
+# keys are tolerated (the prefix defaults to the 'pivot' program family).
+BucketKey = Tuple[str, int, int]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,20 +131,26 @@ class FlushCostModel:
         self._use_kernel = False
         self._donate = False
         self._mesh = None
+        self._objective = "disagree"
         self._bound = False
 
     def bind_engine(self, *, executor=None, num_samples: int = 1,
-                    use_kernel: bool = False, donate: bool = False) -> None:
+                    use_kernel: bool = False, donate: bool = False,
+                    objective: str = "disagree") -> None:
         """Learn the engine's execution profile (group padding rule and the
-        compiled-program signature) so pad and compile pricing match what
-        the flush will really run. Called by the batcher at construction;
-        an unbound model still prices padding with plain pow2 rules."""
+        compiled-program signature — including the engine's ``objective``,
+        which is part of the program key) so pad and compile pricing match
+        what the flush will really run. The *method* half of the signature
+        is not bound: it rides in each bucket key, so one model prices
+        mixed-method traffic. Called by the batcher at construction; an
+        unbound model still prices padding with plain pow2 rules."""
         if executor is not None:
             self._group_pad = executor.group_pad
             self._mesh = getattr(executor, "mesh", None)
         self._k = max(1, int(num_samples))
         self._use_kernel = bool(use_kernel)
         self._donate = bool(donate)
+        self._objective = objective
         self._bound = True
 
     # -- pricing inputs ---------------------------------------------------
@@ -178,10 +188,13 @@ class FlushCostModel:
             return 0.0
         from repro.core.executor import program_cache_contains
 
-        R, W = bucket
+        *prefix, R, W = bucket
+        method = prefix[0] if prefix else "pivot"
         if program_cache_contains((b1, R, W), self._k,
                                   use_kernel=self._use_kernel,
-                                  donate=self._donate, mesh=self._mesh):
+                                  donate=self._donate, mesh=self._mesh,
+                                  method=method,
+                                  objective=self._objective):
             return 0.0
         if telemetry is not None:
             learned = telemetry.bucket_ewma_compile(bucket)
@@ -220,7 +233,7 @@ class FlushCostModel:
         """
         if not candidates:
             return _ABSTAIN
-        R, W = bucket
+        R, W = bucket[-2:]
         k = self._k
         g0 = self._group_pad(max(1, count))
         g1 = self._group_pad(count + len(candidates))
@@ -229,10 +242,10 @@ class FlushCostModel:
 
         benefit = 0.0
         vertex_rows = 0
-        for (r_src, _), age in candidates:
+        for src, age in candidates:
             benefit += max(0.0, max_wait - age) if max_wait is not None \
                 else max(0.0, age)
-            vertex_rows += max(0, R - r_src)
+            vertex_rows += max(0, R - src[-2])
         pad_entries = (b1 - b0) - len(candidates) * k
 
         if service is None:
@@ -247,7 +260,7 @@ class FlushCostModel:
         # A stolen entry's rows n..R are dead weight relative to running it
         # at its native R_src; charge the promoted fraction of an entry.
         vertex_cost = sum(
-            k * max(0, R - r_src) / R for (r_src, _), _ in candidates
+            k * max(0, R - src[-2]) / R for src, _ in candidates
         ) * per_entry
         compile_cost = self.compile_charge(bucket, b1, telemetry) \
             if b1 > b0 else 0.0
@@ -306,7 +319,13 @@ class ShapeHeat:
 
     def on_retire(self, bucket: BucketKey) -> None:
         """Account one retired flush of ``bucket`` shape and refresh the
-        cache hints (touch always; re-derive the pinned hot set)."""
+        cache hints (touch always; re-derive the pinned hot set).
+
+        Heat is tracked per ``(R, W)`` *shape*, the granularity the
+        program cache pins at: a ``(method, R, W)`` queue key is reduced
+        to its shape part, so a shape two methods keep hot accumulates
+        their combined heat (both methods' programs share the pin)."""
+        bucket = (int(bucket[-2]), int(bucket[-1]))
         if len(self._events) == self._events.maxlen:
             old = self._events[0]
             self._counts[old] -= 1

@@ -30,7 +30,8 @@ every *decision* to a :class:`SchedulerPolicy`:
   up front.
 * :class:`CoalescingPolicy` — work-stealing across bucket queues: when a
   bucket flushes, requests starving in a *compatible smaller* ``(R', W')``
-  bucket (``R' ≤ R, W' ≤ W``) are promoted into the flush via
+  bucket (``R' ≤ R, W' ≤ W``, same bucket-program method — a flush runs
+  exactly one registered method) are promoted into the flush via
   :func:`repro.core.plan.promote_plan`, so no queue waits unboundedly
   behind a hot one. MPC analogue: migrating a straggler machine's items
   into a busier machine's round — sound here because a graph that fits a
@@ -83,22 +84,30 @@ from typing import Dict, List, Optional, Protocol, Sequence, Tuple, \
 
 import numpy as np
 
-BucketKey = Tuple[int, int]
+# Queue identity: (method, R, W) — the registered bucket program that will
+# run the flush plus the padded ELL shape it packs into. (Telemetry and the
+# policies also tolerate legacy bare (R, W) keys — the method prefix is
+# whatever precedes the trailing shape pair — but the engine always keys by
+# the full GraphPlan.queue_key.)
+BucketKey = Tuple[str, int, int]
 
 
 @dataclasses.dataclass(frozen=True)
 class FlushDecision:
     """One flush the policy wants executed.
 
-    ``bucket`` is the ``(R, W)`` shape the flush packs into; ``count``
-    requests are taken (oldest first) from that bucket's own queue;
-    ``steal`` names extra ``(source_bucket, count)`` groups to promote into
-    the same flush (their plans are re-targeted at ``bucket`` via
+    ``bucket`` is the ``(method, R, W)`` queue the flush packs from (the
+    registered bucket program plus the padded shape); ``count`` requests
+    are taken (oldest first) from that bucket's own queue; ``steal`` names
+    extra ``(source_bucket, count)`` groups to promote into the same flush
+    (their plans are re-targeted at the decision's shape via
     :func:`repro.core.plan.promote_plan` — every source must satisfy
-    ``R' ≤ R and W' ≤ W``). The batcher pops stolen requests from the
-    *front* of each source queue, so a steal always names that queue's
-    oldest unconsumed requests. ``deadline`` marks the flush as forced by
-    a wait budget, for stats accounting only.
+    ``R' ≤ R and W' ≤ W`` **and run the same method**: a bucket program
+    runs exactly one registered method per flush, so the batcher refuses a
+    cross-method steal with ``ValueError``). The batcher pops stolen
+    requests from the *front* of each source queue, so a steal always
+    names that queue's oldest unconsumed requests. ``deadline`` marks the
+    flush as forced by a wait budget, for stats accounting only.
     """
 
     bucket: BucketKey
@@ -309,7 +318,8 @@ class FlushTelemetry:
     def summary(self) -> Dict[str, dict]:
         """Per-bucket-shape latency percentiles, JSON-ready (ms).
 
-        Keys are ``"RxW"`` strings; values carry flush counts, wall
+        Keys are ``"method:RxW"`` strings (bare ``"RxW"`` for legacy
+        2-tuple keys); values carry flush counts, wall
         p50/p99, assemble p50/p99 and the wall EWMA — the fields the
         benchmarks emit so scheduling quality is tracked across PRs.
         Since the admission-time packing split (PR 8) the pre-PR-8
@@ -325,7 +335,10 @@ class FlushTelemetry:
         lifetime.
         """
         out: Dict[str, dict] = {}
-        for (R, W), rec in sorted(self._per_bucket.items()):
+        for bucket, rec in sorted(self._per_bucket.items(),
+                                  key=lambda kv: tuple(map(str, kv[0]))):
+            *prefix, R, W = bucket
+            label = f"{prefix[0]}:{R}x{W}" if prefix else f"{R}x{W}"
             wall = np.asarray(rec["wall"], dtype=np.float64)
             assemble = np.asarray(rec["assemble"], dtype=np.float64)
             entry = {
@@ -350,7 +363,7 @@ class FlushTelemetry:
             if rec.get("compiles"):
                 entry["compiles_total"] = rec["compiles"]
                 entry["compile_wall_ewma_ms"] = rec["ewma_compile"] * 1e3
-            out[f"{R}x{W}"] = entry
+            out[label] = entry
         return out
 
 
@@ -506,7 +519,10 @@ class CoalescingPolicy(DeadlinePolicy):
 
     Every flush decision (full or deadline) additionally *steals* requests
     waiting in compatible smaller buckets — ``(R', W')`` with ``R' ≤ R``
-    and ``W' ≤ W`` — whose oldest request has waited at least
+    and ``W' ≤ W``, **same method only** (a bucket program runs exactly
+    one registered method per flush, so cross-method queues are never
+    steal candidates no matter how starved; their own deadlines still
+    bound them) — whose oldest request has waited at least
     ``steal_wait`` (default: ``max_wait / 2`` when a deadline is set,
     otherwise 0 = steal whenever there is room). Stolen requests are
     promoted into the flushing ``(R, W)`` shape by the batcher
@@ -546,7 +562,7 @@ class CoalescingPolicy(DeadlinePolicy):
             consumed[d.bucket] = consumed.get(d.bucket, 0) + d.count
         out: List[FlushDecision] = []
         for d in base:
-            R, W = d.bucket
+            R, W = d.bucket[-2:]
             room = self.max_batch - d.count
             steals: List[Tuple[BucketKey, int]] = []
             if room > 0:
@@ -554,7 +570,14 @@ class CoalescingPolicy(DeadlinePolicy):
                 for b2, q2 in queues.items():
                     if b2 == d.bucket:
                         continue
-                    R2, W2 = b2
+                    if b2[:-2] != d.bucket[:-2]:
+                        # Cross-method: a bucket program runs exactly one
+                        # registered method, so a 'precluster' queue can
+                        # never be promoted into a 'pivot' flush (the
+                        # batcher would refuse the decision with a
+                        # ValueError). Its own deadline still bounds it.
+                        continue
+                    R2, W2 = b2[-2:]
                     if R2 > R or W2 > W:
                         continue        # would not fit the (R, W) budget
                     used = consumed.get(b2, 0)

@@ -327,10 +327,10 @@ def test_batcher_feeds_compile_walls_into_telemetry():
     done += eng.flush()
     assert done and done[0].result is not None
     tele = eng.stats.latency
-    bucket = plan_graph(g).bucket
+    bucket = plan_graph(g).queue_key     # telemetry keys are (method, R, W)
     assert tele.bucket_ewma_compile(bucket) is not None
     assert tele.ewma_compile is not None
-    rec = tele.summary()[f"{bucket[0]}x{bucket[1]}"]
+    rec = tele.summary()[f"{bucket[0]}:{bucket[1]}x{bucket[2]}"]
     assert rec["compiles_total"] >= 1
     assert rec["compile_wall_ewma_ms"] > 0
     # Compile-free wall is maintained and below the raw (compile-heavy)

@@ -64,6 +64,25 @@ def test_batch_64_graphs_bit_exact(method):
         _assert_matches(g, key, res, method=method)
 
 
+@pytest.mark.parametrize("method", ["pivot", "precluster"])
+def test_minmax_objective_matches_host_oracle(method):
+    """objective='minmax' scores the same labels with the worst-vertex
+    disagreement: the rounds body is untouched (labels identical to the
+    'disagree' run at num_samples=1) and every returned cost equals the
+    numpy host oracle. λ=1 inputs keep every vertex under the Theorem 26
+    cap, where the device pass and the full-graph oracle agree exactly."""
+    graphs = [_rand_graph(n, 1, seed=n) for n in (6, 9, 14, 20, 33)]
+    keys = [jax.random.PRNGKey(i) for i in range(len(graphs))]
+    res_d = correlation_cluster_batch(graphs, keys=keys, method=method)
+    res_m = correlation_cluster_batch(graphs, keys=keys, method=method,
+                                      objective="minmax")
+    for g, rd, rm in zip(graphs, res_d, res_m):
+        assert (rd.labels == rm.labels).all()
+        assert rm.cost == batch_mod._minmax_cost_host(g, rm.labels)
+        # Min-max is a per-vertex maximum: never above the total.
+        assert rm.cost <= rd.cost
+
+
 def test_batch_degree_cap_active_bit_exact():
     """Star hub exceeds 12λ: the cap must singleton it in the batch too."""
     g = build_graph(40, star(40))

@@ -111,6 +111,34 @@ def test_executor_full_and_deadline_flushes_bit_exact(executor, use_kernel):
     assert batcher.stats.deadline_flushes >= 1
 
 
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("executor", ["sync", "async", "sharded"])
+def test_precluster_executors_bit_exact(executor, use_kernel):
+    """Satellite 3 of PR 10: the 'precluster' bucket program — full and
+    deadline-partial flushes alike — is bit-identical to the per-graph
+    'precluster' engine under every executor × kernel path, exactly like
+    the pivot contract above."""
+    clock = VirtualClock()
+    batcher = ClusterBatcher(max_batch=4, max_wait=1.0, clock=clock,
+                             executor=executor, use_kernel=use_kernel,
+                             method="precluster", num_samples=2)
+    reqs = []
+    for i in range(6):
+        n = int(np.random.default_rng(40 + i).integers(5, 13))
+        req = ClusterRequest(uid=i, graph=_rand_graph(n, 2, seed=300 + i),
+                             key=jax.random.PRNGKey(i))
+        reqs.append(req)
+        batcher.admit(req)
+    clock.advance(2.0)
+    batcher.poll()
+    batcher.flush()
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert r.result.method == "precluster"
+        _assert_matches(r.graph, jax.random.PRNGKey(r.uid), r.result,
+                        method="precluster", num_samples=2)
+
+
 @pytest.mark.parametrize("executor", ["async", "sharded"])
 def test_batch_api_executor_param_bit_exact(executor):
     graphs = [_rand_graph(n, 2, seed=n) for n in (7, 9, 16, 33)]

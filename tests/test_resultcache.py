@@ -93,6 +93,65 @@ def test_fingerprint_sensitivity():
     assert len(digests) == len(variants), "variant fingerprints collided"
 
 
+def test_fingerprint_method_objective_matrix():
+    """Same graph + same PRNG key across every registered method ×
+    objective must produce pairwise-distinct digests — the result cache's
+    method/objective isolation rests entirely on this (PR 10)."""
+    g = _rand_graph(20, 2, seed=0)
+    key = jax.random.PRNGKey(0)
+    digests = {}
+    for method in ("pivot", "pivot_raw", "precluster"):
+        plan = plan_graph(g, method=method)
+        for objective in ("disagree", "minmax"):
+            fp = graph_fingerprint(plan, key, method=method,
+                                   objective=objective)
+            digests[(method, objective)] = fp.digest
+    assert len(set(digests.values())) == len(digests), (
+        "method/objective fingerprint matrix aliased: "
+        f"{sorted(digests)}")
+
+
+def test_result_cache_isolated_across_methods_and_objectives():
+    """Engine-level satellite 3: a 'pivot' winner in a shared cache must
+    never be served to a 'precluster' admission of the same (graph, key),
+    nor a 'disagree' winner to a 'minmax' engine — each is a cold miss
+    that re-flushes and retires its own method's bit-exact result."""
+    shared = ResultCache(capacity=64)
+    g = _rand_graph(14, 1, seed=3)
+    key = jax.random.PRNGKey(5)
+
+    a = ClusterBatcher(max_batch=1, result_cache=shared)
+    done = {r.uid: r for r in a.admit(ClusterRequest(uid=0, graph=g,
+                                                     key=key))}
+    done.update((r.uid, r) for r in a.flush())
+    assert shared.stats.insertions == 1
+
+    # Same engine, same graph+key, other method: must miss and re-flush.
+    done.update((r.uid, r)
+                for r in a.admit(ClusterRequest(uid=1, graph=g, key=key,
+                                                method="precluster")))
+    done.update((r.uid, r) for r in a.flush())
+    assert a.stats.cache_hits == 0 and a.stats.flushes == 2
+    assert done[1].result.method == "precluster"
+    _assert_matches(g, key, done[0].result)
+    _assert_matches(g, key, done[1].result, method="precluster")
+
+    # A minmax engine on the same shared cache: same content, other
+    # objective — also a miss; its inserted winner is a third entry.
+    b = ClusterBatcher(max_batch=1, result_cache=shared,
+                       objective="minmax")
+    out = b.admit(ClusterRequest(uid=2, graph=g, key=key))
+    out.extend(b.flush())
+    assert b.stats.cache_hits == 0 and b.stats.flushes == 1
+    assert shared.stats.insertions == 3
+
+    # Control: the isolation is per-key, not a broken cache — replaying
+    # the original (method, objective) is still a pure hit.
+    hit = a.admit(ClusterRequest(uid=3, graph=g, key=key))
+    assert len(hit) == 1 and a.stats.cache_hits == 1
+    assert (hit[0].result.labels == done[0].result.labels).all()
+
+
 def test_fingerprint_distinguishes_same_bucket_different_graphs():
     """Two graphs landing in the same (R, W) bucket must not alias."""
     a = build_graph(6, path(6))
@@ -243,7 +302,7 @@ def test_single_flight_subscriber_rides_primary_flush():
     batcher.admit(r_dup)
     # The duplicate subscribed: not queued, bucket depth stays 1, so the
     # full-bucket policy correctly did not flush a "full" 2-bucket.
-    bucket = r_primary.plan.bucket
+    bucket = r_primary.plan.queue_key
     assert [r.uid for r in batcher.buckets[bucket]] == [0]
     assert batcher.stats.subscribed == 1 and batcher.stats.flushes == 0
     assert batcher.pending() == 2
@@ -347,7 +406,7 @@ def test_subscribers_requeue_and_retry_on_poisoned_flush():
     with pytest.raises(RuntimeError, match="exploded"):
         batcher.flush()                          # poisoned fetch surfaces
     # Primary is back in its native bucket, subscriber still attached.
-    bucket = primary.plan.bucket
+    bucket = primary.plan.queue_key
     assert primary in batcher.buckets.get(bucket, [])
     assert dup in primary.subscribers and not dup.done
     assert batcher.pending() == 2                # other already harvested
@@ -368,7 +427,7 @@ def test_cache_disabled_means_no_fingerprints_no_coalescing():
     batcher.admit(r1)
     batcher.admit(r2)
     assert r1.fingerprint is None and r2.fingerprint is None
-    assert [r.uid for r in batcher.buckets[r1.plan.bucket]] == [0, 1]
+    assert [r.uid for r in batcher.buckets[r1.plan.queue_key]] == [0, 1]
     assert batcher.stats.subscribed == 0 and batcher.stats.cache_hits == 0
     assert batcher.stats.result_cache is None
     done = {r.uid: r for r in batcher.flush()}

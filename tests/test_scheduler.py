@@ -185,6 +185,93 @@ def test_coalescing_steal_capacity_and_starvation_order():
     assert d.steal == (((8, 4), 2), ((16, 8), 1))
 
 
+@pytest.mark.parametrize("policy_cls", [CoalescingPolicy,
+                                        CostAwareCoalescingPolicy])
+def test_coalescing_policies_never_steal_cross_method(policy_cls):
+    """Two methods sharing one ``(R, W)`` shape: an overdue ``'pivot'``
+    flush may steal only from ``'pivot'`` queues. The ``'precluster'``
+    queue is *older* and its shape fits, so a method-blind starvation
+    order would promote it first — both built-in coalescing policies must
+    skip it (its own deadline still bounds its wait)."""
+    pol = policy_cls(max_batch=6, max_wait=2.0, steal_wait=1.0)
+    qs = _queues({
+        ("pivot", 16, 8): [0.0, 0.1],     # overdue at now=3 → room for 4
+        ("pivot", 8, 4): [1.5, 1.6],      # same method → stealable
+        ("precluster", 8, 4): [1.3],      # oldest, shape fits: wrong method
+        ("precluster", 16, 8): [1.5],     # the flush's own shape, too
+    })
+    decisions = pol.select_flushes(qs, now=3.0, telemetry=FlushTelemetry())
+    (d,) = [d for d in decisions if d.bucket == ("pivot", 16, 8)]
+    assert d.deadline and d.count == 2
+    assert d.steal == ((("pivot", 8, 4), 2),)
+    for other in decisions:
+        for src, _ in other.steal:
+            assert src[:-2] == other.bucket[:-2], (
+                f"{pol.name} proposed a cross-method steal {src} -> "
+                f"{other.bucket}")
+
+
+def test_batcher_refuses_hand_built_cross_method_decision():
+    """A custom policy that does propose a cross-method steal is refused
+    by ``_execute`` with a clear ValueError, and the popped requests are
+    requeued — nothing is lost, and a subsequent clean flush still serves
+    both requests bit-exactly under their own methods."""
+    g = _rand_graph(12, 1, seed=7)
+    eng = ClusterBatcher(max_batch=4)          # full-bucket: never auto-flush
+    eng.admit(ClusterRequest(uid=0, graph=g, key=jax.random.PRNGKey(0)))
+    eng.admit(ClusterRequest(uid=1, graph=g, key=jax.random.PRNGKey(1),
+                             method="precluster"))
+    pivot_key = next(b for b in eng.buckets if b[0] == "pivot")
+    pre_key = next(b for b in eng.buckets if b[0] == "precluster")
+    assert pivot_key[1:] == pre_key[1:]        # same (R, W), distinct queues
+    bad = FlushDecision(bucket=pivot_key, count=1,
+                        steal=((pre_key, 1),))
+    with pytest.raises(ValueError, match="cross-method"):
+        eng._execute(bad)
+    # Both requests were requeued into their own queues...
+    assert len(eng.buckets[pivot_key]) == 1
+    assert len(eng.buckets[pre_key]) == 1
+    # ...and a clean drain serves each under its own method, bit-exactly.
+    done = {r.uid: r for r in eng.flush_all()}
+    assert done[0].result.method == "pivot"
+    assert done[1].result.method == "precluster"
+    _assert_matches(g, jax.random.PRNGKey(0), done[0].result)
+    _assert_matches(g, jax.random.PRNGKey(1), done[1].result,
+                    method="precluster")
+    eng.close()
+
+
+@pytest.mark.parametrize("executor", ["sync", "async", "sharded"])
+def test_mixed_method_trace_cost_policy_bit_exact(executor):
+    """The PR 10 acceptance smoke: one engine, both registered methods in
+    one trace, cost policy active. Every result must be bit-identical to
+    the per-graph engine of its own method, and the flush telemetry must
+    show both methods flushing through their own queues."""
+    methods = ("pivot", "precluster")
+    reqs = [(uid, _rand_graph(6 + 3 * (uid % 5), 1 + uid % 2, seed=uid))
+            for uid in range(12)]
+    eng = ClusterBatcher(max_batch=4, max_wait=0.005, policy="cost",
+                         executor=executor)
+    done = {}
+    for uid, g in reqs:
+        for r in eng.admit(ClusterRequest(uid=uid, graph=g,
+                                          key=jax.random.PRNGKey(uid),
+                                          method=methods[uid % 2])):
+            done[r.uid] = r
+    for r in eng.flush_all():
+        done[r.uid] = r
+    assert len(done) == len(reqs)
+    for uid, g in reqs:
+        m = methods[uid % 2]
+        assert done[uid].result.method == m
+        _assert_matches(g, jax.random.PRNGKey(uid), done[uid].result,
+                        method=m)
+    flushed_methods = {key.split(":", 1)[0]
+                       for key in eng.stats.latency.summary()}
+    assert set(methods) <= flushed_methods
+    eng.close()
+
+
 def test_make_policy_resolution_and_validation():
     assert make_policy(None, max_batch=4).name == "full"
     assert make_policy(None, max_batch=4, max_wait=0.1).name == "deadline"
@@ -696,7 +783,7 @@ def test_harvest_error_does_not_drop_remaining_decisions():
     assert batcher.stats.flushes == 3
     # The failed flush's requests are back in their native bucket, oldest
     # first; nothing was lost.
-    assert [r.uid for r in batcher.buckets.get((8, 4), [])] == [0, 1]
+    assert [r.uid for r in batcher.buckets.get(("pivot", 8, 4), [])] == [0, 1]
     retired = batcher.flush()               # failing-then-succeeding retry
     done = {r.uid: r for r in retired}
     assert sorted(done) == [0, 1, 2, 3]
@@ -735,7 +822,7 @@ def test_flush_drains_remaining_buckets_past_dispatch_error():
     with pytest.raises(RuntimeError, match="submit boom"):
         batcher.flush()
     assert batcher.stats.flushes == 1               # (32,4) still drained
-    assert [r.uid for r in batcher.buckets.get((8, 4), [])] == [0]
+    assert [r.uid for r in batcher.buckets.get(("pivot", 8, 4), [])] == [0]
     done = {r.uid: r for r in batcher.flush()}      # retry succeeds
     assert sorted(done) == [0, 1]
     for uid, g in [(0, g_a), (1, g_b)]:
@@ -759,7 +846,7 @@ def test_poll_dispatch_error_does_not_drop_remaining_decisions():
     with pytest.raises(RuntimeError, match="submit boom"):
         batcher.poll()
     assert batcher.stats.flushes == 1       # the second decision ran
-    assert [r.uid for r in batcher.buckets.get((8, 4), [])] == [0]
+    assert [r.uid for r in batcher.buckets.get(("pivot", 8, 4), [])] == [0]
     done = {r.uid: r for r in batcher.flush()}
     assert sorted(done) == [0, 1]
     for uid, g in [(0, g_a), (1, g_b)]:
@@ -848,8 +935,8 @@ def test_flush_latency_telemetry_reaches_stats():
     assert tele.total_builds == 4
     assert tele.ewma_build is not None and tele.ewma_build >= 0.0
     summary = tele.summary()
-    assert list(summary) == ["8x4"]
-    rec = summary["8x4"]
+    assert list(summary) == ["pivot:8x4"]     # keys are method-qualified
+    rec = summary["pivot:8x4"]
     assert rec["flushes_total"] == 2
     assert rec["window_samples"] == 2
     for field in ("wall_p50_ms", "wall_p99_ms", "assemble_p50_ms",
